@@ -1,0 +1,56 @@
+"""Paper Table 2: cooperative scheduler ablation.
+
+Variants (DESIGN.md mapping):
+  fullwalk    <-> Full-Walk   (one lane per walk, no grouping)
+  grouped     <-> Coop-Global (per-step regrouping, metadata from "global")
+  tiled       <-> Coop        (regrouping + VMEM-staged metadata kernel)
+
+Reported: M-steps/s wall-clock (CPU, relative), plus the modeled per-step
+HBM bytes for fullwalk vs grouped — the structural metric that the launch
+count plays in the paper (DESIGN.md §9: launch counts are not a TPU
+quantity).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, make_bench_index, steps_per_sec, timeit
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core import scheduler as sched
+from repro.core.walk_engine import generate_walks
+
+DATASETS = {
+    "lowskew": dict(num_nodes=2048, num_edges=60000, skew=0.8),
+    "hubskew": dict(num_nodes=2048, num_edges=60000, skew=1.6),
+    "megahub": dict(num_nodes=256, num_edges=60000, skew=2.2),
+}
+
+
+def run(repeats: int = 3):
+    wcfg = WalkConfig(num_walks=4096, max_length=40, start_mode="nodes")
+    scfg = SamplerConfig(bias="exponential", mode="weight")
+    rows = []
+    for dname, kw in DATASETS.items():
+        g, idx = make_bench_index(**kw)
+        for path in ("fullwalk", "grouped", "tiled"):
+            cfg = SchedulerConfig(path=path, tile_walks=256, tile_edges=1024)
+            mean, std, res = timeit(
+                generate_walks, idx, jax.random.PRNGKey(0), wcfg, scfg, cfg,
+                repeats=repeats)
+            msps = steps_per_sec(res, mean)
+            # modeled bytes from dispatch stats
+            res2 = generate_walks(idx, jax.random.PRNGKey(0), wcfg, scfg,
+                                  cfg, collect_stats=True)
+            st = np.asarray(res2.stats)
+            b_full = st[:, sched.STAT_BYTES_FULLWALK].sum()
+            b_grp = st[:, sched.STAT_BYTES_GROUPED].sum()
+            emit(f"table2/{dname}/{path}", mean * 1e6,
+                 f"Msteps/s={msps:.2f};bytes_full={b_full:.3g};"
+                 f"bytes_grouped={b_grp:.3g};std_us={std*1e6:.0f}")
+            rows.append((dname, path, msps, b_full, b_grp))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

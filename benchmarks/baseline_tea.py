@@ -1,0 +1,51 @@
+"""Paper Table 5: comparison against a TEA/TEA+-style CPU engine
+(hybrid alias sampling), implemented in core/baselines.py.
+
+Configuration mirrors the paper: 1 walk per node, walk length 80,
+{exponential, linear} bias + temporal node2vec.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, make_bench_index, timeit
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core.baselines import TeaStyleSampler
+from repro.core.walk_engine import generate_walks
+
+
+def run(num_nodes=1024, num_edges=40000):
+    g, idx = make_bench_index(num_nodes=num_nodes, num_edges=num_edges)
+    L = 80
+    cases = [("exponential", 1.0, 1.0), ("linear", 1.0, 1.0),
+             ("node2vec", 0.5, 2.0)]
+    rows = []
+    for bias, p, q in cases:
+        b = "exponential" if bias == "node2vec" else bias
+        # --- TEA-style CPU baseline ---
+        tea = TeaStyleSampler(g.src, g.dst, g.ts, num_nodes, bias=b)
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        for v in range(num_nodes):
+            tea.walk(v, -1, L, rng, p=p, q=q)
+        t_tea = time.perf_counter() - t0
+
+        # --- Tempest-JAX (bulk mode for parity, paper §3.8) ---
+        wcfg = WalkConfig(num_walks=num_nodes, max_length=L,
+                          start_mode="all_nodes")
+        scfg = SamplerConfig(bias=b, mode="weight",
+                             node2vec_p=p, node2vec_q=q)
+        mean, _, _ = timeit(generate_walks, idx, jax.random.PRNGKey(0),
+                            wcfg, scfg, SchedulerConfig(), repeats=3)
+        speedup = t_tea / mean
+        emit(f"table5/{bias}", mean * 1e6,
+             f"tea_s={t_tea:.3f};tempest_s={mean:.3f};speedup={speedup:.1f}x")
+        rows.append((bias, t_tea, mean, speedup))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

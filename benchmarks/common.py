@@ -1,0 +1,56 @@
+"""Shared benchmark utilities. All timings are CPU wall-clock (relative
+claims only; TPU projections come from the roofline model — DESIGN.md §9)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    WalkConfig,
+    WindowConfig,
+)
+from repro.core.edge_store import store_from_arrays
+from repro.core.temporal_index import build_index
+from repro.data.synthetic import powerlaw_temporal_graph
+
+
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 1,
+           **kwargs) -> tuple:
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(jax.tree.leaves(out)[0]) if jax.tree.leaves(out) else None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        leaves = jax.tree.leaves(out)
+        if leaves:
+            jax.block_until_ready(leaves[0])
+        times.append(time.perf_counter() - t0)
+    return np.mean(times), np.std(times), out
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def make_bench_index(num_nodes=2048, num_edges=60000, skew=1.2, seed=0,
+                     edge_capacity=65536, ts_groups=None):
+    g = powerlaw_temporal_graph(num_nodes, num_edges, skew=skew, seed=seed,
+                                ts_groups=ts_groups)
+    store = store_from_arrays(g.src, g.dst, g.ts,
+                              edge_capacity=edge_capacity,
+                              node_capacity=num_nodes)
+    return g, build_index(store, num_nodes)
+
+
+def steps_per_sec(result, elapsed_s: float) -> float:
+    """M-steps/s from walk lengths (paper Table 2 metric)."""
+    hops = float(np.sum(np.asarray(result.lengths) - 1).clip(min=0))
+    return hops / elapsed_s / 1e6

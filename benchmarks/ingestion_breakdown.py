@@ -1,0 +1,77 @@
+"""Paper Table 4: per-batch ingestion time breakdown.
+
+Stages (TPU/CPU analog of the paper's NVTX ranges):
+  sort     — timestamp sort of the incoming batch + store merge sort
+  weight   — cumulative-weight prefix construction (the fused kernel path)
+  h2d      — host->device transfer of the raw batch
+  pipeline — everything else in the jitted ingest (offsets, eviction,
+             gathers) + dispatch overhead
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.edge_store import make_batch
+from repro.core.window import ingest, init_window
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.kernels.weight_prefix import weight_prefix
+
+
+def run(num_nodes=2048, num_edges=120_000, batches=12):
+    g = powerlaw_temporal_graph(num_nodes, num_edges, seed=3)
+    state = init_window(edge_capacity=131072, node_capacity=num_nodes,
+                        window=4000)
+    bcap = num_edges // batches + 64
+
+    t_sort = t_weight = t_h2d = t_total = 0.0
+    n = 0
+    for bs, bd, bt in chronological_batches(g, batches):
+        # h2d: batch padding + device_put
+        t0 = time.perf_counter()
+        batch = make_batch(bs, bd, bt, capacity=bcap)
+        jax.block_until_ready(batch.src)
+        t_h2d += time.perf_counter() - t0
+
+        # isolated sort stage (what the radix sorts cost standalone)
+        t0 = time.perf_counter()
+        s = jnp.sort(batch.ts)
+        jax.block_until_ready(s)
+        t_sort += time.perf_counter() - t0
+
+        # isolated weight stage on the current store
+        idx = state.index
+        nc = idx.node_capacity
+        dt = (idx.ns_ts - idx.node_tref[jnp.clip(idx.ns_src, 0, nc - 1)])
+        t0 = time.perf_counter()
+        p = weight_prefix(dt.astype(jnp.float32), idx.ns_src < nc,
+                          tile=1024)
+        jax.block_until_ready(p)
+        t_weight += time.perf_counter() - t0
+
+        # full pipeline
+        t0 = time.perf_counter()
+        state = ingest(state, batch, num_nodes)
+        jax.block_until_ready(state.index.ns_order)
+        t_total += time.perf_counter() - t0
+        n += 1
+
+    total_ms = 1e3 * (t_total + t_h2d + t_sort + t_weight) / n
+    pipeline = t_total - t_sort - t_weight
+    parts = {
+        "sort": t_sort, "weight": t_weight, "h2d": t_h2d,
+        "pipeline": max(pipeline, 0.0),
+    }
+    tot = sum(parts.values())
+    emit("table4/breakdown", 1e6 * tot / n,
+         ";".join(f"{k}={100*v/tot:.1f}%" for k, v in parts.items())
+         + f";total_ms={1e3*tot/n:.1f}")
+    return parts
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Fig. 11: memory usage.
+
+(a) bulk-mode scaling: engine device bytes vs edge count (linear);
+(b) streaming: bytes flat across batches (bounded by the window, exactly
+    constant here thanks to static shapes).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.edge_store import make_batch, store_from_arrays, store_nbytes
+from repro.core.temporal_index import build_index
+from repro.core.window import ingest, init_window
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+
+
+def index_nbytes(idx) -> int:
+    import jax
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(idx))
+
+
+def run():
+    # (a) bulk scaling
+    for E in (1 << 10, 1 << 14, 1 << 17, 1 << 19):
+        nn = max(256, E // 64)
+        g = powerlaw_temporal_graph(nn, E, seed=15)
+        store = store_from_arrays(g.src, g.dst, g.ts, edge_capacity=E,
+                                  node_capacity=nn)
+        idx = build_index(store, nn)
+        total = index_nbytes(idx)
+        emit(f"fig11a/E={E}", 0.0,
+             f"bytes={total};bytes_per_edge={total/E:.1f}")
+
+    # (b) streaming flatness
+    g = powerlaw_temporal_graph(1024, 100_000, seed=16)
+    st = init_window(edge_capacity=1 << 16, node_capacity=1024, window=2000)
+    sizes = []
+    for bs, bd, bt in chronological_batches(g, 20):
+        st = ingest(st, make_batch(bs, bd, bt, capacity=8192), 1024)
+        sizes.append(index_nbytes(st.index))
+    emit("fig11b/streaming", 0.0,
+         f"min={min(sizes)};max={max(sizes)};flat={min(sizes)==max(sizes)}")
+    return sizes
+
+
+if __name__ == "__main__":
+    run()

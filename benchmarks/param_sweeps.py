@@ -1,0 +1,65 @@
+"""Paper Figs. 8-9: tuning sweeps.
+
+Fig 8 analog: VMEM tile size (tile_edges x tile_walks) — the structural
+equivalent of the CUDA block dimension (DESIGN.md §2).
+Fig 9 analog: solo/group threshold W_warp sweep across skew levels.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, make_bench_index, steps_per_sec, timeit
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core.walk_engine import generate_walks
+
+
+def run_tile_sweep():
+    g, idx = make_bench_index(num_nodes=2048, num_edges=60000, skew=1.4)
+    wcfg = WalkConfig(num_walks=4096, max_length=20, start_mode="nodes")
+    scfg = SamplerConfig(bias="exponential", mode="weight")
+    results = {}
+    for tw, te in [(64, 256), (128, 512), (256, 1024), (512, 2048)]:
+        cfg = SchedulerConfig(path="tiled", tile_walks=tw, tile_edges=te)
+        mean, _, res = timeit(generate_walks, idx, jax.random.PRNGKey(0),
+                              wcfg, scfg, cfg, repeats=3)
+        msps = steps_per_sec(res, mean)
+        results[(tw, te)] = msps
+        emit(f"fig8/tile={tw}x{te}", mean * 1e6, f"Msteps/s={msps:.2f}")
+    return results
+
+
+def run_wwarp_sweep():
+    wcfg = WalkConfig(num_walks=4096, max_length=20, start_mode="nodes")
+    scfg = SamplerConfig()
+    all_norm = {}
+    for skew in (0.8, 1.4, 2.0):
+        g, idx = make_bench_index(num_nodes=1024, num_edges=40000, skew=skew)
+        vals = {}
+        for w in (1, 2, 4, 8, 16, 32, 64):
+            cfg = SchedulerConfig(path="grouped", solo_threshold=w)
+            mean, _, res = timeit(generate_walks, idx,
+                                  jax.random.PRNGKey(0), wcfg, scfg, cfg,
+                                  repeats=3)
+            vals[w] = steps_per_sec(res, mean)
+        peak = max(vals.values())
+        norm = {w: v / peak for w, v in vals.items()}
+        all_norm[skew] = norm
+        emit(f"fig9/skew={skew}", 0.0,
+             ";".join(f"W{w}={v:.3f}" for w, v in norm.items()))
+    # cross-dataset mean (paper defaults to its argmax)
+    ws = list(next(iter(all_norm.values())).keys())
+    mean_curve = {w: np.mean([all_norm[s][w] for s in all_norm]) for w in ws}
+    best = max(mean_curve, key=mean_curve.get)
+    emit("fig9/mean", 0.0,
+         ";".join(f"W{w}={v:.3f}" for w, v in mean_curve.items())
+         + f";argmax=W{best}")
+    return all_norm
+
+
+def run():
+    return run_tile_sweep(), run_wwarp_sweep()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. CPU wall-clock timings are
+relative claims only (DESIGN.md §9); the TPU performance story lives in
+EXPERIMENTS.md §Roofline/§Perf (from the compiled dry-run).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        ablation_scheduler,
+        baseline_tea,
+        ingestion_breakdown,
+        memory_usage,
+        param_sweeps,
+        scaling_edges,
+        streaming_replay,
+        tier_distribution,
+        validity_static,
+        window_sensitivity,
+    )
+
+    suites = [
+        ("table2_scheduler_ablation", ablation_scheduler.run),
+        ("table3_tier_distribution", tier_distribution.run),
+        ("table4_ingestion_breakdown", ingestion_breakdown.run),
+        ("table5_tea_baseline", baseline_tea.run),
+        ("table6_validity_static", validity_static.run),
+        ("fig6_streaming_replay", streaming_replay.run),
+        ("fig7_scaling_edges", scaling_edges.run),
+        ("fig8_9_param_sweeps", param_sweeps.run),
+        ("fig10_window_sensitivity", window_sensitivity.run),
+        ("fig11_memory_usage", memory_usage.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failed = []
+    for name, fn in suites:
+        if only and only not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Fig. 7: scaling with active graph size (1K -> 512K edges here).
+
+(a) ingestion-from-scratch time per edge count;
+(b) per-walk sampling time across edge counts for the three pickers
+    (paper: essentially flat — per-walk time varies <5%).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core.edge_store import make_batch, store_from_arrays
+from repro.core.temporal_index import build_index
+from repro.core.window import ingest, init_window
+from repro.core.walk_engine import generate_walks
+from repro.data.synthetic import powerlaw_temporal_graph
+
+EDGE_COUNTS = (1024, 8192, 65536, 262144, 524288)
+
+
+def run():
+    rows = []
+    for E in EDGE_COUNTS:
+        nn = max(256, E // 64)
+        g = powerlaw_temporal_graph(nn, E, seed=11)
+        # (a) ingestion from scratch (batch pad + sort + index build)
+        cap = 1 << (E - 1).bit_length()
+        t0 = time.perf_counter()
+        store = store_from_arrays(g.src, g.dst, g.ts, edge_capacity=cap,
+                                  node_capacity=nn)
+        idx = build_index(store, nn)
+        jax.block_until_ready(idx.ns_order)
+        t_ing = time.perf_counter() - t0
+
+        # (b) per-walk time, three pickers
+        wcfg = WalkConfig(num_walks=4096, max_length=40, start_mode="nodes")
+        per_walk = {}
+        for bias, mode, p, q in [("exponential", "index", 1.0, 1.0),
+                                 ("exponential", "weight", 1.0, 1.0),
+                                 ("exponential", "weight", 0.5, 2.0)]:
+            name = "node2vec" if p != 1.0 else f"{mode}"
+            scfg = SamplerConfig(bias=bias, mode=mode, node2vec_p=p,
+                                 node2vec_q=q)
+            mean, _, _ = timeit(generate_walks, idx, jax.random.PRNGKey(0),
+                                wcfg, scfg, SchedulerConfig(), repeats=3)
+            per_walk[name] = mean / wcfg.num_walks * 1e6
+        emit(f"fig7/E={E}", t_ing * 1e6,
+             f"ingest_s={t_ing:.3f};" +
+             ";".join(f"walk_us_{k}={v:.1f}" for k, v in per_walk.items()))
+        rows.append((E, t_ing, per_walk))
+    # flatness check across edge counts
+    for k in rows[0][2]:
+        vals = [r[2][k] for r in rows[1:]]   # skip smallest (fixed costs)
+        spread = (max(vals) - min(vals)) / max(np.mean(vals), 1e-9)
+        emit(f"fig7/flatness/{k}", 0.0, f"spread={100*spread:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Quickstart: build a temporal graph, ingest it, sample causal walks.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core import build_index, store_from_arrays
+from repro.core.validation import validate_walks
+from repro.core.walk_engine import generate_walks
+from repro.data.synthetic import powerlaw_temporal_graph
+
+
+def main():
+    # 1. a hub-skewed temporal graph (swap in your own (src, dst, ts))
+    g = powerlaw_temporal_graph(num_nodes=500, num_edges=10_000, seed=42)
+
+    # 2. the dual-index edge store (paper §2.3)
+    store = store_from_arrays(g.src, g.dst, g.ts,
+                              edge_capacity=16384, node_capacity=512)
+    index = build_index(store, node_capacity=512)
+
+    # 3. temporal random walks under an exponential recency bias
+    walks = generate_walks(
+        index, jax.random.PRNGKey(0),
+        WalkConfig(num_walks=1024, max_length=80, start_mode="nodes"),
+        SamplerConfig(bias="exponential", mode="weight"),
+        SchedulerConfig(path="grouped"),
+    )
+
+    # 4. every hop is causal (paper §3.10: 100% valid)
+    report = validate_walks(index, walks)
+    lengths = np.asarray(walks.lengths)
+    print(f"walks: {lengths.shape[0]}, mean length {lengths.mean():.1f}")
+    print(f"hop validity  : {float(report.hop_valid_frac):.3f}")
+    print(f"walk validity : {float(report.walk_valid_frac):.3f}")
+    print("first walk:", np.asarray(walks.nodes)[0, :int(lengths[0])])
+    print("its times  :", np.asarray(walks.times)[0, :int(lengths[0])])
+
+
+if __name__ == "__main__":
+    main()

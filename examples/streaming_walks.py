@@ -1,0 +1,46 @@
+"""Streaming ingestion under a sliding window (paper §3.3 regime).
+
+    PYTHONPATH=src python examples/streaming_walks.py
+"""
+import numpy as np
+
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    WalkConfig,
+    WindowConfig,
+)
+from repro.core.streaming import StreamingEngine
+from repro.core.validation import validate_walks
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+
+
+def main():
+    g = powerlaw_temporal_graph(num_nodes=1000, num_edges=100_000, seed=7)
+    cfg = EngineConfig(
+        window=WindowConfig(duration=2500, edge_capacity=1 << 16,
+                            node_capacity=1024),
+        sampler=SamplerConfig(bias="exponential", mode="index"),
+        scheduler=SchedulerConfig(path="grouped"),
+    )
+    engine = StreamingEngine(cfg, batch_capacity=8192)
+    wcfg = WalkConfig(num_walks=2048, max_length=30, start_mode="nodes")
+
+    def on_batch(eng, walks):
+        i = len(eng.stats.ingest_s)
+        rep = validate_walks(eng.state.index, walks)
+        print(f"batch {i:2d}: active_edges={eng.stats.edges_active[-1]:7d} "
+              f"ingest={1e3*eng.stats.ingest_s[-1]:7.1f}ms "
+              f"sample={1e3*eng.stats.sample_s[-1]:7.1f}ms "
+              f"valid={float(rep.walk_valid_frac):.2f} "
+              f"late={int(eng.state.late_drops)}")
+
+    engine.replay(chronological_batches(g, 16), wcfg, on_batch=on_batch)
+    ing = np.asarray(engine.stats.ingest_s[1:])
+    print(f"\nsteady-state ingest {1e3*ing.mean():.1f}ms/batch; memory "
+          f"bounded by the window (static shapes => exactly constant).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end driver #2: train an LM on walk-token sequences
+(walk-native training, paper conclusion) with checkpoint/restart.
+
+Default: a reduced olmo-1b topology for a few hundred CPU steps.
+``--full`` uses the real olmo-1b config (~1B params; needs accelerators —
+use launch/train.py with a mesh).
+
+    PYTHONPATH=src python examples/train_lm_on_walks.py --steps 200
+"""
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    WalkConfig,
+    WindowConfig,
+)
+from repro.core.streaming import StreamingEngine
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.data.walk_dataset import walks_to_lm_batch
+from repro.models import model as M
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/tempest_lm_ckpt")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config("olmo-1b")
+    if not args.full:
+        cfg = reduced(cfg, layers=4, d_model=128, vocab=1024)
+
+    # walk engine as the data pipeline
+    g = powerlaw_temporal_graph(1000, 200_000, seed=3)
+    eng = StreamingEngine(EngineConfig(
+        window=WindowConfig(duration=3000, edge_capacity=1 << 16,
+                            node_capacity=1024),
+        sampler=SamplerConfig(bias="exponential", mode="index"),
+        scheduler=SchedulerConfig()), batch_capacity=16384)
+    batches = list(chronological_batches(g, 16))
+
+    opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params, opt_cfg)
+    step0 = 0
+    if ckpt.latest_step(args.ckpt_dir) is not None:
+        step0 = ckpt.latest_step(args.ckpt_dir)
+        params = ckpt.restore(os.path.join(args.ckpt_dir, "params"), params)
+        opt = ckpt.restore(os.path.join(args.ckpt_dir, "opt"), opt)
+        print(f"restored checkpoint at step {step0}")
+
+    train_step = jax.jit(make_train_step(cfg, opt_cfg))
+    wcfg = WalkConfig(num_walks=1024, max_length=32, start_mode="nodes")
+
+    bi = 0
+    for step in range(step0, args.steps):
+        if step % 20 == 0:                      # advance the stream
+            bs, bd, bt = batches[bi % len(batches)]
+            eng.ingest_batch(bs, bd, bt)
+            bi += 1
+        walks = eng.sample_walks(wcfg)
+        toks, labels = walks_to_lm_batch(
+            np.asarray(walks.nodes), np.asarray(walks.lengths),
+            args.seq, args.batch, cfg.vocab_size, seed=step)
+        params, opt, metrics = train_step(
+            params, opt, {"tokens": toks, "labels": labels})
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}: loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}")
+        if (step + 1) % 100 == 0:
+            ckpt.save(os.path.join(args.ckpt_dir, "params"), params,
+                      step + 1)
+            ckpt.save(os.path.join(args.ckpt_dir, "opt"), opt, step + 1)
+            ckpt.save(args.ckpt_dir, {"placeholder": np.zeros(1)}, step + 1)
+            print(f"checkpointed at step {step + 1}")
+
+
+if __name__ == "__main__":
+    main()

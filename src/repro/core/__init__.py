@@ -1,0 +1,17 @@
+"""Tempest-JAX core: the paper's contribution as composable JAX modules."""
+from repro.core.edge_store import (
+    EdgeBatch,
+    EdgeStore,
+    empty_store,
+    make_batch,
+    store_from_arrays,
+)
+from repro.core.temporal_index import TemporalIndex, build_index
+from repro.core.walk_engine import WalkResult, generate_walks
+from repro.core.window import WindowState, ingest, init_window
+
+__all__ = [
+    "EdgeBatch", "EdgeStore", "empty_store", "make_batch",
+    "store_from_arrays", "TemporalIndex", "build_index",
+    "WalkResult", "generate_walks", "WindowState", "ingest", "init_window",
+]

@@ -1,0 +1,270 @@
+"""Distributed walk engine: node-partitioned edge store + per-step
+walk migration over ``all_to_all`` (shard_map).
+
+Scale-out design (KnightKing-style walk migration, recast as collectives):
+
+* nodes are range-partitioned across devices (`owner(v) = v // range`);
+  each device holds the dual-index of exactly its nodes' out-edges, so a
+  resident walk's Γ_t(v) is always served locally;
+* each step: (1) local hop via the same sampler stack as the single-device
+  engine, (2) walks bucketed by destination owner, (3) one ``all_to_all``
+  moves walk payloads (id, node, time + trace) to their new owners,
+  (4) received walks compact into resident slots;
+* RNG is keyed by (walk_id, step) via fold_in, so results are
+  **bit-identical to the single-device engine** regardless of placement
+  (tested in tests/test_distributed_walks.py);
+* buckets are fixed-capacity (static shapes); overflow drops are counted
+  and surface in the result — at production scale bucket capacity is a
+  provisioning knob exactly like the paper's walk-array capacity.
+
+This is a beyond-paper feature: Tempest is single-GPU; pod-scale walk
+generation needs the store sharded (81B-edge windows exceed one chip's
+HBM) and this module supplies the mechanism.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SamplerConfig
+from repro.core.edge_store import TS_PAD, EdgeStore
+from repro.core.temporal_index import (
+    TemporalIndex,
+    build_index,
+    node_range,
+    temporal_cutoff,
+)
+from repro.core.samplers import pick_in_neighborhood
+from repro.core.walk_engine import NODE_PAD
+
+
+class ShardedWalkState(NamedTuple):
+    walk_id: jax.Array    # int32[D, Wd]  (-1 = empty slot)
+    cur_node: jax.Array   # int32[D, Wd]
+    cur_time: jax.Array   # int32[D, Wd]
+    alive: jax.Array      # bool[D, Wd]
+    trace_n: jax.Array    # int32[D, Wd, L+1]
+    trace_t: jax.Array    # int32[D, Wd, L+1]
+    length: jax.Array     # int32[D, Wd]
+    dropped: jax.Array    # int32[D] bucket-overflow counter
+
+
+def partition_edges(src, dst, ts, num_nodes: int, num_shards: int,
+                    edge_capacity_per_shard: int):
+    """Host-side: range-partition edges by source-node owner; build one
+    TemporalIndex per shard, stacked on a leading device axis."""
+    rng_size = math.ceil(num_nodes / num_shards)
+    owners = np.asarray(src) // rng_size
+    stores = []
+    for d in range(num_shards):
+        sel = owners == d
+        from repro.core.edge_store import store_from_arrays
+        stores.append(store_from_arrays(
+            np.asarray(src)[sel], np.asarray(dst)[sel], np.asarray(ts)[sel],
+            edge_capacity=edge_capacity_per_shard,
+            node_capacity=num_nodes))
+    indexes = [build_index(s, num_nodes) for s in stores]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *indexes)
+    return stacked, rng_size
+
+
+def init_sharded_walks(num_shards: int, walks_per_shard: int,
+                       max_length: int, start_nodes, start_times,
+                       range_size: int) -> ShardedWalkState:
+    """Place walks on their start node's owner (host-side)."""
+    D, Wd, L = num_shards, walks_per_shard, max_length
+    wid = np.full((D, Wd), -1, np.int32)
+    node = np.zeros((D, Wd), np.int32)
+    tme = np.zeros((D, Wd), np.int32)
+    alive = np.zeros((D, Wd), bool)
+    tn = np.full((D, Wd, L + 1), NODE_PAD, np.int32)
+    tt = np.full((D, Wd, L + 1), NODE_PAD, np.int32)
+    ln = np.zeros((D, Wd), np.int32)
+    fill = np.zeros(D, np.int32)
+    for i, (v, t) in enumerate(zip(np.asarray(start_nodes),
+                                   np.asarray(start_times))):
+        d = int(v) // range_size
+        s = fill[d]
+        if s >= Wd:
+            raise ValueError(f"shard {d} start overflow")
+        wid[d, s] = i
+        node[d, s] = v
+        tme[d, s] = t
+        alive[d, s] = True
+        tn[d, s, 0] = v
+        tt[d, s, 0] = t
+        ln[d, s] = 1
+        fill[d] += 1
+    return ShardedWalkState(
+        walk_id=jnp.asarray(wid), cur_node=jnp.asarray(node),
+        cur_time=jnp.asarray(tme), alive=jnp.asarray(alive),
+        trace_n=jnp.asarray(tn), trace_t=jnp.asarray(tt),
+        length=jnp.asarray(ln), dropped=jnp.zeros((D,), jnp.int32))
+
+
+def make_distributed_walker(mesh: Mesh, axis: str, index_stacked,
+                            scfg: SamplerConfig, *, range_size: int,
+                            max_length: int, bucket_capacity: int):
+    """Returns a jitted function advancing all walks ``max_length`` steps."""
+    D = mesh.devices.size
+
+    def local_hop(idx: TemporalIndex, node, time, alive, wid, step):
+        a, b = node_range(idx, node)
+        c = temporal_cutoff(idx, a, b, time)
+        n = b - c
+        has = alive & (n > 0)
+        # per-(walk, step) RNG: placement-independent
+        base = jax.random.PRNGKey(0)
+        sk = jax.vmap(lambda w: jax.random.fold_in(
+            jax.random.fold_in(base, step), w))(wid)
+        u = jax.vmap(lambda k: jax.random.uniform(k, ()))(sk)
+        k = pick_in_neighborhood(idx, scfg, c, b, u, node)
+        k = jnp.clip(k, 0, idx.edge_capacity - 1)
+        return (jnp.where(has, idx.ns_dst[k], node),
+                jnp.where(has, idx.ns_ts[k], time), has)
+
+    def step_fn(idx, state_leaf_tuple, step):
+        (wid, node, time, alive, tn, tt, ln, dropped) = state_leaf_tuple
+        Wd = wid.shape[0]
+        nn, nt, has = local_hop(idx, node, time, alive, wid, step)
+        # record hop locally before migration
+        tn = jnp.where(has[:, None] & (jnp.arange(tn.shape[1]) == ln[:, None]),
+                       nn[:, None], tn)
+        tt = jnp.where(has[:, None] & (jnp.arange(tt.shape[1]) == ln[:, None]),
+                       nt[:, None], tt)
+        ln = ln + has.astype(jnp.int32)
+        occupied = wid >= 0
+        alive = has
+
+        # bucket by destination owner
+        owner = jnp.clip(nn // range_size, 0, D - 1)
+        owner = jnp.where(occupied, owner, D)     # parked walks: keep local?
+        # dead-but-occupied walks stay put (their trace lives here);
+        # only ALIVE walks migrate.
+        owner = jnp.where(alive, owner, D)
+
+        # rank within destination bucket
+        sort_key = owner * Wd + jnp.arange(Wd)
+        order = jnp.argsort(sort_key).astype(jnp.int32)
+        owner_sorted = owner[order]
+        first = jnp.searchsorted(owner_sorted, owner_sorted,
+                                 side="left").astype(jnp.int32)
+        rank_sorted = jnp.arange(Wd, dtype=jnp.int32) - first
+        rank = jnp.zeros((Wd,), jnp.int32).at[order].set(rank_sorted)
+        fits = (rank < bucket_capacity) & alive
+        n_drop = jnp.sum(alive & ~fits)
+
+        # payload buffers [D, Bk, ...]
+        L1 = tn.shape[1]
+        def scatter(payload, fillv):
+            buf = jnp.full((D, bucket_capacity) + payload.shape[1:], fillv,
+                           payload.dtype)
+            o = jnp.where(fits, owner, D - 1)
+            r = jnp.where(fits, rank, bucket_capacity)
+            return buf.at[o, r].set(payload, mode="drop")
+
+        p_wid = scatter(jnp.where(fits, wid, -1), -1)
+        p_node = scatter(nn, 0)
+        p_time = scatter(nt, 0)
+        p_tn = scatter(tn, NODE_PAD)
+        p_tt = scatter(tt, NODE_PAD)
+        p_ln = scatter(ln, 0)
+
+        # one all_to_all per payload leaf: [D, Bk, ...] -> [D*Bk, ...]
+        def a2a(x):
+            r = jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                                   tiled=True)
+            return r.reshape((D * bucket_capacity,) + x.shape[2:])
+
+        r_wid = a2a(p_wid)
+        r_node = a2a(p_node)
+        r_time = a2a(p_time)
+        r_tn = a2a(p_tn)
+        r_tt = a2a(p_tt)
+        r_ln = a2a(p_ln)
+
+        # keep: dead walks stay resident (their trace is gathered here);
+        # bucket-overflow walks also stay but STOP (counted as dropped).
+        keep = occupied & (~alive | ~fits)
+        wid = jnp.where(keep, wid, -1)
+        alive_keep = jnp.zeros_like(alive)
+        # compact: place received walks into free slots
+        free = wid < 0
+        free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+        slot_of_free_rank = jnp.full((Wd,), Wd, jnp.int32).at[
+            jnp.where(free, free_rank, Wd)].set(jnp.arange(Wd, dtype=jnp.int32),
+                                                mode="drop")
+        inc_valid = r_wid >= 0
+        inc_rank = jnp.cumsum(inc_valid.astype(jnp.int32)) - 1
+        dest = jnp.where(inc_valid,
+                         slot_of_free_rank[jnp.clip(inc_rank, 0, Wd - 1)],
+                         Wd)
+        recv_drop = jnp.sum(inc_valid & (dest >= Wd))
+
+        def place(cur, payload):
+            return cur.at[dest].set(payload, mode="drop")
+
+        wid = place(wid, r_wid)
+        node = place(jnp.where(keep, node, 0), r_node)
+        time = place(jnp.where(keep, time, 0), r_time)
+        tn = place(jnp.where(keep[:, None], tn, NODE_PAD), r_tn)
+        tt = place(jnp.where(keep[:, None], tt, NODE_PAD), r_tt)
+        ln = place(jnp.where(keep, ln, 0), r_ln)
+        alive = place(alive_keep, inc_valid)
+        dropped = dropped + n_drop + recv_drop
+        return (wid, node, time, alive, tn, tt, ln, dropped)
+
+    def walker(index_st, state: ShardedWalkState):
+        # strip the size-1 sharded leading axis shard_map leaves in place
+        idx_local = jax.tree.map(lambda a: a[0], index_st)
+        leaves = tuple(l[0] for l in
+                       (state.walk_id, state.cur_node, state.cur_time,
+                        state.alive, state.trace_n, state.trace_t,
+                        state.length))
+        leaves = leaves + (state.dropped[0],)
+
+        def body(carry, step):
+            return step_fn(idx_local, carry, step), None
+
+        out, _ = jax.lax.scan(body, leaves,
+                              jnp.arange(max_length, dtype=jnp.int32))
+        return ShardedWalkState(*(o[None] for o in out))
+
+    pspec_idx = jax.tree.map(lambda _: P(axis), index_stacked)
+    pspec_state = ShardedWalkState(
+        walk_id=P(axis), cur_node=P(axis), cur_time=P(axis), alive=P(axis),
+        trace_n=P(axis), trace_t=P(axis), length=P(axis), dropped=P(axis))
+
+    fn = shard_map(walker, mesh=mesh,
+                   in_specs=(pspec_idx, pspec_state),
+                   out_specs=pspec_state, check_rep=False)
+
+    def run(state: ShardedWalkState) -> ShardedWalkState:
+        return jax.jit(fn)(index_stacked, state)
+
+    return run
+
+
+def gather_walks(state: ShardedWalkState, num_walks: int):
+    """Assemble (nodes, times, lengths) in walk-id order (host-side)."""
+    wid = np.asarray(state.walk_id).reshape(-1)
+    tn = np.asarray(state.trace_n).reshape(-1, state.trace_n.shape[-1])
+    tt = np.asarray(state.trace_t).reshape(-1, state.trace_t.shape[-1])
+    ln = np.asarray(state.length).reshape(-1)
+    L1 = tn.shape[-1]
+    nodes = np.full((num_walks, L1), NODE_PAD, np.int32)
+    times = np.full((num_walks, L1), NODE_PAD, np.int32)
+    lengths = np.zeros((num_walks,), np.int32)
+    for i, w in enumerate(wid):
+        if w >= 0:
+            nodes[w] = tn[i]
+            times[w] = tt[i]
+            lengths[w] = ln[i]
+    return nodes, times, lengths

@@ -1,0 +1,99 @@
+"""Shared edge store (paper §2.3).
+
+One physical edge array, kept **timestamp-sorted** — the timestamp-grouped
+view IS the physical layout, so window eviction is a prefix drop and
+start-edge selection is a range sample (paper: "Window eviction then reduces
+to discarding the prefix of the edge array up to the temporal cutoff").
+
+Static-shape discipline (TPU/XLA): the store is padded to ``edge_capacity``.
+Padding edges carry ``ts = TS_PAD`` (int32 max) so every timestamp sort puts
+them last, and ``src = node_capacity`` so they land in a virtual trailing
+node bucket that no real query ever touches.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TS_PAD = np.iinfo(np.int32).max
+
+
+class EdgeBatch(NamedTuple):
+    """An incoming (possibly unsorted) batch of temporal edges.
+
+    Fixed-capacity arrays + a count, so ingestion jits once per capacity.
+    """
+
+    src: jax.Array      # int32[B_cap]
+    dst: jax.Array      # int32[B_cap]
+    ts: jax.Array       # int32[B_cap]
+    count: jax.Array    # int32 scalar — valid prefix length
+
+
+class EdgeStore(NamedTuple):
+    """Timestamp-sorted shared edge store."""
+
+    src: jax.Array        # int32[E_cap]
+    dst: jax.Array        # int32[E_cap]
+    ts: jax.Array         # int32[E_cap]  (ascending; TS_PAD beyond num_edges)
+    num_edges: jax.Array  # int32 scalar
+
+    @property
+    def capacity(self) -> int:
+        return self.src.shape[0]
+
+
+def make_batch(src, dst, ts, capacity: int | None = None) -> EdgeBatch:
+    """Build an EdgeBatch from host arrays, padding to capacity."""
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    ts = np.asarray(ts, np.int32)
+    n = src.shape[0]
+    cap = capacity or max(n, 1)
+    if n > cap:
+        raise ValueError(f"batch of {n} exceeds capacity {cap}")
+    pad = cap - n
+    return EdgeBatch(
+        src=jnp.asarray(np.concatenate([src, np.zeros(pad, np.int32)])),
+        dst=jnp.asarray(np.concatenate([dst, np.zeros(pad, np.int32)])),
+        ts=jnp.asarray(np.concatenate([ts, np.full(pad, TS_PAD, np.int32)])),
+        count=jnp.asarray(n, jnp.int32),
+    )
+
+
+def empty_store(edge_capacity: int, node_capacity: int) -> EdgeStore:
+    return EdgeStore(
+        src=jnp.full((edge_capacity,), node_capacity, jnp.int32),
+        dst=jnp.zeros((edge_capacity,), jnp.int32),
+        ts=jnp.full((edge_capacity,), TS_PAD, jnp.int32),
+        num_edges=jnp.asarray(0, jnp.int32),
+    )
+
+
+def store_from_arrays(src, dst, ts, edge_capacity: int,
+                      node_capacity: int) -> EdgeStore:
+    """Host-side constructor: sort by timestamp, pad to capacity."""
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    ts = np.asarray(ts, np.int32)
+    order = np.argsort(ts, kind="stable")
+    src, dst, ts = src[order], dst[order], ts[order]
+    n = src.shape[0]
+    if n > edge_capacity:
+        raise ValueError(f"{n} edges exceed capacity {edge_capacity}")
+    pad = edge_capacity - n
+    return EdgeStore(
+        src=jnp.asarray(np.concatenate([src, np.full(pad, node_capacity, np.int32)])),
+        dst=jnp.asarray(np.concatenate([dst, np.zeros(pad, np.int32)])),
+        ts=jnp.asarray(np.concatenate([ts, np.full(pad, TS_PAD, np.int32)])),
+        num_edges=jnp.asarray(n, jnp.int32),
+    )
+
+
+def store_nbytes(store: EdgeStore) -> int:
+    """Device bytes held by the store (paper Fig. 11 memory accounting)."""
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in (store.src, store.dst, store.ts))

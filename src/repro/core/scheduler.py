@@ -1,0 +1,127 @@
+"""Dispatch plane (paper §2.4.4, Fig. 5) — TPU adaptation.
+
+The paper partitions per-step work into five terminal kernels keyed on
+(W = walks co-located at a node, G = the node's timestamp-group count).
+On TPU there are no per-task kernel launches; the same two axes instead
+select between three execution layouts (SchedulerConfig.path) and, inside
+the tiled path, whether a task's metadata slice fits a VMEM tile (the smem
+analog) or must fall back to global-memory-style gathers.
+
+This module computes:
+* per-step tier statistics (the paper's Table 3 / launch-count analog),
+* the modeled HBM traffic of the fullwalk vs grouped layouts (the paper's
+  structural metric "global-memory traffic amortized across co-located
+  walks" — measurable on real TPU, modeled here on CPU),
+* fixed-shape task tables for the Pallas tiled kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SchedulerConfig
+from repro.core.temporal_index import TemporalIndex
+
+# stats vector layout (per step)
+STAT_ALIVE = 0            # alive walks
+STAT_UNIQUE_NODES = 1     # distinct nodes carrying walks
+STAT_SOLO = 2             # tasks dispatched solo (W <= solo_threshold)
+STAT_GROUP_SMEM = 3       # grouped tasks whose G fits the VMEM tile
+STAT_GROUP_GLOBAL = 4     # grouped tasks needing global fallback
+STAT_MEGA = 5             # mega-hub sub-tasks (ceil(W / max_task_walks))
+STAT_BYTES_FULLWALK = 6   # modeled HBM bytes, per-walk layout
+STAT_BYTES_GROUPED = 7    # modeled HBM bytes, grouped layout
+NUM_STATS = 8
+
+_BYTES_PER_EDGE_ROW = 8   # (dst, ts) int32 pair
+_BYTES_PER_OFFSET = 4
+
+
+def dispatch_stats(index: TemporalIndex, cur_node: jax.Array,
+                   alive: jax.Array, cfg: SchedulerConfig) -> jax.Array:
+    """Per-step dispatch-plane statistics (paper Alg. 1 lines 4-9 analog)."""
+    nc = index.node_capacity
+    node = jnp.clip(cur_node, 0, nc - 1)
+    w_per_node = jax.ops.segment_sum(alive.astype(jnp.int32), node,
+                                     num_segments=nc)
+    occupied = w_per_node > 0
+    g = index.node_group_counts
+
+    solo = occupied & (w_per_node <= cfg.solo_threshold)
+    grouped = occupied & (w_per_node > cfg.solo_threshold) \
+        & (w_per_node <= cfg.max_task_walks)
+    mega_tasks = jnp.where(
+        occupied & (w_per_node > cfg.max_task_walks),
+        -(-w_per_node // cfg.max_task_walks), 0)
+    fits_tile = g <= cfg.tile_edges
+
+    deg = index.node_starts[1:nc + 1] - index.node_starts[:nc]
+    # modeled bytes: the search touches ~log2(deg) edge rows + 2 offsets.
+    probes = jnp.ceil(jnp.log2(jnp.maximum(deg, 2).astype(jnp.float32)))
+    per_lookup = probes * _BYTES_PER_EDGE_ROW + 2 * _BYTES_PER_OFFSET
+    wf = w_per_node.astype(jnp.float32)
+    # fullwalk: every walk pays the lookup + one edge-row read.
+    bytes_full = jnp.sum(wf * (per_lookup + _BYTES_PER_EDGE_ROW))
+    # grouped: the lookup is paid once per occupied node (time-dedup is
+    # strictly better; this is the conservative node-level bound), each walk
+    # still pays its sampled edge-row read.
+    bytes_grp = jnp.sum(jnp.where(occupied, per_lookup, 0.0)
+                        + wf * _BYTES_PER_EDGE_ROW)
+
+    return jnp.stack([
+        jnp.sum(alive.astype(jnp.float32)),
+        jnp.sum(occupied.astype(jnp.float32)),
+        jnp.sum(solo.astype(jnp.float32)),
+        jnp.sum((grouped & fits_tile).astype(jnp.float32)),
+        jnp.sum((grouped & ~fits_tile).astype(jnp.float32)),
+        jnp.sum(mega_tasks.astype(jnp.float32)),
+        bytes_full,
+        bytes_grp,
+    ])
+
+
+class TaskTable(NamedTuple):
+    """Fixed-shape task table for the Pallas tiled kernel.
+
+    Each *task* covers one tile of ``tile_walks`` sorted walk lanes plus the
+    edge-array window [edge_base, edge_base + tile_edges) that contains the
+    neighborhoods of every walk in the tile (tasks are split so this holds;
+    the split mirrors the paper's mega-hub expansion).
+    """
+
+    edge_base: jax.Array    # int32[T] base offset into the ns view
+    walk_lo: jax.Array      # int32[W] per-walk tile-local region start
+    walk_hi: jax.Array      # int32[W] per-walk tile-local region end
+    oversize: jax.Array     # bool[W] neighborhood exceeds the tile => fallback
+
+
+def build_task_table(index: TemporalIndex, s_node: jax.Array,
+                     a: jax.Array, b: jax.Array,
+                     cfg: SchedulerConfig) -> TaskTable:
+    """Build the tile table for walks already sorted by node.
+
+    Tiles are aligned windows of the ns view: a walk whose node region fits
+    entirely inside the tile anchored at its own region start participates;
+    walks whose regions span more than ``tile_edges`` are flagged oversize
+    and served by the global-fallback path (paper's G-axis fallback).
+    """
+    W = s_node.shape[0]
+    tw = cfg.tile_walks
+    T = W // tw
+    # anchor each tile at the smallest region start among its walks
+    a_tiles = a.reshape(T, tw)
+    b_tiles = b.reshape(T, tw)
+    base = jnp.min(a_tiles, axis=1)
+    span_ok = (b_tiles - base[:, None]) <= cfg.tile_edges
+    walk_lo = (a_tiles - base[:, None]).reshape(W)
+    walk_hi = (b_tiles - base[:, None]).reshape(W)
+    oversize = ~span_ok.reshape(W)
+    walk_lo = jnp.clip(walk_lo, 0, cfg.tile_edges)
+    walk_hi = jnp.clip(walk_hi, 0, cfg.tile_edges)
+    base = jnp.clip(base, 0, jnp.maximum(index.edge_capacity - cfg.tile_edges, 0))
+    return TaskTable(edge_base=base.astype(jnp.int32),
+                     walk_lo=walk_lo.astype(jnp.int32),
+                     walk_hi=walk_hi.astype(jnp.int32),
+                     oversize=oversize)

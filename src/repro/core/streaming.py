@@ -1,0 +1,78 @@
+"""Streaming driver: chronological batch replay with per-batch walk
+generation (the paper's §3.3 operating regime) and stage timings."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    WalkConfig,
+)
+from repro.core.edge_store import make_batch
+from repro.core.walk_engine import generate_walks
+from repro.core.window import WindowState, ingest, init_window
+
+
+@dataclass
+class StreamStats:
+    ingest_s: List[float] = field(default_factory=list)
+    sample_s: List[float] = field(default_factory=list)
+    edges_active: List[int] = field(default_factory=list)
+    walks_valid: List[float] = field(default_factory=list)
+
+    @property
+    def cumulative_ingest(self):
+        return np.cumsum(self.ingest_s)
+
+    @property
+    def cumulative_sample(self):
+        return np.cumsum(self.sample_s)
+
+
+class StreamingEngine:
+    """Tempest's end-to-end loop: ingest -> rebuild -> walk."""
+
+    def __init__(self, cfg: EngineConfig, batch_capacity: int):
+        self.cfg = cfg
+        self.batch_capacity = batch_capacity
+        self.state: WindowState = init_window(
+            cfg.window.edge_capacity, cfg.window.node_capacity,
+            int(cfg.window.duration))
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self.stats = StreamStats()
+
+    def ingest_batch(self, src, dst, ts) -> None:
+        batch = make_batch(src, dst, ts, capacity=self.batch_capacity)
+        t0 = time.perf_counter()
+        self.state = ingest(self.state, batch,
+                            self.cfg.window.node_capacity)
+        jax.block_until_ready(self.state.index.ns_order)
+        self.stats.ingest_s.append(time.perf_counter() - t0)
+        self.stats.edges_active.append(int(self.state.index.num_edges))
+
+    def sample_walks(self, wcfg: WalkConfig,
+                     collect_stats: bool = False):
+        self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
+        res = generate_walks(self.state.index, sub, wcfg,
+                             self.cfg.sampler, self.cfg.scheduler,
+                             collect_stats=collect_stats)
+        jax.block_until_ready(res.nodes)
+        self.stats.sample_s.append(time.perf_counter() - t0)
+        return res
+
+    def replay(self, batches: Iterable, wcfg: WalkConfig,
+               on_batch: Optional[Callable] = None):
+        for bs, bd, bt in batches:
+            self.ingest_batch(bs, bd, bt)
+            res = self.sample_walks(wcfg)
+            if on_batch is not None:
+                on_batch(self, res)
+        return self.stats

@@ -1,0 +1,220 @@
+"""Dual-index organization (paper §2.3) — bulk reconstruction, O(m).
+
+Two logical views over the shared edge store, plus one auxiliary view:
+
+* **Timestamp-grouped view** — the physical store itself (timestamp-sorted).
+  The paper materializes a per-timestamp-group offset array; because ties are
+  contiguous runs of a sorted array, group boundaries are implicit and every
+  operation the paper performs on the offset array (bias -> group -> slice)
+  is a binary search over the sorted ``ts`` array here. Same asymptotics
+  (O(log E) vs O(log G)); zero extra memory. Recorded as an adaptation in
+  DESIGN.md §9.
+
+* **Node-and-timestamp-grouped view** — permutation ``ns_order`` sorting
+  edges by (src, ts); ``node_starts[v]`` locates node v's edge region
+  [a, b) in O(1); a ranged binary search inside [a, b) locates the temporal
+  cutoff c so that Γ_t(v) = [c, b). ``ns_ts`` / ``ns_dst`` are gathered
+  copies so hop lookups touch contiguous memory (the GPU version reads
+  through the permutation; on TPU a materialized gather at build time buys
+  sequential HBM access per node region — build is O(m), amortized over K
+  walks, paper §2.7).
+
+* **Adjacency view** (addition) — permutation sorting edges by
+  (src, dst, ts). Used by (a) temporal node2vec's β(u,w) rejection test
+  (the paper needs the same adjacency probe; mechanism unspecified there)
+  and (b) the causality validator (paper §3.10).
+
+Weight-based sampling support (paper §2.5 + Table 4 "weight" stage):
+per-element weights are accumulated into **global prefix-sum arrays** whose
+per-node-segment differences give neighborhood cumulative weights for *any*
+hop suffix [c, b):
+
+* exponential: w_i = exp(s · (ts_i − t_ref[src_i])), t_ref = node's max ts
+  so exponents ≤ 0 (numerically safe). exp(t_i − t_min) of the paper equals
+  this up to a positive factor that cancels in the normalized CDF.
+* linear: elem_i = ts_i − t_base[src_i] + 1, t_base = node's min ts. The
+  neighborhood weight w_i = ts_i − ts_c + 1 = elem_i − δ with
+  δ = ts_c − t_base[v]; cumulative S[k] = (P[k+1] − P[c]) − (k+1−c)·δ is
+  O(1) per probe, so inverse-CDF stays a binary search.
+"""
+from __future__ import annotations
+
+import math
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.edge_store import TS_PAD, EdgeStore
+
+
+class TemporalIndex(NamedTuple):
+    # shared edge store (timestamp-grouped view == physical layout)
+    store: EdgeStore
+    # ---- node-and-timestamp-grouped view ----
+    ns_order: jax.Array      # int32[E] permutation: position -> store index
+    ns_src: jax.Array        # int32[E] src gathered through ns_order
+    ns_dst: jax.Array        # int32[E]
+    ns_ts: jax.Array         # int32[E]
+    node_starts: jax.Array   # int32[N+2] region of node v = [ns[v], ns[v+1])
+    node_group_counts: jax.Array  # int32[N] distinct-timestamp count (the G axis)
+    # weight-sampler prefix arrays (exclusive; length E+1)
+    pexp: jax.Array          # float32[E+1]
+    plin: jax.Array          # float32[E+1]
+    node_tref: jax.Array     # int32[N] max ts per node (exp reference)
+    node_tbase: jax.Array    # int32[N] min ts per node (linear reference)
+    # store-level prefixes for start-edge selection over the timestamp view
+    pexp_store: jax.Array    # float32[E+1]
+    plin_store: jax.Array    # float32[E+1]
+    # ---- adjacency view (node2vec β probe + validation) ----
+    adj_order: jax.Array     # int32[E] permutation sorted by (src, dst, ts)
+    adj_dst: jax.Array       # int32[E]
+
+    @property
+    def num_edges(self) -> jax.Array:
+        return self.store.num_edges
+
+    @property
+    def node_capacity(self) -> int:
+        return self.node_starts.shape[0] - 2
+
+    @property
+    def edge_capacity(self) -> int:
+        return self.ns_order.shape[0]
+
+
+@partial(jax.jit, static_argnames=("node_capacity", "bias_scale"))
+def build_index(store: EdgeStore, node_capacity: int,
+                bias_scale: float = 1.0) -> TemporalIndex:
+    """Bulk dual-index reconstruction (paper §2.6: two sorts + linear passes)."""
+    E = store.capacity
+    n_valid = store.num_edges
+    valid = jnp.arange(E, dtype=jnp.int32) < n_valid
+
+    # ---- sort 1: (src, ts) — the node-and-timestamp-grouped view --------
+    # Padding edges have src == node_capacity, ts == TS_PAD -> sort last.
+    ns_order = jnp.lexsort((store.ts, store.src)).astype(jnp.int32)
+    ns_src = store.src[ns_order]
+    ns_dst = store.dst[ns_order]
+    ns_ts = store.ts[ns_order]
+
+    # node regions: node_starts[v] = first position with ns_src >= v.
+    # one extra bucket (node_capacity) holds the padding edges.
+    node_starts = jnp.searchsorted(
+        ns_src, jnp.arange(node_capacity + 2, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+
+    # G axis: distinct timestamps per node region. A timestamp group starts
+    # wherever either the src or the ts changes in the (src, ts)-sorted order.
+    prev_src = jnp.concatenate([jnp.full((1,), -1, jnp.int32), ns_src[:-1]])
+    prev_ts = jnp.concatenate([jnp.full((1,), -1, jnp.int32), ns_ts[:-1]])
+    group_start = (ns_src != prev_src) | (ns_ts != prev_ts)
+    node_group_counts = jax.ops.segment_sum(
+        (group_start & (ns_src < node_capacity)).astype(jnp.int32),
+        jnp.clip(ns_src, 0, node_capacity - 1),
+        num_segments=node_capacity,
+    ).astype(jnp.int32)
+
+    # per-node ts extrema (references for stable weights)
+    big = jnp.int32(TS_PAD)
+    ns_ts_masked_min = jnp.where(ns_src < node_capacity, ns_ts, big)
+    ns_ts_masked_max = jnp.where(ns_src < node_capacity, ns_ts, -big)
+    node_tbase = jax.ops.segment_min(
+        ns_ts_masked_min, jnp.clip(ns_src, 0, node_capacity - 1),
+        num_segments=node_capacity).astype(jnp.int32)
+    node_tref = jax.ops.segment_max(
+        ns_ts_masked_max, jnp.clip(ns_src, 0, node_capacity - 1),
+        num_segments=node_capacity).astype(jnp.int32)
+    node_tbase = jnp.where(node_tbase == big, 0, node_tbase)
+    node_tref = jnp.where(node_tref == -big, 0, node_tref)
+
+    # ---- weight prefix arrays (linear passes) ----------------------------
+    in_range = ns_src < node_capacity
+    dt_exp = (ns_ts - node_tref[jnp.clip(ns_src, 0, node_capacity - 1)]).astype(jnp.float32)
+    w_exp = jnp.where(in_range, jnp.exp(bias_scale * dt_exp), 0.0)
+    elem_lin = (ns_ts - node_tbase[jnp.clip(ns_src, 0, node_capacity - 1)] + 1).astype(jnp.float32)
+    w_lin = jnp.where(in_range, elem_lin, 0.0)
+    zero = jnp.zeros((1,), jnp.float32)
+    pexp = jnp.concatenate([zero, jnp.cumsum(w_exp)])
+    plin = jnp.concatenate([zero, jnp.cumsum(w_lin)])
+
+    # store-level prefixes (start-edge selection over the whole window)
+    t_hi = jnp.where(n_valid > 0, store.ts[jnp.maximum(n_valid - 1, 0)], 0)
+    t_lo = store.ts[0]
+    w_exp_s = jnp.where(valid, jnp.exp(bias_scale * (store.ts - t_hi).astype(jnp.float32)), 0.0)
+    w_lin_s = jnp.where(valid, (store.ts - t_lo + 1).astype(jnp.float32), 0.0)
+    pexp_store = jnp.concatenate([zero, jnp.cumsum(w_exp_s)])
+    plin_store = jnp.concatenate([zero, jnp.cumsum(w_lin_s)])
+
+    # ---- sort 2: (src, dst, ts) — adjacency view -------------------------
+    adj_order = jnp.lexsort((store.ts, store.dst, store.src)).astype(jnp.int32)
+    adj_dst = store.dst[adj_order]
+
+    return TemporalIndex(
+        store=store,
+        ns_order=ns_order, ns_src=ns_src, ns_dst=ns_dst, ns_ts=ns_ts,
+        node_starts=node_starts, node_group_counts=node_group_counts,
+        pexp=pexp, plin=plin,
+        node_tref=node_tref, node_tbase=node_tbase,
+        pexp_store=pexp_store, plin_store=plin_store,
+        adj_order=adj_order, adj_dst=adj_dst,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Ranged binary searches (branch-free, fixed trip count — TPU friendly)
+# ---------------------------------------------------------------------------
+
+
+def ranged_search(arr: jax.Array, lo: jax.Array, hi: jax.Array,
+                  target: jax.Array, *, strict: bool) -> jax.Array:
+    """First index k in [lo, hi) with arr[k] > target (strict) or >= target.
+
+    Vectorized over lo/hi/target (same shape); ``arr`` is 1-D. Returns hi if
+    no such k. Fixed ceil(log2(len(arr)))+1 iterations.
+    """
+    n = arr.shape[0]
+    steps = max(1, math.ceil(math.log2(max(n, 2))) + 1)
+    lo = lo.astype(jnp.int32)
+    hi = hi.astype(jnp.int32)
+
+    def body(_, state):
+        lo_, hi_ = state
+        mid = (lo_ + hi_) >> 1
+        v = arr[jnp.clip(mid, 0, n - 1)]
+        pred = (v > target) if strict else (v >= target)
+        open_ = lo_ < hi_
+        hi2 = jnp.where(pred, mid, hi_)
+        lo2 = jnp.where(pred, lo_, mid + 1)
+        return (jnp.where(open_, lo2, lo_), jnp.where(open_, hi2, hi_))
+
+    lo_f, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo_f
+
+
+def node_range(index: TemporalIndex, node: jax.Array):
+    """[a, b) edge region of ``node`` in the node-ts view — O(1)."""
+    v = jnp.clip(node, 0, index.node_capacity)
+    return index.node_starts[v], index.node_starts[v + 1]
+
+
+def temporal_cutoff(index: TemporalIndex, a: jax.Array, b: jax.Array,
+                    t: jax.Array) -> jax.Array:
+    """c = first position in [a, b) with ns_ts > t, so Γ_t(v) = [c, b)."""
+    return ranged_search(index.ns_ts, a, b, t, strict=True)
+
+
+def adjacency_contains(index: TemporalIndex, u: jax.Array,
+                       w: jax.Array) -> jax.Array:
+    """Whether edge (u -> w, any ts) exists in the window — O(log E)."""
+    a, b = node_range_adj(index, u)
+    k = ranged_search(index.adj_dst, a, b, w, strict=False)
+    return (k < b) & (index.adj_dst[jnp.clip(k, 0, index.edge_capacity - 1)] == w)
+
+
+def node_range_adj(index: TemporalIndex, node: jax.Array):
+    # adjacency view shares node regions with the ns view (both sort by src
+    # first and the sorts are over the same multiset)
+    return node_range(index, node)

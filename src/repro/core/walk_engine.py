@@ -1,0 +1,330 @@
+"""Temporal random-walk engine (paper §2.4).
+
+Execution paths (the TPU mapping of the paper's dispatch plane):
+
+* ``fullwalk`` — the paper's §2.4.1 baseline: every walk advances
+  independently; per-hop gathers and binary searches are issued per walk in
+  whatever order walks happen to sit in memory.
+
+* ``grouped`` — the hierarchical-cooperative-scheduling adaptation (§2.4.3):
+  each hop, walks are sorted by (current node, current time); identical
+  (node, time) pairs form *segments* whose temporal cutoff is computed once
+  at the segment head and broadcast to members, and whose gathers touch
+  contiguous index regions (the TPU analog of coalesced, smem-amortized
+  access). Only the random draw and the picked edge differ per walk —
+  exactly the paper's observation.
+
+* ``tiled`` — the grouped path with the hop search+sample executed by the
+  Pallas kernel (kernels/walk_step.py), which stages each task's edge slice
+  in VMEM (the smem-panel analog). Selected via SchedulerConfig.path.
+
+All paths produce **identical walks for identical keys** (tested): random
+draws are generated in original walk order and permuted alongside the state,
+so grouping is purely an execution-layout decision — the paper makes the
+same claim for its tiers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core import scheduler as sched
+from repro.core.samplers import (
+    node2vec_beta,
+    node2vec_max_beta,
+    pick_in_neighborhood,
+    pick_start_edges,
+)
+from repro.core.temporal_index import (
+    TemporalIndex,
+    node_range,
+    temporal_cutoff,
+)
+
+NODE_PAD = -1          # sentinel in emitted walks beyond walk length
+N2V_ROUNDS = 8         # rejection-sampling rounds per hop (vectorized)
+
+
+class WalkResult(NamedTuple):
+    nodes: jax.Array     # int32[W, L+1], NODE_PAD beyond length
+    times: jax.Array     # int32[W, L+1]
+    lengths: jax.Array   # int32[W] number of nodes recorded (>=1)
+    stats: Optional[jax.Array]   # float32[L, sched.NUM_STATS] or None
+
+
+class _Carry(NamedTuple):
+    cur_node: jax.Array
+    cur_time: jax.Array
+    prev_node: jax.Array
+    alive: jax.Array
+    nodes: jax.Array
+    times: jax.Array
+    lengths: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Walk starts
+# ---------------------------------------------------------------------------
+
+
+def start_walks(index: TemporalIndex, wcfg: WalkConfig, scfg: SamplerConfig,
+                key: jax.Array) -> _Carry:
+    W = wcfg.num_walks
+    L = wcfg.max_length
+    nodes = jnp.full((W, L + 1), NODE_PAD, jnp.int32)
+    times = jnp.full((W, L + 1), NODE_PAD, jnp.int32)
+
+    t_floor = jnp.where(index.num_edges > 0, index.store.ts[0] - 1, 0)
+
+    if wcfg.start_mode == "all_nodes":
+        # paper §3.3: k walks from every active source node
+        nc = index.node_capacity
+        cur = (jnp.arange(W, dtype=jnp.int32) % nc)
+        deg = index.node_starts[cur + 1] - index.node_starts[cur]
+        alive = deg > 0
+        cur_time = jnp.full((W,), 1, jnp.int32) * t_floor
+    elif wcfg.start_mode == "nodes":
+        # uniform over active nodes via cumulative-count inversion
+        nc = index.node_capacity
+        deg = index.node_starts[1:nc + 1] - index.node_starts[:nc]
+        active = (deg > 0).astype(jnp.int32)
+        cum = jnp.cumsum(active)
+        num_active = cum[-1]
+        u = jax.random.uniform(key, (W,))
+        j = jnp.floor(u * num_active.astype(jnp.float32)).astype(jnp.int32)
+        j = jnp.clip(j, 0, jnp.maximum(num_active - 1, 0))
+        cur = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+        alive = jnp.broadcast_to(num_active > 0, (W,))
+        cur_time = jnp.full((W,), 1, jnp.int32) * t_floor
+    elif wcfg.start_mode == "edges":
+        # start-edge selection over the timestamp-grouped view (paper §2.3)
+        u = jax.random.uniform(key, (W,))
+        e = pick_start_edges(index, scfg, u)
+        e = jnp.clip(e, 0, index.edge_capacity - 1)
+        src = index.store.src[e]
+        cur = index.store.dst[e]
+        cur_time = index.store.ts[e]
+        alive = jnp.broadcast_to(index.num_edges > 0, (W,))
+        nodes = nodes.at[:, 0].set(jnp.where(alive, src, NODE_PAD))
+        times = times.at[:, 0].set(jnp.where(alive, cur_time, NODE_PAD))
+        nodes = nodes.at[:, 1].set(jnp.where(alive, cur, NODE_PAD))
+        times = times.at[:, 1].set(jnp.where(alive, cur_time, NODE_PAD))
+        return _Carry(cur_node=cur, cur_time=cur_time, prev_node=src,
+                      alive=alive, nodes=nodes, times=times,
+                      lengths=jnp.where(alive, 2, 0).astype(jnp.int32))
+    else:
+        raise ValueError(f"unknown start_mode {wcfg.start_mode!r}")
+
+    nodes = nodes.at[:, 0].set(jnp.where(alive, cur, NODE_PAD))
+    times = times.at[:, 0].set(jnp.where(alive, cur_time, NODE_PAD))
+    return _Carry(cur_node=cur, cur_time=cur_time,
+                  prev_node=jnp.full((W,), -1, jnp.int32),
+                  alive=alive, nodes=nodes, times=times,
+                  lengths=alive.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# One hop, full-walk layout
+# ---------------------------------------------------------------------------
+
+
+def _sample_hop(index: TemporalIndex, scfg: SamplerConfig,
+                cur_node, cur_time, prev_node, alive, hop_key):
+    """Given per-walk (node, time), returns (next_node, next_time, has_next).
+
+    Pure sampling logic shared by every path; callers control the layout.
+    """
+    W = cur_node.shape[0]
+    a, b = node_range(index, cur_node)
+    c = temporal_cutoff(index, a, b, cur_time)
+    n = b - c
+    has_next = alive & (n > 0)
+
+    use_n2v = (scfg.node2vec_p != 1.0) or (scfg.node2vec_q != 1.0)
+    if not use_n2v:
+        u = jax.random.uniform(hop_key, (W,))
+        k = pick_in_neighborhood(index, scfg, c, b, u, cur_node)
+    else:
+        # rejection sampling on the first-order proposal (paper §2.5)
+        beta_max = node2vec_max_beta(scfg.node2vec_p, scfg.node2vec_q)
+        us = jax.random.uniform(hop_key, (N2V_ROUNDS, 2, W))
+
+        def round_(carry, uv):
+            k_acc, accepted = carry
+            u_r, v_r = uv[0], uv[1]
+            k_r = pick_in_neighborhood(index, scfg, c, b, u_r, cur_node)
+            cand = index.ns_dst[jnp.clip(k_r, 0, index.edge_capacity - 1)]
+            beta = node2vec_beta(index, prev_node, cand,
+                                 scfg.node2vec_p, scfg.node2vec_q)
+            # hops with no previous node accept unconditionally
+            ok = (v_r * beta_max <= beta) | (prev_node < 0)
+            take = ok & ~accepted
+            return (jnp.where(take, k_r, k_acc), accepted | ok), None
+
+        u0 = us[0, 0]
+        k0 = pick_in_neighborhood(index, scfg, c, b, u0, cur_node)
+        (k, _), _ = jax.lax.scan(round_, (k0, jnp.zeros((W,), bool)), us)
+
+    k = jnp.clip(k, 0, index.edge_capacity - 1)
+    next_node = index.ns_dst[k]
+    next_time = index.ns_ts[k]
+    return next_node, next_time, has_next, (a, b, c)
+
+
+def _hop_fullwalk(index, scfg, carry: _Carry, step: jax.Array,
+                  hop_key) -> _Carry:
+    nn, nt, has_next, _ = _sample_hop(
+        index, scfg, carry.cur_node, carry.cur_time, carry.prev_node,
+        carry.alive, hop_key)
+    return _advance(carry, step, nn, nt, has_next)
+
+
+def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
+                 hop_key) -> _Carry:
+    """Sort by (node, time); dedup the cutoff search per segment head."""
+    W = carry.cur_node.shape[0]
+    nc = index.node_capacity
+    node_key = jnp.where(carry.alive, carry.cur_node, nc + 1)
+    perm = jnp.lexsort((carry.cur_time, node_key)).astype(jnp.int32)
+
+    s_node = carry.cur_node[perm]
+    s_time = carry.cur_time[perm]
+    s_prev = carry.prev_node[perm]
+    s_alive = carry.alive[perm]
+
+    # segment heads: first lane of each unique (node, time) pair
+    p_node = jnp.concatenate([jnp.full((1,), -2, jnp.int32), s_node[:-1]])
+    p_time = jnp.concatenate([jnp.full((1,), -2, jnp.int32), s_time[:-1]])
+    head = (s_node != p_node) | (s_time != p_time)
+    seg_id = jnp.cumsum(head.astype(jnp.int32)) - 1
+
+    a, b = node_range(index, s_node)
+    # cutoff computed once per segment head, broadcast to members.
+    c_head = temporal_cutoff(index, a, b, s_time)
+    c = jax.ops.segment_max(jnp.where(head, c_head, 0), seg_id,
+                            num_segments=W)[seg_id]
+    n = b - c
+    has_next_s = s_alive & (n > 0)
+
+    # draws follow original walk order for path-equivalence; permute them
+    use_n2v = (scfg.node2vec_p != 1.0) or (scfg.node2vec_q != 1.0)
+    if not use_n2v:
+        u = jax.random.uniform(hop_key, (W,))[perm]
+        k = pick_in_neighborhood(index, scfg, c, b, u, s_node)
+    else:
+        beta_max = node2vec_max_beta(scfg.node2vec_p, scfg.node2vec_q)
+        us = jax.random.uniform(hop_key, (N2V_ROUNDS, 2, W))[:, :, perm]
+
+        def round_(carry_, uv):
+            k_acc, accepted = carry_
+            u_r, v_r = uv[0], uv[1]
+            k_r = pick_in_neighborhood(index, scfg, c, b, u_r, s_node)
+            cand = index.ns_dst[jnp.clip(k_r, 0, index.edge_capacity - 1)]
+            beta = node2vec_beta(index, s_prev, cand,
+                                 scfg.node2vec_p, scfg.node2vec_q)
+            ok = (v_r * beta_max <= beta) | (s_prev < 0)
+            take = ok & ~accepted
+            return (jnp.where(take, k_r, k_acc), accepted | ok), None
+
+        k0 = pick_in_neighborhood(index, scfg, c, b, us[0, 0], s_node)
+        (k, _), _ = jax.lax.scan(round_, (k0, jnp.zeros((W,), bool)), us)
+
+    k = jnp.clip(k, 0, index.edge_capacity - 1)
+    nn_s = index.ns_dst[k]
+    nt_s = index.ns_ts[k]
+
+    # unsort back to original walk order
+    inv = jnp.zeros((W,), jnp.int32).at[perm].set(
+        jnp.arange(W, dtype=jnp.int32))
+    nn = nn_s[inv]
+    nt = nt_s[inv]
+    has_next = has_next_s[inv]
+    return _advance(carry, step, nn, nt, has_next)
+
+
+def _hop_tiled(index, scfg, sched_cfg, carry: _Carry, step, hop_key) -> _Carry:
+    """Grouped layout with the Pallas kernel executing search+sample."""
+    from repro.kernels import ops as kops
+    W = carry.cur_node.shape[0]
+    node_key = jnp.where(carry.alive, carry.cur_node, index.node_capacity + 1)
+    perm = jnp.lexsort((carry.cur_time, node_key)).astype(jnp.int32)
+    s_node = carry.cur_node[perm]
+    s_time = carry.cur_time[perm]
+    s_alive = carry.alive[perm]
+    u = jax.random.uniform(hop_key, (W,))[perm]
+
+    k, n = kops.walk_step(index, s_node, s_time, u, scfg, sched_cfg)
+    has_next_s = s_alive & (n > 0)
+    k = jnp.clip(k, 0, index.edge_capacity - 1)
+    nn_s = index.ns_dst[k]
+    nt_s = index.ns_ts[k]
+    inv = jnp.zeros((W,), jnp.int32).at[perm].set(jnp.arange(W, dtype=jnp.int32))
+    return _advance(carry, step, nn_s[inv], nt_s[inv], has_next_s[inv])
+
+
+def _advance(carry: _Carry, step, next_node, next_time, has_next) -> _Carry:
+    nodes = carry.nodes.at[:, step + 1].set(
+        jnp.where(has_next, next_node, NODE_PAD).astype(jnp.int32),
+        mode="drop")
+    times = carry.times.at[:, step + 1].set(
+        jnp.where(has_next, next_time, NODE_PAD).astype(jnp.int32),
+        mode="drop")
+    return _Carry(
+        cur_node=jnp.where(has_next, next_node, carry.cur_node),
+        cur_time=jnp.where(has_next, next_time, carry.cur_time),
+        prev_node=jnp.where(has_next, carry.cur_node, carry.prev_node),
+        alive=has_next,
+        nodes=nodes, times=times,
+        lengths=carry.lengths + has_next.astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("wcfg", "scfg", "sched_cfg",
+                                   "collect_stats"))
+def generate_walks(index: TemporalIndex, key: jax.Array,
+                   wcfg: WalkConfig, scfg: SamplerConfig,
+                   sched_cfg: SchedulerConfig,
+                   collect_stats: bool = False) -> WalkResult:
+    """Generate ``wcfg.num_walks`` temporal walks of ≤ ``max_length`` hops."""
+    start_key, walk_key = jax.random.split(key)
+    carry0 = start_walks(index, wcfg, scfg, start_key)
+    L = wcfg.max_length
+    first_hop = carry0.lengths.max() if wcfg.start_mode == "edges" else None
+    # number of remaining hops: start already consumed 1 edge in edges-mode
+    hops = L - 1 if wcfg.start_mode == "edges" else L
+
+    path = sched_cfg.path
+
+    def body(carry, step):
+        hop_key = jax.random.fold_in(walk_key, step)
+        write_pos = step + (1 if wcfg.start_mode == "edges" else 0)
+        if collect_stats:
+            st = sched.dispatch_stats(index, carry.cur_node, carry.alive,
+                                      sched_cfg)
+        else:
+            st = jnp.zeros((sched.NUM_STATS,), jnp.float32)
+        if path == "fullwalk":
+            carry = _hop_fullwalk(index, scfg, carry, write_pos, hop_key)
+        elif path == "grouped":
+            carry = _hop_grouped(index, scfg, carry, write_pos, hop_key)
+        elif path == "tiled":
+            carry = _hop_tiled(index, scfg, sched_cfg, carry, write_pos,
+                               hop_key)
+        else:
+            raise ValueError(f"unknown scheduler path {path!r}")
+        return carry, st
+
+    carry, stats = jax.lax.scan(body, carry0,
+                                jnp.arange(hops, dtype=jnp.int32))
+    return WalkResult(nodes=carry.nodes, times=carry.times,
+                      lengths=carry.lengths,
+                      stats=stats if collect_stats else None)

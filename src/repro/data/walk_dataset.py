@@ -1,0 +1,55 @@
+"""Walks → training data: skipgram pairs (CTDNE-style) and LM token
+sequences (walk-native training, paper conclusion)."""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.core.walk_engine import NODE_PAD
+
+
+def skipgram_pairs(nodes: np.ndarray, lengths: np.ndarray,
+                   window: int = 2, max_pairs: int | None = None,
+                   seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """(center, context) pairs from walk node sequences (numpy, host)."""
+    W, L = nodes.shape
+    centers, contexts = [], []
+    for w in range(W):
+        n = int(lengths[w])
+        seq = nodes[w, :n]
+        for i in range(n):
+            for j in range(max(0, i - window), min(n, i + window + 1)):
+                if i != j:
+                    centers.append(seq[i])
+                    contexts.append(seq[j])
+    c = np.asarray(centers, np.int32)
+    x = np.asarray(contexts, np.int32)
+    if max_pairs is not None and len(c) > max_pairs:
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(len(c), max_pairs, replace=False)
+        c, x = c[idx], x[idx]
+    return c, x
+
+
+def walks_to_lm_batch(nodes: np.ndarray, lengths: np.ndarray,
+                      seq_len: int, batch: int, vocab: int,
+                      pad_id: int = 0, seed: int = 0):
+    """Pack walks into fixed [batch, seq_len] token/label arrays.
+
+    Node ids are the token ids (walk-native LM training); walks shorter
+    than seq_len are concatenated with a separator (vocab-1)."""
+    rng = np.random.default_rng(seed)
+    sep = vocab - 1
+    stream = []
+    order = rng.permutation(nodes.shape[0])
+    for w in order:
+        n = int(lengths[w])
+        if n > 1:
+            stream.extend(int(t) % (vocab - 1) for t in nodes[w, :n])
+            stream.append(sep)
+    need = batch * (seq_len + 1)
+    while len(stream) < need:
+        stream.append(pad_id)
+    arr = np.asarray(stream[:need], np.int32).reshape(batch, seq_len + 1)
+    return arr[:, :-1], arr[:, 1:]

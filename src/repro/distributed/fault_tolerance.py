@@ -1,0 +1,99 @@
+"""Fault tolerance for long-running training: checkpoint/restart driver,
+straggler detection, heartbeat bookkeeping.
+
+Design for 1000+ nodes (DESIGN.md §6): the entire training state is
+(params, opt_state, data cursor, rng) — all checkpointable; the walk
+engine's state is (window edges + rng), rebuilt from the stream cursor.
+Restart is therefore a pure function of the last checkpoint, and the
+elastic restore path (train/checkpoint.py) retargets a different mesh.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.train import checkpoint as ckpt
+
+
+@dataclass
+class StragglerPolicy:
+    """Per-step wall-time watchdog.
+
+    At pod scale a straggling host shows up as a slow collective; the
+    runner cannot see *which* host, but it can see the step-time
+    distribution. Policy: flag when a step exceeds ``threshold`` x the
+    running median; after ``max_flags`` consecutive flags, recommend a
+    checkpoint-and-remesh (the elastic path) instead of waiting.
+    """
+
+    threshold: float = 3.0
+    window: int = 32
+    max_flags: int = 3
+
+    _times: List[float] = field(default_factory=list)
+    _flags: int = 0
+
+    def observe(self, step_s: float) -> str:
+        """Returns 'ok' | 'straggler' | 'remesh'."""
+        self._times.append(step_s)
+        hist = self._times[-self.window:]
+        if len(hist) < 5:
+            return "ok"
+        med = float(np.median(hist[:-1]))
+        if step_s > self.threshold * med:
+            self._flags += 1
+            if self._flags >= self.max_flags:
+                self._flags = 0
+                return "remesh"
+            return "straggler"
+        self._flags = 0
+        return "ok"
+
+
+@dataclass
+class TrainSupervisor:
+    """Checkpoint-every-N supervisor with crash-resume semantics."""
+
+    ckpt_dir: str
+    save_every: int = 100
+    straggler: StragglerPolicy = field(default_factory=StragglerPolicy)
+
+    def resume_step(self) -> int:
+        s = ckpt.latest_step(os.path.join(self.ckpt_dir, "params"))
+        return int(s) if s is not None else 0
+
+    def restore(self, params_like, opt_like, shardings=None):
+        p = ckpt.restore(os.path.join(self.ckpt_dir, "params"), params_like,
+                         shardings)
+        o = ckpt.restore(os.path.join(self.ckpt_dir, "opt"), opt_like,
+                         shardings=None)
+        return p, o
+
+    def run(self, step_fn: Callable, params, opt_state, batches,
+            start_step: int = 0, max_steps: int = 10**9,
+            on_event: Optional[Callable] = None):
+        """Drives training; checkpoints; reports straggler events.
+
+        ``step_fn(params, opt_state, batch) -> (params, opt_state, metrics)``
+        """
+        step = start_step
+        for batch in batches:
+            if step >= max_steps:
+                break
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            verdict = self.straggler.observe(time.perf_counter() - t0)
+            if verdict != "ok" and on_event:
+                on_event(step, verdict)
+            step += 1
+            if step % self.save_every == 0:
+                self.save(params, opt_state, step)
+        return params, opt_state, step
+
+    def save(self, params, opt_state, step: int):
+        ckpt.save(os.path.join(self.ckpt_dir, "params"), params, step)
+        ckpt.save(os.path.join(self.ckpt_dir, "opt"), opt_state, step)

@@ -1,0 +1,248 @@
+"""Sharding rules: parameter/activation PartitionSpecs per architecture.
+
+Scheme (DESIGN.md §6):
+* TP over ``model``: attention heads, FFN hidden, MoE experts (EP), vocab;
+* FSDP over ``data`` (+``pod`` when present): the d_model axis of every
+  large matrix — ZeRO-3-style, XLA inserts the per-layer all-gathers;
+* activations: batch over (pod, data); decode KV caches shard their
+  *sequence* axis over ``model`` (flash-decoding-style split) because kv
+  heads (2..10) rarely divide the model axis;
+* anything small (norms, biases, routers) replicates.
+
+Rules key on parameter-path substrings — param trees are nested dicts with
+stable names, so the rules stay readable and auditable.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path-regex, spec-builder) — first match wins. Builders receive the
+# param shape and the mesh axis names, returning a PartitionSpec.
+_RULES = [
+    # embeddings / unembeddings: vocab x d_model
+    (r"(embed|unembed)/table$", lambda s, ax: P(ax.model, ax.fsdp)),
+    # attention projections [d, H, hd] / [H, hd, d]
+    (r"attn/wq$|attn/wk$|attn/wv$|cross/wq$|cross/wk$|cross/wv$",
+     lambda s, ax: P(ax.fsdp, ax.model, None)),
+    (r"attn/wo$|cross/wo$", lambda s, ax: P(ax.model, None, ax.fsdp)),
+    (r"attn/bq$|attn/bk$|attn/bv$|cross/b[qkv]$",
+     lambda s, ax: P(ax.model, None)),
+    # MLA latents
+    (r"attn/wq_a$|attn/wkv_a$", lambda s, ax: P(ax.fsdp, None)),
+    (r"attn/wq_b$|attn/wk_b$|attn/wv_b$",
+     lambda s, ax: P(None, ax.model, None)),
+    # dense MLP [d, ff] / [ff, d]
+    (r"(mlp|shared|dense)/w_gate$|(mlp|shared|dense)/w_up$",
+     lambda s, ax: P(ax.fsdp, ax.model)),
+    (r"(mlp|shared|dense)/w_down$", lambda s, ax: P(ax.model, ax.fsdp)),
+    # MoE experts [E, d, f] / [E, f, d]  (EP over model)
+    (r"moe/w_gate$|moe/w_up$", lambda s, ax: P(ax.model, ax.fsdp, None)),
+    (r"moe/w_down$", lambda s, ax: P(ax.model, None, ax.fsdp)),
+    (r"moe/router$", lambda s, ax: P(ax.fsdp, None)),
+    # mamba
+    (r"mamba/w_in$", lambda s, ax: P(ax.fsdp, ax.model)),
+    (r"mamba/w_out$", lambda s, ax: P(ax.model, ax.fsdp)),
+    (r"mamba/w_x$", lambda s, ax: P(ax.model, None)),
+    (r"mamba/w_dt$", lambda s, ax: P(None, ax.model)),
+    (r"mamba/(conv_w|conv_b|dt_bias|A_log|D)$",
+     lambda s, ax: _last_axis_model(s, ax)),
+    # xLSTM
+    (r"(mlstm|slstm)/w_up$|slstm/w_gates$|slstm/w_ff1$",
+     lambda s, ax: P(ax.fsdp, ax.model)),
+    (r"(mlstm|slstm)/w_down$|slstm/w_ff2$", lambda s, ax: P(ax.model, ax.fsdp)),
+    (r"mlstm/w(q|k|v)$", lambda s, ax: P(ax.model, None, None)),
+    (r"mlstm/w_if$", lambda s, ax: P(ax.model, None)),
+]
+
+
+import os
+
+
+class AxisNames:
+    """Resolved mesh-axis names; fsdp composes pod+data when present.
+
+    Sharding modes (env ``REPRO_SHARDING_MODE``, also a §Perf knob):
+      hybrid (default) — batch over (pod, data); TP/EP over model.
+      fsdp             — batch over ALL axes (pure data-parallel/ZeRO);
+                         for archs whose head counts don't divide the
+                         model axis this removes attention replication.
+    """
+
+    def __init__(self, mesh: Mesh):
+        names = mesh.axis_names
+        mode = os.environ.get("REPRO_SHARDING_MODE", "hybrid")
+        self.model = "model" if "model" in names else None
+        if "pod" in names and "data" in names:
+            self.fsdp = ("pod", "data")
+        elif "data" in names:
+            self.fsdp = "data"
+        else:
+            self.fsdp = None
+        if mode == "fsdp" and self.model is not None:
+            parts = self.fsdp if isinstance(self.fsdp, tuple) \
+                else ((self.fsdp,) if self.fsdp else ())
+            self.batch = parts + (self.model,)
+        else:
+            self.batch = self.fsdp
+
+    def sizes(self, mesh: Mesh):
+        return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _last_axis_model(shape, ax):
+    spec = [None] * (len(shape) - 1) + [ax.model]
+    return P(*spec)
+
+
+def _divisible(shape, spec: P, mesh: Mesh) -> P:
+    """Drop sharding on axes the mesh doesn't divide (e.g. kv=10 over 16)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, s in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if s is None:
+            out.append(None)
+            continue
+        parts = s if isinstance(s, tuple) else (s,)
+        total = int(np.prod([sizes[p] for p in parts]))
+        out.append(s if dim % total == 0 else None)
+    return P(*out)
+
+
+def param_pspec(path: str, shape, mesh: Mesh) -> P:
+    ax = AxisNames(mesh)
+    for pattern, builder in _RULES:
+        if re.search(pattern, path):
+            return _divisible(shape, builder(shape, ax), mesh)
+    return P()   # norms, small biases: replicated
+
+
+def tree_pspecs(tree, mesh: Mesh):
+    """Pytree of PartitionSpecs mirroring ``tree`` (params or opt state)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for pathkeys, leaf in flat:
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in pathkeys)
+        if hasattr(leaf, "shape"):
+            # strip optimizer-state prefixes (mu/nu/error shard like params)
+            specs.append(param_pspec(path, leaf.shape, mesh))
+        else:
+            specs.append(P())
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(tree, mesh: Mesh):
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        tree_pspecs(tree, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The ambient mesh installed by ``with mesh:`` (legacy context)."""
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def hint(x, *logical):
+    """with_sharding_constraint using logical axes, no-op without a mesh.
+
+    Logical names: "batch" -> (pod, data); "model" -> model; None.
+    Model code calls this so activation layouts are pinned where XLA's
+    propagation would otherwise pick pathological ones (e.g. all-reducing
+    full logits over the fsdp axis).
+    """
+    m = current_mesh()
+    if m is None:
+        return x
+    ax = AxisNames(m)
+    sizes = dict(zip(m.axis_names, m.devices.shape))
+    spec = []
+    used = set()
+    for l, dim in zip(logical, x.shape):
+        if l == "batch" and ax.batch is not None:
+            parts = ax.batch if isinstance(ax.batch, tuple) else (ax.batch,)
+            parts = tuple(p for p in parts if p not in used)
+            total = int(np.prod([sizes[p] for p in parts])) if parts else 0
+            if parts and dim % total == 0:
+                spec.append(parts if len(parts) > 1 else parts[0])
+                used.update(parts)
+            else:
+                spec.append(None)
+        elif l == "model" and ax.model is not None and ax.model not in used:
+            ok = dim % sizes[ax.model] == 0
+            spec.append(ax.model if ok else None)
+            if ok:
+                used.add(ax.model)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(m, P(*spec)))
+
+
+def batch_pspec(mesh: Mesh, batch_size: int) -> P:
+    """tokens/labels [B, S]: B over (pod, data) when divisible, else S."""
+    ax = AxisNames(mesh)
+    if ax.batch is None:
+        return P()
+    parts = ax.batch if isinstance(ax.batch, tuple) else (ax.batch,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = int(np.prod([sizes[p] for p in parts]))
+    if batch_size % total == 0:
+        return P(ax.batch, None)
+    # sequence sharding (SP) fallback for tiny batches (long-context decode)
+    return P(None, None)
+
+
+def batch_shardings(cfg, mesh: Mesh, batch: dict):
+    """Shardings for a train/prefill batch dict."""
+    out = {}
+    for k, v in batch.items():
+        if k in ("tokens", "labels"):
+            out[k] = NamedSharding(mesh, batch_pspec(mesh, v.shape[0]))
+        else:  # frames/patches [B, S, d]
+            bspec = batch_pspec(mesh, v.shape[0])
+            out[k] = NamedSharding(
+                mesh, P(bspec[0] if len(bspec) else None, None, None))
+    return out
+
+
+def cache_pspec(mesh: Mesh, shape, batch_size: int) -> P:
+    """Decode caches: batch over (pod,data) when divisible; the sequence
+    axis over model (split-KV decode). Works for [B,S,Hkv,D] (GQA),
+    [B,S,R] (MLA latent), and recurrent states [B, ...]."""
+    ax = AxisNames(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = ax.batch if isinstance(ax.batch, tuple) else (ax.batch,)
+    btotal = int(np.prod([sizes[p] for p in parts])) if ax.batch else 1
+    b_ax = ax.batch if (ax.batch and batch_size % btotal == 0) else None
+    spec = [None, b_ax]   # leading stack axis (scan periods), then batch
+    m = sizes.get("model", 1)
+    for dim in shape[2:]:
+        if ("model" not in [x for x in spec if x] and dim >= m
+                and dim % m == 0 and dim > 8):
+            spec.append("model")
+        else:
+            spec.append(None)
+    return P(*spec[:len(shape) + 0])
+
+
+def state_shardings(mesh: Mesh, state, batch_size: int):
+    def one(leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim < 2:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, cache_pspec(mesh, leaf.shape, batch_size))
+    return jax.tree.map(one, state)

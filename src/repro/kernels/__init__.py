@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+walk_step.py     — cooperative walk step (smem-panel analog, §2.4.3)
+weight_prefix.py — fused exp + blocked scan (ingestion "weight" stage)
+ops.py           — jit'd dispatch wrappers (kernel vs fallback)
+ref.py           — pure-jnp oracles
+"""

@@ -1,0 +1,80 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``walk_step`` is the tiled-path hop primitive used by the walk engine
+(SchedulerConfig.path == "tiled"): it builds the fixed-shape task table,
+runs the kernel for in-tile lanes, and serves oversize lanes (neighborhood
+wider than the staged window — the paper's G-axis "global" fallback tier)
+through the pure-jnp path, merging by mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SamplerConfig, SchedulerConfig
+from repro.core import scheduler as sched
+from repro.core.samplers import pick_in_neighborhood
+from repro.core.temporal_index import (
+    TemporalIndex,
+    node_range,
+    temporal_cutoff,
+)
+from repro.kernels.walk_step import walk_step_tiled
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def walk_step(index: TemporalIndex, s_node: jax.Array, s_time: jax.Array,
+              u: jax.Array, scfg: SamplerConfig, cfg: SchedulerConfig,
+              *, interpret: bool | None = None):
+    """Hop search+sample for walks sorted by node. Returns (k_global, n)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    W = s_node.shape[0]
+    E = index.edge_capacity
+    TW, TE = cfg.tile_walks, cfg.tile_edges
+    if W % TW or E % TE:
+        raise ValueError(f"walks {W} / edges {E} not multiples of tile "
+                         f"({TW}, {TE})")
+
+    a, b = node_range(index, s_node)
+    # --- task table: align each tile's window to a TE block --------------
+    T = W // TW
+    a_t = a.reshape(T, TW)
+    b_t = b.reshape(T, TW)
+    base_blocks = jnp.min(a_t, axis=1) // TE
+    base_blocks = jnp.clip(base_blocks, 0, E // TE - 2)
+    base = base_blocks * TE
+    lo = (a_t - base[:, None]).reshape(W)
+    hi = (b_t - base[:, None]).reshape(W)
+    oversize = (lo < 0) | (hi > 2 * TE - 1)
+    lo_k = jnp.clip(lo, 0, 2 * TE - 1)
+    hi_k = jnp.clip(hi, 0, 2 * TE - 1)
+
+    if scfg.mode == "weight" and scfg.bias == "linear":
+        pfx = index.plin[:E]
+        pfx_shift = index.plin[1:E + 1]
+    else:
+        pfx = index.pexp[:E]
+        pfx_shift = index.pexp[1:E + 1]
+    nc = index.node_capacity
+    tbase = index.node_tbase[jnp.clip(s_node, 0, nc - 1)]
+
+    k_loc, n_k, _, _ = walk_step_tiled(
+        index.ns_ts[:E], index.ns_dst[:E], pfx, pfx_shift,
+        base_blocks.astype(jnp.int32), s_time, lo_k, hi_k, u, tbase,
+        mode=scfg.mode, bias=scfg.bias, tile_walks=TW, tile_edges=TE,
+        interpret=interpret)
+    tile_of_walk = jnp.arange(W, dtype=jnp.int32) // TW
+    k_kernel = base_blocks[tile_of_walk] * TE + k_loc
+
+    # --- global fallback for oversize lanes (paper's G-cap fallback) -----
+    c = temporal_cutoff(index, a, b, s_time)
+    n_fb = b - c
+    k_fb = pick_in_neighborhood(index, scfg, c, b, u, s_node)
+
+    k = jnp.where(oversize, k_fb, k_kernel)
+    n = jnp.where(oversize, n_fb, n_k)
+    return k, n

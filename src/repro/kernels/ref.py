@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each oracle implements exactly the tile-level semantics of its kernel on
+full arrays, so ``assert_allclose(kernel(...), ref(...))`` across
+shape/dtype sweeps is meaningful. The oracles themselves are cross-checked
+against the engine's own samplers in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.samplers import index_exponential, index_linear, index_uniform
+
+
+def walk_step_ref(ns_ts, ns_dst, pfx, pfx_shift,
+                  base_blocks, time, lo, hi, u, tbase,
+                  *, mode: str, bias: str, tile_walks: int, tile_edges: int):
+    """Oracle for kernels/walk_step.py with identical inputs/outputs."""
+    W = time.shape[0]
+    E = ns_ts.shape[0]
+    TW, TE = tile_walks, tile_edges
+    T = W // TW
+    tile_of_walk = jnp.arange(W, dtype=jnp.int32) // TW
+    base = base_blocks[tile_of_walk] * TE            # element offset per walk
+
+    glo = base + lo
+    ghi = base + hi
+
+    # temporal cutoff by global dense count (same math as the kernel)
+    pos = jnp.arange(E, dtype=jnp.int32)
+    # counting per walk over the full array is O(W*E) — fine as an oracle.
+    in_region = (pos[None, :] >= glo[:, None]) & (pos[None, :] < ghi[:, None])
+    cnt = jnp.sum(in_region & (ns_ts[None, :] <= time[:, None]), axis=1)
+    c = glo + cnt.astype(jnp.int32)
+    n = ghi - c
+
+    if mode == "index":
+        picker = {"uniform": index_uniform, "linear": index_linear,
+                  "exponential": index_exponential}[bias]
+        k = c + picker(u, n)
+    elif mode == "weight":
+        p_c = pfx[jnp.clip(c, 0, E - 1)]
+        p_hi = pfx[jnp.clip(ghi, 0, E - 1)]
+        if bias == "exponential":
+            total = p_hi - p_c
+            target = p_c + u * total
+            below = (pos[None, :] >= c[:, None]) & (pos[None, :] < ghi[:, None]) \
+                & (pfx_shift[None, :] < target[:, None])
+            k = c + jnp.sum(below, axis=1).astype(jnp.int32)
+            k = jnp.where(total > 0, k, c + index_uniform(u, n))
+        elif bias == "linear":
+            ts_c = ns_ts[jnp.clip(c, 0, E - 1)]
+            delta = (ts_c - tbase).astype(jnp.float32)
+            pl_c = pfx[jnp.clip(c, 0, E - 1)]
+            s = (pfx_shift[None, :] - pl_c[:, None]) \
+                - (pos[None, :] + 1 - c[:, None]).astype(jnp.float32) * delta[:, None]
+            total = (p_hi - pl_c) - (ghi - c).astype(jnp.float32) * delta
+            below = (pos[None, :] >= c[:, None]) & (pos[None, :] < ghi[:, None]) \
+                & (s < (u * total)[:, None])
+            k = c + jnp.sum(below, axis=1).astype(jnp.int32)
+            k = jnp.where(total > 0, k, c + index_uniform(u, n))
+        elif bias == "uniform":
+            k = c + index_uniform(u, n)
+        else:
+            raise ValueError(bias)
+    else:
+        raise ValueError(mode)
+
+    k = jnp.clip(k, 0, E - 1)
+    has = n > 0
+    k_local = jnp.where(has, k - base, 0)
+    dst_pick = jnp.where(has, ns_dst[k], 0)
+    ts_pick = jnp.where(has, ns_ts[k], 0)
+    return k_local, n, dst_pick, ts_pick
+
+
+def weight_prefix_ref(dt: jax.Array, valid: jax.Array,
+                      scale: float = 1.0) -> jax.Array:
+    """Oracle for kernels/weight_prefix.py: fused exp + masked cumsum.
+
+    dt[i] = ts_i − t_ref[src_i] (≤ 0 for real edges). Returns the exclusive
+    prefix array P of length E+1 with P[0] = 0.
+    """
+    w = jnp.where(valid, jnp.exp(scale * dt.astype(jnp.float32)), 0.0)
+    return jnp.concatenate([jnp.zeros((1,), jnp.float32), jnp.cumsum(w)])

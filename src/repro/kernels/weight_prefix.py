@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused exp-weight + prefix-sum (paper Table 4 "weight").
+
+The cumulative-weight precomputation is one of the paper's four ingestion
+stages (up to 26% of per-batch time on Delicious). On TPU we fuse the
+elementwise exp with the scan: the grid walks edge blocks **sequentially**
+(TPU grids are sequential per core), carrying the running sum in an SMEM
+scratch cell — a classic carry-propagating blocked scan with one HBM read
+and one HBM write per element.
+
+Block shape: (1, tile) over a (1, E) view — TPU wants ≥2-D refs with the
+lane dim last; ``tile`` is a multiple of 128 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(scale, dt_ref, valid_ref, out_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = 0.0
+
+    w = jnp.where(valid_ref[...],
+                  jnp.exp(scale * dt_ref[...].astype(jnp.float32)), 0.0)
+    c = jnp.cumsum(w, axis=-1)
+    out_ref[...] = c + carry_ref[0]
+    carry_ref[0] = carry_ref[0] + c[0, -1]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "tile", "interpret"))
+def weight_prefix(dt: jax.Array, valid: jax.Array, *, scale: float = 1.0,
+                  tile: int = 1024, interpret: bool = True) -> jax.Array:
+    """Fused exp+scan. Returns exclusive prefix P of length E+1, P[0]=0."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    E = dt.shape[0]
+    assert E % tile == 0, (E, tile)
+    grid = (E // tile,)
+    inc = pl.pallas_call(
+        functools.partial(_kernel, scale),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i)),
+                  pl.BlockSpec((1, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, E), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(dt[None, :], valid[None, :])
+    return jnp.concatenate([jnp.zeros((1,), jnp.float32), inc[0]])

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) combination:
+  * ``train_4k``                    lowers train_step,
+  * ``prefill_32k``                 lowers prefill_step,
+  * ``decode_32k`` / ``long_500k``  lower serve_step,
+with production shardings, then ``.lower().compile()`` — proving the
+distribution config is coherent: sharding mismatches, compile-time OOMs
+and unsupported collectives all surface here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES_BY_NAME, get_config, list_archs, shapes_for
+from repro.distributed import sharding as shd
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    abstract_opt_state,
+    abstract_params,
+    decode_specs,
+    input_specs,
+)
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+
+def num_token_groups(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    g = sizes.get("data", 1) * sizes.get("pod", 1)
+    if os.environ.get("REPRO_SHARDING_MODE") == "fsdp":
+        g *= sizes.get("model", 1)    # batch spans every axis
+    return g
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               compile_: bool = True, opt_overrides=None):
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    groups = num_token_groups(mesh)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+
+    params_abs = abstract_params(cfg)
+    param_shard = shd.tree_shardings(params_abs, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(**(opt_overrides or {}))
+            step = make_train_step(cfg, opt_cfg, num_groups=groups)
+            opt_abs = abstract_opt_state(cfg, opt_cfg)
+            opt_shard = shd.tree_shardings(opt_abs, mesh)
+            batch = input_specs(cfg, shape)
+            bshard = shd.batch_shardings(cfg, mesh, batch)
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_shard, opt_shard, bshard),
+                out_shardings=(param_shard, opt_shard, None),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, num_groups=groups)
+            batch = input_specs(cfg, shape)
+            bshard = shd.batch_shardings(cfg, mesh, batch)
+            lowered = jax.jit(
+                step, in_shardings=(param_shard, bshard),
+            ).lower(params_abs, batch)
+        else:  # decode
+            step = make_serve_step(cfg, num_groups=groups)
+            tokens, state = decode_specs(cfg, shape)
+            tshard = NamedSharding(
+                mesh, shd.batch_pspec(mesh, shape.global_batch))
+            sshard = shd.state_shardings(mesh, state, shape.global_batch)
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_shard, tshard, sshard),
+                out_shardings=(None, sshard),
+                donate_argnums=(2,),
+            ).lower(params_abs, tokens, state)
+
+        if not compile_:
+            return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "status": "lowered"}
+        compiled = lowered.compile()
+
+    report = rl.analyze(arch, shape_name, mesh_name, chips, compiled,
+                        rl.model_flops_for(cfg, shape))
+    row = report.row()
+    row["status"] = "ok"
+    return row
+
+
+def run_all(multi_pod_only=False, single_pod_only=False, archs=None,
+            out_path=None):
+    rows = []
+    meshes = [False, True]
+    if multi_pod_only:
+        meshes = [True]
+    if single_pod_only:
+        meshes = [False]
+    for arch in (archs or list_archs()):
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            for mp in meshes:
+                t0 = time.time()
+                try:
+                    row = lower_cell(arch, shape.name, multi_pod=mp)
+                    row["compile_s"] = round(time.time() - t0, 1)
+                    print(f"[OK] {arch:22s} {shape.name:12s} "
+                          f"mesh={'2x16x16' if mp else '16x16':8s} "
+                          f"compile={row['compile_s']:7.1f}s "
+                          f"bottleneck={row.get('bottleneck', '?'):10s} "
+                          f"mem={row.get('peak_mem_gib', 0):.2f}GiB",
+                          flush=True)
+                except Exception as e:
+                    traceback.print_exc()
+                    row = {"arch": arch, "shape": shape.name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": f"FAIL: {type(e).__name__}: {e}"}
+                    print(f"[FAIL] {arch} {shape.name} mp={mp}: {e}",
+                          flush=True)
+                rows.append(row)
+                if out_path:
+                    with open(out_path, "w") as f:
+                        json.dump(rows, f, indent=1, default=str)
+    n_ok = sum(r.get("status") == "ok" for r in rows)
+    print(f"\n{n_ok}/{len(rows)} cells compiled OK")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        rows = run_all(multi_pod_only=args.multi_pod_only,
+                       single_pod_only=args.single_pod_only,
+                       archs=[args.arch] if args.arch else None,
+                       out_path=args.out)
+        sys.exit(0 if all(r.get("status") == "ok" for r in rows) else 1)
+
+    row = lower_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+    print(json.dumps(row, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

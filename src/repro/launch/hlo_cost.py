@@ -1,0 +1,315 @@
+"""Static cost analysis over optimized (post-SPMD) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's HLO cost analysis counts a
+``while`` body ONCE, ignoring the trip count — and this framework lowers
+every layer stack, attention chunk loop and xent chunk loop as scans, so
+the builtin numbers undercount flops/bytes/collectives by ~depth x.
+(Verified: a 10-iteration scanned matmul reports 1/10 the flops of its
+unrolled twin.)
+
+This analyzer parses the optimized HLO text into computations, builds a
+per-computation symbol table (op -> shape), and computes:
+
+* **flops** — 2·(output elems)·(contraction elems) for every ``dot``
+  (recursing into fusions/calls), multiplied through nested while-loop
+  trip counts (extracted from each loop condition's comparison constant);
+* **bytes** — an HBM-traffic model: for each op at computation level,
+  operand + result bytes; fusions count only their operands/results
+  (internal intermediates live in registers/VMEM — closer to real traffic
+  than XLA's "bytes accessed", which double-counts fusion internals);
+* **collective payload bytes** per kind (all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute), trip-multiplied.
+
+Everything here operates on per-partition HLO, so results are per-chip.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>.+?)\s+"
+    r"(?P<opcode>[\w\-]+)\((?P<rest>.*)$")
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(.*\)\s*->")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """(total elements, total bytes) of a possibly-tuple HLO type string."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    # scalar like "f32[]" has empty dims -> n = 1 (handled above: no digits
+    # means the loop over "" leaves n = 1)
+    return elems, nbytes
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    type_str: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)   # name -> type
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+
+
+def _split_operands(rest: str) -> Tuple[List[str], str]:
+    """Split 'a, b, c), attrs...' at the closing paren of the call."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner = rest[:i]
+                attrs = rest[i + 1:]
+                ops = [o.strip() for o in _split_top_commas(inner)]
+                return ops, attrs
+    return [o.strip() for o in _split_top_commas(rest)], ""
+
+
+def _split_top_commas(s: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [x for x in out if x.strip()]
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = _COMP_HEAD_RE.match(s)
+            if m:
+                cur = Computation(m.group("name"))
+                comps[cur.name] = cur
+                if s.startswith("ENTRY"):
+                    entry = cur.name
+                # parameters appear in the header: bind their types
+                for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[\w\[\],{}\s/]+?))(?:,|\)\s*->)", s):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+                continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        operands, attrs = _split_operands(m.group("rest"))
+        op = Op(name=m.group("name"), opcode=m.group("opcode"),
+                type_str=m.group("type"), operands=operands, attrs=attrs)
+        cur.ops.append(op)
+        cur.symbols[op.name] = op.type_str
+    return comps, entry
+
+
+def _operand_type(comp: Computation, operand: str) -> str:
+    # operands look like "%name", "%name.1", "s32[] constant(5)", etc.
+    name = operand.strip().lstrip("%").split(" ")[0]
+    return comp.symbols.get(name, operand)
+
+
+def _called(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out_elems, _ = shape_elems_bytes(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    lhs_type = _operand_type(comp, op.operands[0]) if op.operands else ""
+    mm = _SHAPE_RE.search(lhs_type)
+    k = 1
+    if mm:
+        dims = [int(x) for x in mm.group(2).split(",") if x]
+        for c in cdims:
+            if c < len(dims):
+                k *= dims[c]
+    return 2.0 * out_elems * max(k, 1)
+
+
+def _while_trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Trip count of a scan-style while: the loop bound is the comparison
+    constant in the condition. XLA may wrap the compare in a fusion, so we
+    take the largest integer constant present in the condition computation
+    (iteration counters contribute only 0/1)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 0
+    stack = [cond]
+    seen = set()
+    while stack:
+        c = stack.pop()
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        for op in c.ops:
+            if op.opcode == "constant" and op.operands:
+                mv = re.match(r"^\s*(\d+)", op.operands[0])
+                if mv:
+                    best = max(best, int(mv.group(1)))
+            for key in ("calls", "to_apply"):
+                called = _called(op.attrs, key)
+                if called and called in comps:
+                    stack.append(comps[called])
+    return max(best, 1)
+
+
+_ELEMENTWISE_FLOP_OPS = {"add", "subtract", "multiply", "divide", "maximum",
+                         "minimum", "compare", "select", "and", "or", "xor"}
+_TRANSCENDENTAL_OPS = {"exponential", "log", "rsqrt", "sqrt", "tanh",
+                       "logistic", "power", "sine", "cosine", "expm1",
+                       "log1p", "erf"}
+
+
+def _comp_cost(comps: Dict[str, Computation], name: str,
+               memo: Dict[str, CostTotals], *, inside_fusion: bool,
+               ) -> CostTotals:
+    key = f"{name}|{inside_fusion}"
+    if key in memo:
+        return memo[key]
+    comp = comps.get(name)
+    total = CostTotals()
+    if comp is None:
+        memo[key] = total
+        return total
+    for op in comp.ops:
+        oc = op.opcode
+        if oc == "while":
+            body = _called(op.attrs, "body")
+            cond = _called(op.attrs, "condition")
+            trips = _while_trip_count(comps, cond) if cond else 1
+            if body:
+                total.add(_comp_cost(comps, body, memo,
+                                     inside_fusion=False), trips)
+            continue
+        if oc in ("fusion",):
+            called = _called(op.attrs, "calls")
+            if called:
+                sub = _comp_cost(comps, called, memo, inside_fusion=True)
+                # flops recurse; bytes = fusion I/O only
+                total.flops += sub.flops
+                total.transcendentals += sub.transcendentals
+                for k, v in sub.collectives.items():
+                    total.collectives[k] = total.collectives.get(k, 0) + v
+            if not inside_fusion:
+                _, ob = shape_elems_bytes(op.type_str)
+                ib = sum(shape_elems_bytes(_operand_type(comp, o))[1]
+                         for o in op.operands)
+                total.bytes += ob + ib
+            continue
+        if oc in ("call", "conditional", "sort", "reduce", "reduce-window",
+                  "scatter", "map", "select-and-scatter", "custom-call"):
+            for k in ("to_apply", "called_computations", "calls",
+                      "branch_computations"):
+                called = _called(op.attrs, k)
+                if called:
+                    sub = _comp_cost(comps, called, memo,
+                                     inside_fusion=inside_fusion)
+                    total.flops += sub.flops
+                    total.transcendentals += sub.transcendentals
+        if oc == "dot":
+            total.flops += _dot_flops(comp, op)
+        elif oc == "convolution":
+            # rough: 2 * out_elems * (kernel elems) — models here use no
+            # big convs; keep conservative
+            out_e, _ = shape_elems_bytes(op.type_str)
+            k_e = 1
+            if len(op.operands) > 1:
+                k_e, _ = shape_elems_bytes(_operand_type(comp,
+                                                         op.operands[1]))
+            total.flops += 2.0 * out_e * max(k_e, 1) ** 0.5
+        elif oc in _ELEMENTWISE_FLOP_OPS:
+            out_e, _ = shape_elems_bytes(op.type_str)
+            total.flops += out_e
+        elif oc in _TRANSCENDENTAL_OPS:
+            out_e, _ = shape_elems_bytes(op.type_str)
+            total.transcendentals += out_e
+
+        base = oc.replace("-start", "")
+        if base in COLLECTIVES and not oc.endswith("-done"):
+            _, ob = shape_elems_bytes(op.type_str)
+            total.collectives[base] = total.collectives.get(base, 0.0) + ob
+
+        if not inside_fusion and oc not in ("parameter", "constant",
+                                            "get-tuple-element", "tuple",
+                                            "bitcast"):
+            _, ob = shape_elems_bytes(op.type_str)
+            ib = sum(shape_elems_bytes(_operand_type(comp, o))[1]
+                     for o in op.operands)
+            total.bytes += ob + ib
+    memo[key] = total
+    return total
+
+
+def analyze_hlo_text(text: str) -> CostTotals:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return CostTotals()
+    memo: Dict[str, CostTotals] = {}
+    return _comp_cost(comps, entry, memo, inside_fusion=False)

@@ -1,0 +1,20 @@
+"""Production mesh construction (multi-pod dry-run deliverable).
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds a leading pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,49 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSON."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def render(rows, mesh_filter=None):
+    out = []
+    out.append("| arch | shape | mesh | t_compute | t_memory | t_collective"
+               " | bottleneck | 6ND/HLO | roofline-frac | mem/chip |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"FAILED: {r['status']} |||||||")
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} "
+            f"| {fmt_s(r['t_collective_s'])} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.2e} "
+            f"| {r['peak_mem_gib']:.1f}GiB |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    rows = json.load(open(path))
+    print("## Single-pod (16x16 = 256 chips)\n")
+    print(render(rows, "16x16"))
+    print("\n## Multi-pod (2x16x16 = 512 chips)\n")
+    print(render(rows, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract batch for train/prefill;
+``decode_specs`` additionally returns the abstract decode state. Modality
+frontends are stubs: precomputed frame/patch embeddings appear directly as
+inputs (assignment note for [audio]/[vlm] archs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+
+Spec = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    toks = Spec((B, S), jnp.int32)
+    batch: Dict[str, Any] = {"tokens": toks}
+    if cfg.family == "vlm":
+        n_p = min(M.N_PATCHES, S // 2)
+        batch["tokens"] = Spec((B, S - n_p), jnp.int32)
+        batch["patches"] = Spec((B, n_p, cfg.d_model), dt)
+    if cfg.family == "enc_dec":
+        batch["frames"] = Spec((B, M.ENC_FRAMES, cfg.d_model), dt)
+    if shape.kind == "train":
+        batch["labels"] = Spec(batch["tokens"].shape, jnp.int32)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(tokens, state) abstract values for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = Spec((B, 1), jnp.int32)
+    state = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, B, S))
+    return tokens, state
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg):
+    from repro.train.optimizer import init_opt_state
+    return jax.eval_shape(lambda p: init_opt_state(p, opt_cfg),
+                          abstract_params(cfg))

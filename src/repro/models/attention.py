@@ -1,0 +1,331 @@
+"""Attention: GQA (optional QKV bias, RoPE/M-RoPE), MLA (DeepSeek-V2),
+cross-attention, with three execution regimes:
+
+* ``train/prefill`` — memory-efficient chunked attention (flash-style
+  running softmax over KV blocks, scanned over Q blocks) so 32k contexts
+  lower without materializing [S, S] scores;
+* ``decode`` — one-token query against a functional KV cache
+  (dynamic_update_slice); MLA decodes in latent space via the absorb trick
+  (the production-grade path — scores against the compressed cache);
+* ``windowed decode`` — fixed-size ring cache for sliding-window layers
+  (Jamba long-context): memory O(window), not O(seq).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models.layers import apply_positional, apply_rope, truncated_normal
+
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, att: AttentionConfig, d_model: int):
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d_model)
+    if att.kind == "gqa":
+        p = {
+            "wq": truncated_normal(ks[0], (d_model, att.n_heads, att.head_dim), s),
+            "wk": truncated_normal(ks[1], (d_model, att.n_kv_heads, att.head_dim), s),
+            "wv": truncated_normal(ks[2], (d_model, att.n_kv_heads, att.head_dim), s),
+            "wo": truncated_normal(ks[3], (att.n_heads, att.head_dim, d_model),
+                                   1.0 / math.sqrt(att.n_heads * att.head_dim)),
+        }
+        if att.qkv_bias:
+            p["bq"] = jnp.zeros((att.n_heads, att.head_dim), jnp.float32)
+            p["bk"] = jnp.zeros((att.n_kv_heads, att.head_dim), jnp.float32)
+            p["bv"] = jnp.zeros((att.n_kv_heads, att.head_dim), jnp.float32)
+        return p
+    if att.kind == "mla":
+        qk_dim = att.qk_nope_head_dim + att.qk_rope_head_dim
+        p = {
+            # query path (optionally low-rank)
+            "wq_a": truncated_normal(ks[0], (d_model, att.q_lora_rank), s),
+            "q_norm": jnp.ones((att.q_lora_rank,), jnp.float32),
+            "wq_b": truncated_normal(
+                ks[1], (att.q_lora_rank, att.n_heads, qk_dim),
+                1.0 / math.sqrt(att.q_lora_rank)),
+            # kv latent path
+            "wkv_a": truncated_normal(
+                ks[2], (d_model, att.kv_lora_rank + att.qk_rope_head_dim), s),
+            "kv_norm": jnp.ones((att.kv_lora_rank,), jnp.float32),
+            "wk_b": truncated_normal(
+                ks[3], (att.kv_lora_rank, att.n_heads, att.qk_nope_head_dim),
+                1.0 / math.sqrt(att.kv_lora_rank)),
+            "wv_b": truncated_normal(
+                ks[4], (att.kv_lora_rank, att.n_heads, att.v_head_dim),
+                1.0 / math.sqrt(att.kv_lora_rank)),
+            "wo": truncated_normal(
+                ks[5], (att.n_heads, att.v_head_dim, d_model),
+                1.0 / math.sqrt(att.n_heads * att.v_head_dim)),
+        }
+        return p
+    raise ValueError(att.kind)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — pure JAX reference implementation
+# ---------------------------------------------------------------------------
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                       window: int = 0):
+    """q: [B, Sq, H, D]; k/v: [B, Skv, Hkv, D(v)]. Running-softmax over KV
+    chunks, scanned over Q chunks. GQA expands via head grouping."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    qc = Q_CHUNK if Sq > Q_CHUNK else Sq
+    kc = KV_CHUNK if Skv > KV_CHUNK else Skv
+    nq = (Sq + qc - 1) // qc
+    nk = (Skv + kc - 1) // kc
+    # pad to multiples
+    q = jnp.pad(q, ((0, 0), (0, nq * qc - Sq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, nk * kc - Skv), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, nk * kc - Skv), (0, 0), (0, 0)))
+
+    kq = k.reshape(B, nk, kc, Hkv, D)
+    vq = v.reshape(B, nk, kc, Hkv, Dv)
+    qq = q.reshape(B, nq, qc, H, D)
+
+    kv_pos = jnp.arange(nk * kc).reshape(nk, kc)
+    kv_valid = kv_pos < Skv
+
+    def q_block(carry, qi):
+        from repro.distributed.sharding import hint
+        qb = hint(qq[:, qi], "batch", None, "model", None)  # [B, qc, H, D]
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_block(acc, ki):
+            m, l, o = acc
+            kb = kq[:, ki]                    # [B, kc, Hkv, D]
+            vb = vq[:, ki]
+            kb_r = jnp.repeat(kb, rep, axis=2)
+            vb_r = jnp.repeat(vb, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb_r) * scale
+            mask = kv_valid[ki][None, None, None, :]
+            if causal:
+                mask = mask & (kv_pos[ki][None, None, None, :]
+                               <= q_pos[None, None, :, None])
+            if window:
+                mask = mask & (kv_pos[ki][None, None, None, :]
+                               > q_pos[None, None, :, None] - window)
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            o_new = o * corr[..., None] \
+                + jnp.einsum("bhqk,bkhd->bhqd", p.astype(vb_r.dtype), vb_r)
+            return (m_new, l_new, o_new), None
+
+        m0 = hint(jnp.full((B, H, qc), -1e30, jnp.float32),
+                  "batch", "model", None)
+        l0 = hint(jnp.zeros((B, H, qc), jnp.float32), "batch", "model", None)
+        o0 = hint(jnp.zeros((B, H, qc, Dv), jnp.float32),
+                  "batch", "model", None, None)
+        (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0),
+                                    jnp.arange(nk))
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.astype(q.dtype)     # [B, H, qc, Dv]
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # outs: [nq, B, H, qc, Dv] -> [B, Sq, H, Dv]
+    out = jnp.moveaxis(outs, 0, 1)            # [B, nq, H, qc, Dv]
+    out = out.transpose(0, 2, 1, 3, 4)        # [B, H, nq, qc, Dv]
+    out = out.reshape(B, H, nq * qc, Dv).transpose(0, 2, 1, 3)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # [B, S_max, Hkv, D] (ring buffer when windowed)
+    v: jax.Array
+    pos: jax.Array      # int32 scalar: tokens already written
+
+
+def gqa_forward(params, att: AttentionConfig, x, positions, *,
+                causal: bool = True, window: int = 0,
+                kv: Optional[tuple] = None):
+    """Full-sequence forward (train / prefill).
+
+    kv: optional externally-provided (k_input, v_input, kv_positions) for
+    cross-attention (encoder memory); when given, causal must be False.
+    """
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    src = x if kv is None else kv[0]
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src if kv is None else kv[1],
+                   params["wv"].astype(dtype))
+    if att.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    q = apply_positional(att, q, positions)
+    kpos = positions if kv is None else kv[2]
+    k = apply_positional(att, k, kpos)
+    out = _chunked_attention(q, k, v, causal=causal, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+def gqa_init_cache(att: AttentionConfig, batch: int, max_seq: int,
+                   dtype) -> KVCache:
+    size = att.window if att.window else max_seq
+    shape = (batch, size, att.n_kv_heads, att.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def gqa_decode(params, att: AttentionConfig, x, cache: KVCache, *,
+               window: int = 0):
+    """One-token decode: x [B, 1, d]. Returns (out, new_cache)."""
+    dtype = x.dtype
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if att.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    pos = cache.pos
+    posf = jnp.broadcast_to(pos, (B, 1))
+    if att.rope == "mrope":
+        pos3 = jnp.broadcast_to(pos, (B, 1, 3))
+        q = apply_positional(att, q, pos3)
+        k = apply_positional(att, k, pos3)
+    else:
+        q = apply_positional(att, q, posf)
+        k = apply_positional(att, k, posf)
+
+    size = cache.k.shape[1]
+    slot = jnp.where(window > 0, pos % size, jnp.minimum(pos, size - 1))
+    k_cache = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+
+    H, Hkv = att.n_heads, att.n_kv_heads
+    rep = H // Hkv
+    kk = jnp.repeat(k_cache, rep, axis=2)
+    vv = jnp.repeat(v_cache, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / math.sqrt(att.head_dim)
+    idx = jnp.arange(size)
+    if window > 0:
+        # ring buffer: every slot written so far is in-window by
+        # construction (K entries carry their absolute rotary positions)
+        written = jnp.minimum(pos + 1, size)
+        valid = idx[None, :] < written
+    else:
+        valid = idx[None, :] <= pos
+    s = jnp.where(valid[None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, KVCache(k=k_cache, v=v_cache, pos=pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array      # [B, S_max, kv_lora] compressed latent
+    k_rope: jax.Array    # [B, S_max, qk_rope]
+    pos: jax.Array
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * scale).astype(x.dtype)
+
+
+def mla_forward(params, att: AttentionConfig, x, positions, *,
+                causal: bool = True):
+    """Train / prefill: materialize per-head K/V from the latent (standard),
+    then run chunked attention."""
+    dtype = x.dtype
+    q_lat = _rms(x @ params["wq_a"].astype(dtype), params["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"].astype(dtype))
+    q_nope = q[..., :att.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., att.qk_nope_head_dim:], positions,
+                        att.rope_theta)
+
+    kv_a = x @ params["wkv_a"].astype(dtype)
+    c_kv = _rms(kv_a[..., :att.kv_lora_rank], params["kv_norm"])
+    k_rope = apply_rope(kv_a[..., None, att.kv_lora_rank:], positions,
+                        att.rope_theta)                       # [B,S,1,rope]
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"].astype(dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"].astype(dtype))
+    k_rope_exp = jnp.broadcast_to(
+        k_rope, k_rope.shape[:2] + (att.n_heads, att.qk_rope_head_dim))
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kfull = jnp.concatenate([k_nope, k_rope_exp], axis=-1)
+    out = _chunked_attention(qfull, kfull, v, causal=causal)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+def mla_init_cache(att: AttentionConfig, batch: int, max_seq: int,
+                   dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_seq, att.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_seq, att.qk_rope_head_dim), dtype),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def mla_decode(params, att: AttentionConfig, x, cache: MLACache):
+    """Latent-space decode (absorb trick): the per-head key up-projection is
+    folded into the query, so attention scores hit the compressed cache
+    directly — O(kv_lora + rope) per cached token instead of O(H·D)."""
+    dtype = x.dtype
+    B = x.shape[0]
+    pos = cache.pos
+    posf = jnp.broadcast_to(pos, (B, 1))
+
+    q_lat = _rms(x @ params["wq_a"].astype(dtype), params["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"].astype(dtype))
+    q_nope = q[..., :att.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., att.qk_nope_head_dim:], posf, att.rope_theta)
+    # absorb W_UK into the query: q_eff [B,1,H,kv_lora]
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"].astype(dtype))
+
+    kv_a = x @ params["wkv_a"].astype(dtype)
+    c_new = _rms(kv_a[..., :att.kv_lora_rank], params["kv_norm"])
+    k_rope_new = apply_rope(kv_a[..., None, att.kv_lora_rank:], posf,
+                            att.rope_theta)[:, :, 0, :]
+
+    c_kv = jax.lax.dynamic_update_slice(cache.c_kv, c_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache.k_rope, k_rope_new,
+                                          (0, pos, 0))
+
+    scale = 1.0 / math.sqrt(att.qk_nope_head_dim + att.qk_rope_head_dim)
+    s = (jnp.einsum("bshr,bkr->bshk", q_eff, c_kv)
+         + jnp.einsum("bshr,bkr->bshk", q_rope, k_rope)) * scale
+    S_max = c_kv.shape[1]
+    valid = jnp.arange(S_max)[None, :] <= pos
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(dtype)
+    # attend in latent space, then up-project with W_UV
+    o_lat = jnp.einsum("bshk,bkr->bshr", p, c_kv)
+    out = jnp.einsum("bshr,rhk->bshk", o_lat, params["wv_b"].astype(dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, MLACache(c_kv=c_kv, k_rope=k_rope, pos=pos + 1)

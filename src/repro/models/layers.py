@@ -1,0 +1,178 @@
+"""Shared model layers: norms, rotary embeddings (RoPE / M-RoPE /
+sinusoidal), MLPs, embeddings.
+
+Everything is pure functions over param pytrees (nested dicts); params are
+created fp32 and cast to the compute dtype at apply time (MaxText-style
+mixed precision).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig, ModelConfig
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "nonparametric_ln":      # OLMo: no learned affine
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-5):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] \
+            + params["bias"]
+    elif kind == "nonparametric_ln":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)          # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]                   # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple) -> jax.Array:
+    """M-RoPE (Qwen2-VL): positions [..., S, 3] = (t, h, w); the half-dim
+    frequency bands are split into ``sections`` (sum == head_dim // 2), each
+    rotated by its own position component."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(x.shape[-1], theta)          # [half]
+    # select position component per frequency band
+    comp = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    pos_per_band = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(comp, positions.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1)                                          # [..., S, half]
+    angles = pos_per_band * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d_model: int) -> jax.Array:
+    half = d_model // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+def apply_positional(att: AttentionConfig, x: jax.Array,
+                     positions: jax.Array) -> jax.Array:
+    if att.rope == "rope":
+        return apply_rope(x, positions, att.rope_theta)
+    if att.rope == "mrope":
+        return apply_mrope(x, positions, att.rope_theta, att.mrope_sections)
+    return x   # "none" / "sinusoidal" (added at the embedding, not in attn)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": truncated_normal(k1, (d_model, d_ff), s_in),
+            "w_up": truncated_normal(k2, (d_model, d_ff), s_in),
+            "w_down": truncated_normal(k3, (d_ff, d_model), s_out),
+        }
+    return {
+        "w_up": truncated_normal(k1, (d_model, d_ff), s_in),
+        "w_down": truncated_normal(k2, (d_ff, d_model), s_out),
+    }
+
+
+def apply_mlp(params, x, activation: str):
+    dtype = x.dtype
+    if activation == "swiglu":
+        g = x @ params["w_gate"].astype(dtype)
+        u = x @ params["w_up"].astype(dtype)
+        h = jax.nn.silu(g) * u
+    elif activation == "geglu":
+        g = x @ params["w_gate"].astype(dtype)
+        u = x @ params["w_up"].astype(dtype)
+        h = jax.nn.gelu(g) * u
+    elif activation == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"].astype(dtype))
+    else:
+        raise ValueError(activation)
+    return h @ params["w_down"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int):
+    # 1/sqrt(d) keeps tied-unembedding logits O(1) at init
+    return {"table": truncated_normal(key, (vocab, d_model),
+                                      1.0 / math.sqrt(d_model))}
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x, table=None):
+    t = (table if table is not None else params["table"]).astype(x.dtype)
+    return x @ t.T

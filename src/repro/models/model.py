@@ -1,0 +1,334 @@
+"""Top-level model API for the assigned architectures.
+
+* ``init_params(cfg, key)``             — parameter pytree (fp32 masters)
+* ``forward(params, cfg, batch, ...)``  — logits for train/prefill
+* ``loss_fn(params, cfg, batch, ...)``  — vocab-chunked cross-entropy + MoE aux
+* ``init_decode_state(cfg, B, S, ...)`` — KV/recurrent state pytree
+* ``decode_step(params, cfg, tok, st)`` — one-token serve step
+
+Batch dict keys by family:
+  dense/moe/hybrid/ssm: tokens [B,S] (+ labels for train)
+  vlm:   tokens [B, S-N_PATCHES], patches [B, N_PATCHES, d_model]
+  audio (enc_dec): frames [B, ENC_FRAMES, d_model], tokens [B, S]
+The modality frontends are stubs per the assignment: ``input_specs()``
+provides precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    apply_norm,
+    embed,
+    init_embedding,
+    init_norm,
+    sinusoidal_positions,
+    truncated_normal,
+)
+
+N_PATCHES = 1024        # VLM stub: patch tokens prepended to text
+ENC_FRAMES = 1536       # audio stub: encoder frame count
+VOCAB_CHUNK = 16384     # vocab-chunked cross-entropy block
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    segments = tfm.build_segments(cfg)
+    p: Dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": init_norm(cfg),
+        "layers": tfm.init_stack(ks[1], cfg, segments,
+                                 cross_attention=cfg.family == "enc_dec"),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"table": truncated_normal(
+            ks[2], (cfg.vocab_size, cfg.d_model),
+            1.0 / math.sqrt(cfg.d_model))}
+    if cfg.family == "enc_dec":
+        p["enc_layers"] = tfm.init_stack(
+            ks[3], cfg, _encoder_segments(cfg), cross_attention=False)
+        p["enc_norm"] = init_norm(cfg)
+    return p
+
+
+def _encoder_segments(cfg: ModelConfig):
+    return [tfm.Segment(cfg.encoder_layers,
+                        (tfm.LayerSpec("attn", "dense"),))]
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+
+def _mrope_positions(B: int, S: int, n_patches: int) -> jax.Array:
+    """(t, h, w) positions: patches on a grid at t=0, text sequential."""
+    side = max(int(math.sqrt(max(n_patches, 1))), 1)
+    i = jnp.arange(n_patches)
+    patch_pos = jnp.stack([jnp.zeros_like(i), i // side, i % side], -1)
+    # text continues sequentially after the vision block (matches the
+    # decode path, whose position counter is the cache write index)
+    t = n_patches + jnp.arange(S - n_patches)
+    text_pos = jnp.stack([t, t, t], -1)
+    pos = jnp.concatenate([patch_pos, text_pos], 0)
+    return jnp.broadcast_to(pos[None], (B, S, 3)).astype(jnp.int32)
+
+
+def _positions(cfg: ModelConfig, B: int, S: int,
+               n_patches: int = 0) -> jax.Array:
+    if cfg.attention.rope == "mrope":
+        return _mrope_positions(B, S, n_patches)
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _input_embedding(params, cfg: ModelConfig, batch, dtype):
+    """Token / multimodal input embedding. Returns (x [B,S,d], positions)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens, dtype)
+    n_patches = 0
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(dtype)
+        n_patches = patches.shape[1]
+        x = jnp.concatenate([patches, x], axis=1)
+    S = x.shape[1]
+    pos = _positions(cfg, B, S, n_patches)
+    if cfg.attention.rope == "sinusoidal":
+        x = x + sinusoidal_positions(pos, cfg.d_model).astype(dtype)
+    return x, pos
+
+
+def _run_encoder(params, cfg: ModelConfig, frames, dtype):
+    B, S_enc, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(S_enc, dtype=jnp.int32)[None],
+                           (B, S_enc))
+    x = frames.astype(dtype) + sinusoidal_positions(pos, cfg.d_model) \
+        .astype(dtype)
+    x, _, _ = tfm.apply_stack(params["enc_layers"], cfg,
+                              _encoder_segments(cfg), x, pos,
+                              mode="forward", causal=False)
+    return apply_norm(params["enc_norm"], x, cfg.norm), pos
+
+
+def forward(params, cfg: ModelConfig, batch, *, num_groups: int = 1):
+    """Full-sequence forward. Returns (pre-logits x, positions, aux)."""
+    from repro.distributed.sharding import hint
+    dtype = jnp.dtype(cfg.dtype)
+    segments = tfm.build_segments(cfg)
+    x, pos = _input_embedding(params, cfg, batch, dtype)
+    x = hint(x, "batch", None, None)
+    enc_out = enc_pos = None
+    if cfg.family == "enc_dec":
+        enc_out, enc_pos = _run_encoder(params, cfg, batch["frames"], dtype)
+    x, _, aux = tfm.apply_stack(params["layers"], cfg, segments, x, pos,
+                                mode="forward", enc_out=enc_out,
+                                enc_positions=enc_pos, causal=True,
+                                num_groups=num_groups)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, pos, aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig, x):
+    table = params["embed"]["table"] if cfg.tie_embeddings \
+        else params["unembed"]["table"]
+    return x @ table.astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Sequence-chunked cross-entropy: never materializes [B, S, V] logits
+# ---------------------------------------------------------------------------
+
+SEQ_CHUNK = 256
+
+
+def cross_entropy_chunked(x, table, targets, *, chunk: int = SEQ_CHUNK):
+    """x: [B, S, d]; table: [V, d]; targets: [B, S]. Mean NLL in fp32.
+
+    Scans SEQUENCE chunks: each body materializes only [B, chunk, V]
+    logits (rematerialized in backward). Chunking over the unsharded
+    sequence axis composes cleanly with SPMD: batch stays on the fsdp
+    axes, vocab on the model axis — no giant cross-axis all-reduces
+    (the vocab-chunked alternative all-reduced full logit chunks over
+    the fsdp axis because the contraction dim was fsdp-sharded).
+    """
+    from repro.distributed.sharding import hint
+
+    B, S, d = x.shape
+    V = table.shape[0]
+    chunk = min(chunk, S)
+    n_chunks = (S + chunk - 1) // chunk
+    Sp = n_chunks * chunk
+    x = jnp.pad(x, ((0, 0), (0, Sp - S), (0, 0)))
+    targets = jnp.pad(targets, ((0, 0), (0, Sp - S)))
+    tab = hint(table, "model", None).astype(x.dtype)
+
+    def body(carry, ci):
+        xs = jax.lax.dynamic_slice_in_dim(x, ci * chunk, chunk, 1)
+        tg = jax.lax.dynamic_slice_in_dim(targets, ci * chunk, chunk, 1)
+        logits = jnp.einsum("bsd,vd->bsv", xs, tab).astype(jnp.float32)
+        logits = hint(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, tg[..., None], 2)[..., 0]
+        spos = ci * chunk + jnp.arange(chunk)
+        valid = (spos < S)[None, :]
+        return carry + jnp.sum(jnp.where(valid, lse - tl, 0.0)), None
+
+    loss_sum, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                               jnp.arange(n_chunks))
+    return loss_sum / (B * S)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, num_groups: int = 1):
+    x, _, aux = forward(params, cfg, batch, num_groups=num_groups)
+    labels = batch["labels"]
+    B, S_l = labels.shape
+    # vlm: loss only over the text positions (the last S_l of the sequence)
+    x_txt = x[:, -S_l:, :]
+    table = params["embed"]["table"] if cfg.tie_embeddings \
+        else params["unembed"]["table"]
+    loss = cross_entropy_chunked(x_txt, table, labels)
+    return loss + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      key=None) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    segments = tfm.build_segments(cfg)
+    state: Dict[str, Any] = {
+        "caches": tfm.init_stack_cache(cfg, segments, batch, max_seq, dtype),
+    }
+    if cfg.family == "enc_dec":
+        # encoder memory computed at prefill; carried as decode state
+        state["enc_out"] = jnp.zeros((batch, ENC_FRAMES, cfg.d_model), dtype)
+        state["enc_pos"] = jnp.broadcast_to(
+            jnp.arange(ENC_FRAMES, dtype=jnp.int32)[None],
+            (batch, ENC_FRAMES))
+    return state
+
+
+def decode_step(params, cfg: ModelConfig, tokens, state, *,
+                num_groups: int = 1):
+    """tokens: [B, 1]. Returns (logits [B, 1, V], new_state)."""
+    dtype = jnp.dtype(cfg.dtype)
+    segments = tfm.build_segments(cfg)
+    x = embed(params["embed"], tokens, dtype)
+    pos = None  # decode positions come from per-layer cache.pos
+    enc_out = state.get("enc_out")
+    enc_pos = state.get("enc_pos")
+    if cfg.attention.rope == "sinusoidal":
+        # position index lives in the first attn cache; use 0-d broadcast
+        p0 = _first_cache_pos(state["caches"])
+        x = x + sinusoidal_positions(
+            jnp.broadcast_to(p0, tokens.shape), cfg.d_model).astype(dtype)
+    x, new_caches, _ = tfm.apply_stack(
+        params["layers"], cfg, segments, x, pos, mode="decode",
+        caches=state["caches"], enc_out=enc_out, enc_positions=enc_pos,
+        causal=True, num_groups=num_groups)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = logits_from_hidden(params, cfg, x)
+    new_state = dict(state)
+    new_state["caches"] = new_caches
+    return logits, new_state
+
+
+def _first_cache_pos(caches):
+    for seg in caches:
+        for v in seg.values():
+            if hasattr(v, "pos"):
+                return v.pos[0] if v.pos.ndim else v.pos
+    return jnp.zeros((), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (roofline 6ND)
+# ---------------------------------------------------------------------------
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    att = cfg.attention
+    d = cfg.d_model
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params() -> int:
+        if att.kind == "mla":
+            qk = att.qk_nope_head_dim + att.qk_rope_head_dim
+            return (d * att.q_lora_rank
+                    + att.q_lora_rank * att.n_heads * qk
+                    + d * (att.kv_lora_rank + att.qk_rope_head_dim)
+                    + att.kv_lora_rank * att.n_heads
+                    * (att.qk_nope_head_dim + att.v_head_dim)
+                    + att.n_heads * att.v_head_dim * d)
+        return (d * att.n_heads * att.head_dim
+                + 2 * d * att.n_kv_heads * att.head_dim
+                + att.n_heads * att.head_dim * d)
+
+    def mlp_params(ff: int) -> int:
+        mult = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        return mult * d * ff
+
+    def moe_params(active: bool) -> int:
+        m = cfg.moe
+        n_e = m.top_k if active else m.num_experts
+        n = d * m.num_experts            # router
+        n += n_e * 3 * d * m.expert_d_ff
+        if m.num_shared_experts:
+            n += mlp_params(m.shared_d_ff * m.num_shared_experts)
+        if m.dense_residual:
+            n += mlp_params(m.dense_residual_d_ff)
+        return n
+
+    def ssm_params(kind: str) -> int:
+        s = cfg.ssm
+        if kind == "mamba":
+            di = s.expand * d
+            dt_rank = max(1, math.ceil(d / 16))
+            return (2 * d * di + s.d_conv * di + di * (dt_rank + 2 * s.d_state)
+                    + dt_rank * di + di * s.d_state + 2 * di + di * d)
+        if kind == "mlstm":
+            di = int(s.proj_factor * d)
+            dh = di // s.num_heads
+            return (2 * d * di + 3 * di * s.num_heads * dh
+                    + 2 * di * s.num_heads + di * d + di)
+        if kind == "slstm":
+            di = d
+            dh = di // s.num_heads
+            return (4 * d * di + s.num_heads * dh * 4 * dh
+                    + 2 * di * (4 * di // 3) + 5 * di)
+        raise ValueError(kind)
+
+    for spec in tfm.layer_specs(cfg):
+        if spec.kind == "attn":
+            total += attn_params()
+            if cfg.family == "enc_dec":
+                total += attn_params()     # cross-attention
+        else:
+            total += ssm_params(spec.kind)
+        if spec.ffn == "dense":
+            total += mlp_params(cfg.d_ff)
+        elif spec.ffn == "moe":
+            total += moe_params(active_only)
+    if cfg.family == "enc_dec":
+        total += cfg.encoder_layers * (attn_params() + mlp_params(cfg.d_ff))
+    return int(total)

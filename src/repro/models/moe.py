@@ -1,0 +1,176 @@
+"""Mixture-of-Experts with static-shape sort-based dispatch.
+
+Dispatch (TPU/XLA friendly, no dynamic shapes):
+  router -> top-k -> flatten (token, slot) assignments -> argsort by expert
+  -> per-assignment rank within its expert (vectorized searchsorted)
+  -> scatter into a capacity-bounded [E, C, d] buffer (capacity drops)
+  -> per-expert SwiGLU einsum -> gather back, weighted combine.
+
+Token grouping: dispatch runs vmapped over ``num_groups`` groups (set to the
+number of data shards at scale) so the argsort stays shard-local — experts
+are sharded over the ``model`` axis (EP), the buffer's group axis over
+``data``.
+
+Supports: shared experts (DeepSeek-V2), dense-residual FFN in parallel
+(Arctic), first-k-dense layers, load-balancing auxiliary loss (GShard).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import apply_mlp, init_mlp, truncated_normal
+
+
+def init_moe(key, cfg: ModelConfig, m: MoEConfig):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    f = m.expert_d_ff
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    p = {
+        "router": truncated_normal(ks[0], (d, m.num_experts), s_in),
+        "w_gate": truncated_normal(ks[1], (m.num_experts, d, f), s_in),
+        "w_up": truncated_normal(ks[2], (m.num_experts, d, f), s_in),
+        "w_down": truncated_normal(ks[3], (m.num_experts, f, d), s_out),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d,
+                               m.shared_d_ff * m.num_shared_experts,
+                               cfg.activation)
+    if m.dense_residual:
+        p["dense"] = init_mlp(ks[5], d, m.dense_residual_d_ff,
+                              cfg.activation)
+    return p
+
+
+def _capacity(tokens_per_group: int, m: MoEConfig) -> int:
+    c = int(math.ceil(tokens_per_group * m.top_k * m.capacity_factor
+                      / m.num_experts))
+    # keep MXU-aligned and nonzero
+    c = max(8, ((c + 7) // 8) * 8)
+    return min(c, tokens_per_group)
+
+
+def _dispatch_one_group(x, logits, m: MoEConfig, capacity: int):
+    """x: [T, d]; logits: [T, E]. Returns (buffer [E, C, d], combine info)."""
+    T, d = x.shape
+    E, k = m.num_experts, m.top_k
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                  # [T, k]
+    top_p = (top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9))
+
+    flat_e = top_e.reshape(-1)                              # [T*k]
+    order = jnp.argsort(flat_e, stable=True).astype(jnp.int32)
+    sorted_e = flat_e[order]
+    # rank within expert = position - first position of that expert value
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left").astype(jnp.int32)
+    ranks_sorted = jnp.arange(T * k, dtype=jnp.int32) - first
+    ranks = jnp.zeros((T * k,), jnp.int32).at[order].set(ranks_sorted)
+    ranks = ranks.reshape(T, k)
+    keep = ranks < capacity                                  # capacity drop
+
+    token_of = jnp.arange(T, dtype=jnp.int32)[:, None]
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    e_idx = jnp.where(keep, top_e, E - 1)
+    r_idx = jnp.where(keep, ranks, capacity)                 # OOB -> dropped
+    buf = buf.at[e_idx.reshape(-1), r_idx.reshape(-1)].set(
+        jnp.repeat(x, k, axis=0) if k > 1 else x, mode="drop")
+    return buf, (e_idx, r_idx, top_p, keep, probs)
+
+
+def _combine_one_group(out_buf, info, T: int, capacity: int):
+    e_idx, r_idx, top_p, keep, _ = info
+    # gather each (token, slot)'s expert output; dropped slots give zeros
+    g = out_buf[e_idx.reshape(-1),
+                jnp.clip(r_idx.reshape(-1), 0, capacity - 1)]
+    g = g.reshape(T, top_p.shape[1], -1)
+    w = jnp.where(keep, top_p, 0.0).astype(g.dtype)
+    return jnp.einsum("tkd,tk->td", g, w)
+
+
+def apply_moe(params, x, cfg: ModelConfig, m: MoEConfig, *,
+              num_groups: int = 1):
+    """x: [B, S, d] -> (y, aux_loss).
+
+    Explicit-group formulation: every large intermediate carries the
+    group axis G so sharding hints pin it to the fsdp axes (G = data
+    shards at scale) and the expert axis to ``model`` (EP). vmap is used
+    only for the small per-group integer index computation — XLA's
+    propagation replicated the big dispatch buffers when the whole
+    dispatch was vmapped.
+    """
+    from repro.distributed.sharding import hint
+
+    B, S, d = x.shape
+    T = B * S
+    G = math.gcd(T, num_groups)          # decode batches may be tiny
+    tg = T // G
+    capacity = _capacity(tg, m)
+    xg = hint(x.reshape(G, tg, d), "batch", None, None)
+    dtype = x.dtype
+    E, k = m.num_experts, m.top_k
+
+    logits = jnp.einsum("gtd,de->gte", xg, params["router"].astype(dtype))
+    logits = hint(logits, "batch", None, None)
+
+    def group_indices(la):
+        probs = jax.nn.softmax(la.astype(jnp.float32), axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)                 # [Tg, k]
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        flat_e = top_e.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True).astype(jnp.int32)
+        sorted_e = flat_e[order]
+        first = jnp.searchsorted(sorted_e, sorted_e,
+                                 side="left").astype(jnp.int32)
+        ranks_sorted = jnp.arange(tg * k, dtype=jnp.int32) - first
+        ranks = jnp.zeros((tg * k,), jnp.int32).at[order].set(ranks_sorted)
+        ranks = ranks.reshape(tg, k)
+        keep = ranks < capacity
+        e_idx = jnp.where(keep, top_e, E - 1)
+        r_idx = jnp.where(keep, ranks, capacity)               # OOB drops
+        # aux loss ingredients
+        top1 = jnp.argmax(la, axis=-1)
+        f_e = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+        p_e = jnp.mean(probs, axis=0)
+        aux = E * jnp.sum(f_e * p_e)
+        return e_idx, r_idx, top_p, keep, aux
+
+    e_idx, r_idx, top_p, keep, aux = jax.vmap(group_indices)(logits)
+
+    # scatter tokens into the [G, E, C, d] dispatch buffer
+    xk = jnp.repeat(xg, k, axis=1) if k > 1 else xg            # [G, Tg*k, d]
+    xk = hint(xk, "batch", None, None)
+    g_ids = jnp.repeat(jnp.arange(G, dtype=jnp.int32)[:, None], tg * k, 1)
+    buf = jnp.zeros((G, E, capacity, d), dtype)
+    buf = buf.at[g_ids.reshape(-1),
+                 e_idx.reshape(-1),
+                 r_idx.reshape(-1)].set(xk.reshape(-1, d), mode="drop")
+    buf = hint(buf, "batch", "model", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(dtype))
+    u = jnp.einsum("gecd,edf->gecf", buf, params["w_up"].astype(dtype))
+    act = jax.nn.silu(h) * u if cfg.activation in ("swiglu", "silu") \
+        else jax.nn.gelu(h) * u
+    out_buf = jnp.einsum("gecf,efd->gecd", act,
+                         params["w_down"].astype(dtype))
+    out_buf = hint(out_buf, "batch", "model", None, None)
+
+    # combine: gather each (token, slot)'s expert output
+    gather = out_buf[g_ids.reshape(-1),
+                     e_idx.reshape(-1),
+                     jnp.clip(r_idx, 0, capacity - 1).reshape(-1)]
+    gather = hint(gather.reshape(G, tg, k, d), "batch", None, None, None)
+    w = jnp.where(keep, top_p, 0.0).astype(dtype)
+    yg = jnp.einsum("gtkd,gtk->gtd", gather, w)
+    y = hint(yg, "batch", None, None).reshape(B, S, d)
+
+    if m.num_shared_experts:
+        y = y + apply_mlp(params["shared"], x, cfg.activation)
+    if m.dense_residual:
+        y = y + apply_mlp(params["dense"], x, cfg.activation)
+    return y, jnp.mean(aux) * m.router_aux_loss

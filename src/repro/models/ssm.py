@@ -1,0 +1,391 @@
+"""State-space / recurrent blocks: Mamba (selective SSM), xLSTM's mLSTM
+(matrix memory) and sLSTM (scalar memory with exponential gating).
+
+All three expose the same triple of entry points:
+  * ``*_forward``  — full sequence (train / prefill), lax.scan over time
+    (state stays O(d·N), nothing [B,S,d,N]-sized is materialized);
+  * ``*_init_state`` — decode state;
+  * ``*_decode``   — one-token step carrying the state.
+
+The sequential scan keeps HLO small and memory bounded; the chunked
+parallel (SSD-style) form is a recorded §Perf candidate, not a baseline
+requirement.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import apply_norm, truncated_normal
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+
+class MambaState(NamedTuple):
+    h: jax.Array          # [B, d_inner, N]
+    conv: jax.Array       # [B, d_conv-1, d_inner] trailing inputs
+
+
+def _dinner(cfg: ModelConfig, s: SSMConfig) -> int:
+    return s.expand * cfg.d_model
+
+
+def init_mamba(key, cfg: ModelConfig, s: SSMConfig):
+    d = cfg.d_model
+    di = _dinner(cfg, s)
+    N = s.d_state
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 8)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "w_in": truncated_normal(ks[0], (d, 2 * di), sc),
+        "conv_w": truncated_normal(ks[1], (s.d_conv, di), 1.0 / math.sqrt(s.d_conv)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "w_x": truncated_normal(ks[2], (di, dt_rank + 2 * N), 1.0 / math.sqrt(di)),
+        "w_dt": truncated_normal(ks[3], (dt_rank, di), 1.0 / math.sqrt(dt_rank)),
+        "dt_bias": jnp.log(jnp.exp(
+            jnp.linspace(1e-3, 1e-1, di)) - 1.0).astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": truncated_normal(ks[4], (di, d), 1.0 / math.sqrt(di)),
+    }
+
+
+def _mamba_scan(params, xz, s: SSMConfig, h0, conv0):
+    """xz: [B, S, 2*di]. Returns (y [B,S,di->d projected outside], state)."""
+    B, S, _ = xz.shape
+    di = xz.shape[-1] // 2
+    N = s.d_state
+    dtype = xz.dtype
+    x_part, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over time (width d_conv)
+    conv_w = params["conv_w"].astype(dtype)                 # [K, di]
+    K = conv_w.shape[0]
+    x_hist = jnp.concatenate([conv0.astype(dtype), x_part], axis=1)
+    x_conv = sum(x_hist[:, i:i + S] * conv_w[i] for i in range(K))
+    x_conv = jax.nn.silu(x_conv + params["conv_b"].astype(dtype))
+    new_conv = x_hist[:, S:]                                # trailing K-1
+
+    proj = jnp.einsum("bsi,ip->bsp", x_conv, params["w_x"].astype(dtype))
+    dt_rank = params["w_dt"].shape[0]
+    dt_in, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, params["w_dt"].astype(dtype))
+        + params["dt_bias"].astype(dtype))                  # [B,S,di]
+    A = -jnp.exp(params["A_log"]).astype(jnp.float32)       # [di,N]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                           # [B,di],[B,di],[B,N],[B,N]
+        dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A)   # [B,di,N]
+        dBx = (dt_t * x_t)[..., None].astype(jnp.float32) \
+            * b_t[:, None, :].astype(jnp.float32)
+        h = h * dA + dBx
+        y = jnp.einsum("bin,bn->bi", h, c_t.astype(jnp.float32))
+        return h, y.astype(dtype)
+
+    xs = (jnp.moveaxis(x_conv, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bmat, 1, 0), jnp.moveaxis(Cmat, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x_conv * params["D"].astype(dtype)
+    y = y * jax.nn.silu(z)
+    return y, MambaState(h=h, conv=new_conv)
+
+
+def mamba_init_state(cfg: ModelConfig, s: SSMConfig, batch: int,
+                     dtype) -> MambaState:
+    di = _dinner(cfg, s)
+    return MambaState(h=jnp.zeros((batch, di, s.d_state), jnp.float32),
+                      conv=jnp.zeros((batch, s.d_conv - 1, di), dtype))
+
+
+def mamba_forward(params, cfg: ModelConfig, s: SSMConfig, x,
+                  state: MambaState | None = None):
+    """x: [B, S, d] -> (y [B, S, d], state)."""
+    B = x.shape[0]
+    dtype = x.dtype
+    if state is None:
+        state = mamba_init_state(cfg, s, B, dtype)
+    xz = x @ params["w_in"].astype(dtype)
+    y, st = _mamba_scan(params, xz, s, state.h, state.conv)
+    return y @ params["w_out"].astype(dtype), st
+
+
+def mamba_decode(params, cfg: ModelConfig, s: SSMConfig, x,
+                 state: MambaState):
+    return mamba_forward(params, cfg, s, x, state)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array          # [B, H, dk, dv]
+    n: jax.Array          # [B, H, dk]
+    m: jax.Array          # [B, H] log-domain gate normalizer
+
+
+def init_mlstm(key, cfg: ModelConfig, s: SSMConfig):
+    d = cfg.d_model
+    di = int(s.proj_factor * d)
+    H = s.num_heads
+    dh = di // H
+    ks = jax.random.split(key, 8)
+    sc = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(di)
+    return {
+        "w_up": truncated_normal(ks[0], (d, 2 * di), sc),
+        "wq": truncated_normal(ks[1], (di, H, dh), si),
+        "wk": truncated_normal(ks[2], (di, H, dh), si),
+        "wv": truncated_normal(ks[3], (di, H, dh), si),
+        "w_if": truncated_normal(ks[4], (di, 2 * H), si),
+        "b_if": jnp.concatenate([jnp.zeros((H,)),
+                                 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "gn_scale": jnp.ones((di,), jnp.float32),
+        "w_down": truncated_normal(ks[5], (di, d), si),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, s: SSMConfig, batch: int,
+                     dtype) -> MLSTMState:
+    di = int(s.proj_factor * cfg.d_model)
+    H = s.num_heads
+    dh = di // H
+    return MLSTMState(C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+                      n=jnp.zeros((batch, H, dh), jnp.float32),
+                      m=jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def mlstm_forward_chunked(params, cfg: ModelConfig, s: SSMConfig, x,
+                          state: MLSTMState | None = None):
+    """Chunkwise-parallel mLSTM (§Perf optimization, beyond-paper).
+
+    The sequential scan writes the O(dk·dv) matrix state to HBM every
+    timestep; the chunkwise form (linear-attention chunking, as in
+    GLA/Mamba-2/xLSTM kernels) carries state only across chunk boundaries:
+
+      intra-chunk: masked attention-style score matrix with cumulative
+        log-forget weights (MXU matmuls over [c, dk] tiles);
+      inter-chunk: each chunk reads the boundary state once.
+
+    HBM state traffic drops ~chunk_size x and the work becomes matmuls.
+    Gate stabilization follows the same running-max trick as the scan
+    form; equivalence vs the sequential form is tested to bf16-ish rtol.
+
+    Decode (S == 1) and cross-chunk state carry use the same state layout
+    as the sequential form, so serve paths are unchanged.
+    """
+    B, S, d = x.shape
+    dtype = x.dtype
+    if state is None:
+        state = mlstm_init_state(cfg, s, B, dtype)
+    H = s.num_heads
+    c = min(s.chunk_size, S)
+    if S % c:
+        # fall back for ragged tails (decode handled by sequential form)
+        return mlstm_forward(params, cfg, s, x, state)
+    n_chunks = S // c
+
+    up = x @ params["w_up"].astype(dtype)
+    u, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsi,ihk->bshk", u, params["wq"].astype(dtype))
+    k = jnp.einsum("bsi,ihk->bshk", u, params["wk"].astype(dtype))
+    v = jnp.einsum("bsi,ihk->bshk", u, params["wv"].astype(dtype))
+    gates = u @ params["w_if"].astype(dtype) + params["b_if"].astype(dtype)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)             # [B,S,H]
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    # reshape to chunks [B, n, c, ...] then scan over n
+    def chunked(a):
+        return a.reshape(B, n_chunks, c, *a.shape[2:])
+    qc_, kc_, vc_ = chunked(q), chunked(k), chunked(v)
+    ic_, fc_ = chunked(i_pre), chunked(f_pre)
+
+    def chunk_step(carry, inp):
+        # Derivation (per head; F_t = Σ_{s<=t} log σ(f_s), m = carry
+        # stabilizer, stored state = true state · e^{-m}):
+        #   m_loc_t = F_t + max(m, max_{j<=t}(i_j − F_j))   (== seq. m_t)
+        #   w_tj    = e^{F_t − F_j + i_j − m_loc_t}         (j <= t)
+        #   num_t   = Σ_j (q·k_j) scale w_tj v_j + e^{F_t + m − m_loc_t} q·C
+        #   den_t   = max(|Σ_j w_tj (q·k_j scale)… analog on n|, e^{−m_loc_t})
+        #   C'      = e^{F_c + m − m'} C + Σ_j e^{F_c − F_j + i_j − m'} k v^T
+        C, n, m = carry                     # [B,H,dk,dv], [B,H,dk], [B,H]
+        qt, kt, vt, it, ft = inp            # [B,c,H,*]
+        qf = qt.astype(jnp.float32)
+        kf = kt.astype(jnp.float32) * scale
+        vf = vt.astype(jnp.float32)
+        i_f = it.astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(ft.astype(jnp.float32))   # [B,c,H]
+        csum = jnp.cumsum(logf, axis=1)                     # F_t, inclusive
+        total = csum[:, -1]                                 # F_c  [B,H]
+
+        iw = i_f - csum                                     # i_j − F_j
+        run_max = jax.lax.associative_scan(jnp.maximum, iw, axis=1)
+        m_loc = csum + jnp.maximum(run_max, m[:, None, :])  # [B,c,H]
+        m_new = m_loc[:, -1]                                # chunk-end m
+
+        # --- intra-chunk (attention-style, causal; MXU matmuls) ---
+        sc = jnp.einsum("bthk,bjhk->bhtj", qf, kf)
+        cs_h = csum.transpose(0, 2, 1)                      # [B,H,c]
+        logw = (cs_h[:, :, :, None] - cs_h[:, :, None, :]
+                + i_f.transpose(0, 2, 1)[:, :, None, :]
+                - m_loc.transpose(0, 2, 1)[:, :, :, None])
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(causal[None, None], jnp.exp(logw), 0.0)
+        intra = jnp.einsum("bhtj,bhtj,bjhv->bthv", sc, w, vf)
+        nrm = jnp.einsum("bhtj,bjhk->bthk", w, kf)
+        n_intra = jnp.einsum("bthk,bthk->bth", qf, nrm)
+
+        # --- inter-chunk (boundary state, read once) ---
+        carry_w = jnp.exp(csum + m[:, None, :] - m_loc)     # [B,c,H]
+        inter = jnp.einsum("bthk,bhkv->bthv", qf, C) * carry_w[..., None]
+        n_inter = jnp.einsum("bthk,bhk->bth", qf, n) * carry_w
+        num = intra + inter
+        den = jnp.maximum(jnp.abs(n_intra + n_inter),
+                          jnp.exp(-m_loc))[..., None]
+        y = (num / den).astype(dtype)
+
+        # --- boundary state update (written once per chunk) ---
+        kv_w = jnp.exp(i_f + (total[:, None] - csum) - m_new[:, None, :])
+        fgate = jnp.exp(total + m - m_new)[:, :, None, None]
+        C_new = fgate * C + jnp.einsum("bjhk,bjh,bjhv->bhkv", kf, kv_w, vf)
+        n_new = fgate[..., 0] * n + jnp.einsum("bjhk,bjh->bhk", kf, kv_w)
+        return (C_new, n_new, m_new), y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qc_, kc_, vc_, ic_, fc_))
+    (C, n, m), ys = jax.lax.scan(chunk_step, (state.C, state.n, state.m), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, -1)
+    y = apply_norm({"scale": params["gn_scale"]}, y, "rmsnorm")
+    y = y * jax.nn.silu(z)
+    return y @ params["w_down"].astype(dtype), MLSTMState(C=C, n=n, m=m)
+
+
+def mlstm_forward(params, cfg: ModelConfig, s: SSMConfig, x,
+                  state: MLSTMState | None = None):
+    """Stabilized mLSTM recurrence (xLSTM eqs. 19-27), scanned over time."""
+    B, S, d = x.shape
+    dtype = x.dtype
+    if state is None:
+        state = mlstm_init_state(cfg, s, B, dtype)
+    H = s.num_heads
+    up = x @ params["w_up"].astype(dtype)
+    u, z = jnp.split(up, 2, axis=-1)                        # [B,S,di]
+    q = jnp.einsum("bsi,ihk->bshk", u, params["wq"].astype(dtype))
+    k = jnp.einsum("bsi,ihk->bshk", u, params["wk"].astype(dtype))
+    v = jnp.einsum("bsi,ihk->bshk", u, params["wv"].astype(dtype))
+    gates = u @ params["w_if"].astype(dtype) + params["b_if"].astype(dtype)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)             # [B,S,H]
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = [a.astype(jnp.float32) for a in inp]
+        logf = jax.nn.log_sigmoid(f_t)                      # [B,H]
+        m_new = jnp.maximum(logf + m, i_t)
+        fg = jnp.exp(logf + m - m_new)[..., None, None]
+        ig = jnp.exp(i_t - m_new)[..., None, None]
+        C = fg * C + ig * (k_t[..., :, None] * v_t[..., None, :]) * scale
+        n = fg[..., 0] * n + ig[..., 0] * k_t * scale
+        num = jnp.einsum("bhkv,bhk->bhv", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)),
+                          jnp.exp(-m_new))[..., None]
+        y = num / den
+        return (C, n, m_new), y.astype(dtype)
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_pre, f_pre))
+    (C, n, m), ys = jax.lax.scan(step, (state.C, state.n, state.m), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, -1)            # [B,S,di]
+    # group-norm per head approximated by RMS over di + learned scale
+    y = apply_norm({"scale": params["gn_scale"]}, y, "rmsnorm")
+    y = y * jax.nn.silu(z)
+    return y @ params["w_down"].astype(dtype), MLSTMState(C=C, n=n, m=m)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory)
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array          # [B, di]
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def init_slstm(key, cfg: ModelConfig, s: SSMConfig):
+    d = cfg.d_model
+    di = d                      # sLSTM keeps model width
+    H = s.num_heads
+    dh = di // H
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "w_gates": truncated_normal(ks[0], (d, 4 * di), sc),
+        # block-diagonal recurrent mixing per head: [H, dh, 4*dh]
+        "r_gates": truncated_normal(ks[1], (H, dh, 4 * dh),
+                                    1.0 / math.sqrt(dh)),
+        "b_gates": jnp.concatenate([
+            jnp.zeros((di,)), 3.0 * jnp.ones((di,)),
+            jnp.zeros((2 * di,))]).astype(jnp.float32),
+        "gn_scale": jnp.ones((di,), jnp.float32),
+        # post-FFN (proj factor 4/3, xLSTM paper)
+        "w_ff1": truncated_normal(ks[2], (di, 4 * di // 3), sc),
+        "w_ff2": truncated_normal(ks[3], (4 * di // 3, di),
+                                  1.0 / math.sqrt(4 * di // 3)),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, s: SSMConfig, batch: int,
+                     dtype) -> SLSTMState:
+    di = cfg.d_model
+    z = jnp.zeros((batch, di), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=z - 1e30)
+
+
+def slstm_forward(params, cfg: ModelConfig, s: SSMConfig, x,
+                  state: SLSTMState | None = None):
+    B, S, d = x.shape
+    dtype = x.dtype
+    if state is None:
+        state = slstm_init_state(cfg, s, B, dtype)
+    H = s.num_heads
+    di = d
+    dh = di // H
+    wx = x @ params["w_gates"].astype(dtype) + params["b_gates"].astype(dtype)
+
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhk,hkp->bhp", hh.astype(dtype),
+                         params["r_gates"].astype(dtype)).reshape(B, 4 * di)
+        zi, fi, ii, oi = jnp.split((wx_t + rec).astype(jnp.float32), 4, -1)
+        logf = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(logf + m, ii)
+        fg = jnp.exp(logf + m - m_new)
+        ig = jnp.exp(ii - m_new)
+        c = fg * c + ig * jnp.tanh(zi)
+        n = fg * n + ig
+        h_new = jax.nn.sigmoid(oi) * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, m_new), h_new.astype(dtype)
+
+    (c, n, h, m), ys = jax.lax.scan(step, (state.c, state.n, state.h,
+                                           state.m),
+                                    jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1)
+    y = apply_norm({"scale": params["gn_scale"]}, y, "rmsnorm")
+    y = y + jax.nn.gelu(y @ params["w_ff1"].astype(dtype)) \
+        @ params["w_ff2"].astype(dtype)
+    return y, SLSTMState(c=c, n=n, h=h, m=m)

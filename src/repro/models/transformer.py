@@ -1,0 +1,258 @@
+"""Layer assembly: per-layer specs, segment grouping, scanned stacks.
+
+A ``LayerSpec`` is (kind, ffn) with kind ∈ {attn, mamba, mlstm, slstm} and
+ffn ∈ {dense, moe, none}. Consecutive layers are grouped into *segments* of
+repeating periods (e.g. Jamba's 8-layer mamba/attn pattern × 4, or
+DeepSeek-V2's 1 dense-FFN prefix + 59 MoE layers); each segment's params
+are stacked over periods and applied with ``lax.scan`` so the compiled HLO
+contains one period body per segment regardless of depth.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+class LayerSpec(NamedTuple):
+    kind: str     # attn | mamba | mlstm | slstm
+    ffn: str      # dense | moe | none
+
+
+class Segment(NamedTuple):
+    n_periods: int
+    period: Tuple[LayerSpec, ...]
+
+
+def layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
+    specs = []
+    m = cfg.moe
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_pattern[i % len(cfg.layer_pattern)]
+        if kind in ("mlstm", "slstm") or cfg.d_ff == 0:
+            ffn = "none"
+        elif m is None:
+            ffn = "dense"
+        elif i < m.first_dense_layers:
+            ffn = "dense"
+        elif m.every_k_layers > 1 and (i % m.every_k_layers) != m.every_k_layers - 1:
+            ffn = "dense"
+        else:
+            ffn = "moe"
+        specs.append(LayerSpec(kind, ffn))
+    return specs
+
+
+def build_segments(cfg: ModelConfig) -> List[Segment]:
+    specs = layer_specs(cfg)
+    segments: List[Segment] = []
+    prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    if prefix:
+        segments.append(Segment(1, tuple(specs[:prefix])))
+        specs = specs[prefix:]
+    if not specs:
+        return segments
+    period_len = len(cfg.layer_pattern)
+    if cfg.moe and cfg.moe.every_k_layers > 1:
+        period_len = math.lcm(period_len, cfg.moe.every_k_layers)
+    if len(specs) % period_len:
+        period_len = len(specs)
+    segments.append(Segment(len(specs) // period_len,
+                            tuple(specs[:period_len])))
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec,
+               cross_attention: bool = False):
+    ks = jax.random.split(key, 6)
+    p: dict = {"norm1": init_norm(cfg)}
+    if spec.kind == "attn":
+        p["attn"] = attn_mod.init_attention(ks[0], cfg.attention, cfg.d_model)
+        if cross_attention:
+            p["norm_x"] = init_norm(cfg)
+            p["cross"] = attn_mod.init_attention(ks[1], cfg.attention,
+                                                 cfg.d_model)
+    elif spec.kind == "mamba":
+        p["mamba"] = ssm_mod.init_mamba(ks[0], cfg, cfg.ssm)
+    elif spec.kind == "mlstm":
+        p["mlstm"] = ssm_mod.init_mlstm(ks[0], cfg, cfg.ssm)
+    elif spec.kind == "slstm":
+        p["slstm"] = ssm_mod.init_slstm(ks[0], cfg, cfg.ssm)
+    else:
+        raise ValueError(spec.kind)
+    if spec.ffn == "dense":
+        p["norm2"] = init_norm(cfg)
+        d_ff = cfg.d_ff
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, d_ff, cfg.activation)
+    elif spec.ffn == "moe":
+        p["norm2"] = init_norm(cfg)
+        p["moe"] = moe_mod.init_moe(ks[2], cfg, cfg.moe)
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_seq: int, dtype):
+    """Decode-state slot for one layer (None-free so pytrees stack)."""
+    att = cfg.attention
+    if spec.kind == "attn":
+        if att.kind == "mla":
+            return attn_mod.mla_init_cache(att, batch, max_seq, dtype)
+        return attn_mod.gqa_init_cache(att, batch, max_seq, dtype)
+    if spec.kind == "mamba":
+        return ssm_mod.mamba_init_state(cfg, cfg.ssm, batch, dtype)
+    if spec.kind == "mlstm":
+        return ssm_mod.mlstm_init_state(cfg, cfg.ssm, batch, dtype)
+    if spec.kind == "slstm":
+        return ssm_mod.slstm_init_state(cfg, cfg.ssm, batch, dtype)
+    raise ValueError(spec.kind)
+
+
+def apply_layer(params, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
+                mode: str, cache=None, enc_out=None, enc_positions=None,
+                causal: bool = True, num_groups: int = 1):
+    """Returns (x, new_cache, aux_loss)."""
+    att = cfg.attention
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(params["norm1"], x, cfg.norm)
+    new_cache = cache
+
+    if spec.kind == "attn":
+        if mode == "decode":
+            if att.kind == "mla":
+                y, new_cache = attn_mod.mla_decode(params["attn"], att, h,
+                                                   cache)
+            else:
+                y, new_cache = attn_mod.gqa_decode(params["attn"], att, h,
+                                                   cache, window=att.window)
+        else:
+            if att.kind == "mla":
+                y = attn_mod.mla_forward(params["attn"], att, h, positions,
+                                         causal=causal)
+            else:
+                y = attn_mod.gqa_forward(params["attn"], att, h, positions,
+                                         causal=causal, window=att.window)
+    elif spec.kind == "mamba":
+        y, new_cache = ssm_mod.mamba_forward(params["mamba"], cfg, cfg.ssm,
+                                             h, cache)
+    elif spec.kind == "mlstm":
+        fwd = ssm_mod.mlstm_forward_chunked \
+            if (mode != "decode" and cfg.ssm.chunked) \
+            else ssm_mod.mlstm_forward
+        y, new_cache = fwd(params["mlstm"], cfg, cfg.ssm, h, cache)
+    elif spec.kind == "slstm":
+        y, new_cache = ssm_mod.slstm_forward(params["slstm"], cfg, cfg.ssm,
+                                             h, cache)
+    else:
+        raise ValueError(spec.kind)
+    x = x + y
+
+    if "cross" in params and enc_out is not None:
+        hx = apply_norm(params["norm_x"], x, cfg.norm)
+        y = attn_mod.gqa_forward(params["cross"], att, hx, positions,
+                                 causal=False,
+                                 kv=(enc_out, enc_out, enc_positions))
+        x = x + y
+
+    if spec.ffn == "dense":
+        h2 = apply_norm(params["norm2"], x, cfg.norm)
+        x = x + apply_mlp(params["mlp"], h2, cfg.activation)
+    elif spec.ffn == "moe":
+        h2 = apply_norm(params["norm2"], x, cfg.norm)
+        y, aux = moe_mod.apply_moe(params["moe"], h2, cfg, cfg.moe,
+                                   num_groups=num_groups)
+        x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Segment stacks (scan over periods)
+# ---------------------------------------------------------------------------
+
+
+def init_stack(key, cfg: ModelConfig, segments: List[Segment],
+               cross_attention: bool = False):
+    stacks = []
+    for si, seg in enumerate(segments):
+        kseg = jax.random.fold_in(key, si)
+
+        def one_period(k):
+            return {f"pos{j}": init_layer(jax.random.fold_in(k, j), cfg,
+                                          spec, cross_attention)
+                    for j, spec in enumerate(seg.period)}
+
+        keys = jax.random.split(kseg, seg.n_periods)
+        stacks.append(jax.vmap(one_period)(keys))
+    return stacks
+
+
+def init_stack_cache(cfg: ModelConfig, segments: List[Segment], batch: int,
+                     max_seq: int, dtype):
+    caches = []
+    for seg in segments:
+        one = {f"pos{j}": init_layer_cache(cfg, spec, batch, max_seq, dtype)
+               for j, spec in enumerate(seg.period)}
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (seg.n_periods,) + a.shape).copy()
+            if seg.n_periods > 1 else a[None], one))
+    return caches
+
+
+def apply_stack(stacks, cfg: ModelConfig, segments: List[Segment], x,
+                positions, *, mode: str, caches=None, enc_out=None,
+                enc_positions=None, causal: bool = True,
+                num_groups: int = 1):
+    """Returns (x, new_caches, total_aux)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, seg in enumerate(segments):
+        stack = stacks[si]
+        cache = caches[si] if caches is not None else None
+
+        def run_period(xc, auxc, pparams, pcache, seg=seg):
+            # pin the scan carry's layout: XLA SPMD does not reliably
+            # propagate shardings into while bodies and silently
+            # replicates the carry otherwise (16x flops per chip).
+            from repro.distributed.sharding import hint
+            xc = hint(xc, "batch", None, None)
+            new_pcache = {}
+            for j, spec in enumerate(seg.period):
+                c_j = pcache[f"pos{j}"] if pcache is not None else None
+                xc, nc, a = apply_layer(
+                    pparams[f"pos{j}"], cfg, spec, xc, positions, mode=mode,
+                    cache=c_j, enc_out=enc_out, enc_positions=enc_positions,
+                    causal=causal, num_groups=num_groups)
+                new_pcache[f"pos{j}"] = nc
+                auxc = auxc + a
+            return xc, auxc, new_pcache
+
+        if cache is None:
+            def body(carry, pparams):
+                xc, auxc, _ = run_period(carry[0], carry[1], pparams, None)
+                return (xc, auxc), None
+        else:
+            def body(carry, xs):
+                pparams, pcache = xs
+                xc, auxc, npc = run_period(carry[0], carry[1], pparams,
+                                           pcache)
+                return (xc, auxc), npc
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = stack if cache is None else (stack, cache)
+        (x, total_aux), cache_out = jax.lax.scan(body, (x, total_aux), xs)
+        new_caches.append(cache_out)
+    return x, new_caches, total_aux

@@ -1,0 +1,60 @@
+"""Jitted train/serve step factories.
+
+``make_train_step(cfg, opt_cfg, num_groups)`` returns a pure
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with in/out shardings; ``make_serve_step(cfg)`` returns the
+one-token decode step. These are the functions the multi-pod dry-run
+lowers (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train.optimizer import AdamWConfig, OptState, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    num_groups: int = 1):
+    def train_step(params, opt_state: OptState, batch: Dict[str, Any]):
+        def loss(p):
+            return M.loss_fn(p, cfg, batch, num_groups=num_groups)
+
+        loss_val, grads = jax.value_and_grad(loss)(params)
+        params, opt_state, metrics = apply_updates(params, grads,
+                                                   opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss_val)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, num_groups: int = 1):
+    def eval_step(params, batch):
+        return M.loss_fn(params, cfg, batch, num_groups=num_groups)
+    return eval_step
+
+
+def make_serve_step(cfg: ModelConfig, num_groups: int = 1):
+    def serve_step(params, tokens, state):
+        logits, new_state = M.decode_step(params, cfg, tokens, state,
+                                          num_groups=num_groups)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_state
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, num_groups: int = 1):
+    """Prefill: full-sequence forward returning last-position logits.
+    (Cache population during prefill is served by running decode_step over
+    chunks in production; for the dry-run the compute shape is what
+    matters and is dominated by this forward.)"""
+    def prefill_step(params, batch):
+        x, _, _ = M.forward(params, cfg, batch, num_groups=num_groups)
+        return M.logits_from_hidden(params, cfg, x[:, -1:, :])
+    return prefill_step

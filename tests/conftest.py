@@ -1,0 +1,58 @@
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core.edge_store import store_from_arrays
+from repro.core.temporal_index import build_index
+from repro.data.synthetic import powerlaw_temporal_graph
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+# must see the single real CPU device. Only launch/dryrun.py forces 512.
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    return powerlaw_temporal_graph(200, 3000, seed=1)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_graph):
+    g = small_graph
+    store = store_from_arrays(g.src, g.dst, g.ts,
+                              edge_capacity=4096, node_capacity=256)
+    return build_index(store, 256)
+
+
+@pytest.fixture(scope="session")
+def hub_graph():
+    """Heavily hub-skewed graph exercising the mega-hub dispatch column."""
+    return powerlaw_temporal_graph(64, 8000, skew=2.0, seed=3)
+
+
+@pytest.fixture(scope="session")
+def hub_index(hub_graph):
+    g = hub_graph
+    store = store_from_arrays(g.src, g.dst, g.ts,
+                              edge_capacity=8192, node_capacity=64)
+    return build_index(store, 64)
+
+
+@pytest.fixture
+def walk_cfg():
+    return WalkConfig(num_walks=512, max_length=16, start_mode="nodes")
+
+
+@pytest.fixture
+def sampler_cfg():
+    return SamplerConfig(bias="exponential", mode="index")
+
+
+@pytest.fixture
+def sched_cfg():
+    return SchedulerConfig(path="grouped")
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned arch is instantiated at a REDUCED config of the same family
+(small width/layers/experts) and runs one forward + one train-style grad +
+one decode step on CPU, asserting output shapes and finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduced
+from repro.models import model as M
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, key, B=2, S=32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        npatch = S // 2
+        batch["tokens"] = batch["tokens"][:, :S - npatch]
+        batch["labels"] = batch["labels"][:, :S - npatch]
+        batch["patches"] = 0.02 * jax.random.normal(
+            k3, (B, npatch, cfg.d_model))
+    if cfg.family == "enc_dec":
+        batch["frames"] = 0.1 * jax.random.normal(k3, (B, 16, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    x, pos, aux = M.forward(params, cfg, batch)
+    assert x.shape[0] == 2 and x.shape[-1] == cfg.d_model
+    assert bool(jnp.all(jnp.isfinite(x)))
+    loss = M.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) < 3 * np.log(cfg.vocab_size) + 5
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_grad_finite(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1), S=16)
+    g = jax.grad(lambda p: M.loss_fn(p, cfg, batch))(params)
+    leaves = jax.tree.leaves(g)
+    assert leaves
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves)
+    # at least the embedding gets gradient signal
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in leaves)
+    assert gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    state = M.init_decode_state(cfg, 2, 16)
+    tok = jnp.ones((2, 1), jnp.int32)
+    logits, state = M.decode_step(params, cfg, tok, state)
+    logits, state = M.decode_step(params, cfg, tok, state)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "qwen2-0.5b",
+                                  "deepseek-v2-236b", "jamba-v0.1-52b",
+                                  "xlstm-125m", "arctic-480b",
+                                  "phi3-medium-14b", "qwen2-vl-72b",
+                                  "deepseek-coder-33b"])
+def test_prefill_decode_consistency(arch):
+    """Forward logits == token-by-token decode logits (cache correctness,
+    incl. the MLA latent absorb trick and SSM state carry)."""
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch = {"tokens": toks, "patches": jnp.zeros((B, 0, cfg.d_model))}
+        x, _, _ = M.forward(params, cfg, batch)
+    else:
+        x, _, _ = M.forward(params, cfg, batch)
+    ref = M.logits_from_hidden(params, cfg, x)
+    state = M.init_decode_state(cfg, B, 16)
+    outs = []
+    for t in range(S):
+        lg, state = M.decode_step(params, cfg, toks[:, t:t + 1], state)
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_enc_dec_decode_consistency():
+    from repro.models.model import _run_encoder
+    cfg = reduced(get_config("seamless-m4t-medium"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0,
+                              cfg.vocab_size)
+    frames = 0.1 * jax.random.normal(jax.random.PRNGKey(6),
+                                     (B, 16, cfg.d_model))
+    x, _, _ = M.forward(params, cfg, {"tokens": toks, "frames": frames})
+    ref = M.logits_from_hidden(params, cfg, x)
+    enc_out, enc_pos = _run_encoder(params, cfg, frames, x.dtype)
+    state = M.init_decode_state(cfg, B, 16)
+    state["enc_out"], state["enc_pos"] = enc_out, enc_pos
+    outs = []
+    for t in range(S):
+        lg, state = M.decode_step(params, cfg, toks[:, t:t + 1], state)
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_analytic_param_counts_full_configs():
+    """Analytic counts for the FULL configs are in the advertised ballpark
+    (names encode the rough scale)."""
+    expect = {
+        "phi3-medium-14b": (10e9, 20e9),
+        "olmo-1b": (0.9e9, 1.6e9),
+        "deepseek-coder-33b": (28e9, 40e9),
+        "qwen2-0.5b": (0.3e9, 0.8e9),
+        "qwen2-vl-72b": (60e9, 85e9),
+        "xlstm-125m": (0.08e9, 0.25e9),
+        "jamba-v0.1-52b": (40e9, 65e9),
+        "deepseek-v2-236b": (180e9, 280e9),
+        "arctic-480b": (380e9, 560e9),
+        "seamless-m4t-medium": (0.7e9, 1.8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).approx_params()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_analytic_matches_actual_reduced():
+    """Analytic formula agrees with the real parameter count on reduced
+    configs (within the bits the formula intentionally ignores: norms,
+    small biases)."""
+    for arch in ARCHS:
+        cfg = reduced(get_config(arch))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        analytic = M.count_params_analytic(cfg)
+        assert abs(actual - analytic) / actual < 0.1, \
+            (arch, actual, analytic)

@@ -1,0 +1,96 @@
+"""Distributed walk engine == single-device engine, bit-exact.
+
+Runs in a subprocess with 8 forced host devices (device count must be set
+before jax initializes)."""
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import SamplerConfig
+from repro.core.distributed import (
+    gather_walks, init_sharded_walks, make_distributed_walker,
+    partition_edges)
+from repro.core.edge_store import store_from_arrays
+from repro.core.temporal_index import build_index, node_range, temporal_cutoff
+from repro.core.samplers import pick_in_neighborhood
+from repro.data.synthetic import powerlaw_temporal_graph
+
+N, E, D, L = 256, 4000, 8, 12
+g = powerlaw_temporal_graph(N, E, seed=4)
+scfg = SamplerConfig(bias="exponential", mode="index")
+
+# ---- single-device reference with the SAME (walk_id, step) RNG ----------
+store = store_from_arrays(g.src, g.dst, g.ts, edge_capacity=8192,
+                          node_capacity=N)
+idx = build_index(store, N)
+W = 128
+rng = np.random.default_rng(0)
+start_nodes = rng.integers(0, N, W).astype(np.int32)
+start_times = np.full(W, -1, np.int32)
+
+def ref_walks():
+    nodes = np.full((W, L + 1), -1, np.int32)
+    times = np.full((W, L + 1), -1, np.int32)
+    lengths = np.ones(W, np.int32)
+    nodes[:, 0] = start_nodes
+    times[:, 0] = start_times
+    cur_n = jnp.asarray(start_nodes)
+    cur_t = jnp.asarray(start_times)
+    alive = jnp.ones(W, bool)
+    base = jax.random.PRNGKey(0)
+    wid = jnp.arange(W)
+    for step in range(L):
+        a, b = node_range(idx, cur_n)
+        c = temporal_cutoff(idx, a, b, cur_t)
+        n = b - c
+        has = alive & (n > 0)
+        sk = jax.vmap(lambda w: jax.random.fold_in(
+            jax.random.fold_in(base, step), w))(wid)
+        u = jax.vmap(lambda k: jax.random.uniform(k, ()))(sk)
+        k = jnp.clip(pick_in_neighborhood(idx, scfg, c, b, u, cur_n),
+                     0, idx.edge_capacity - 1)
+        nn = jnp.where(has, idx.ns_dst[k], cur_n)
+        nt = jnp.where(has, idx.ns_ts[k], cur_t)
+        hnp = np.asarray(has)
+        nodes[hnp, int(1 + step) if False else 0] = nodes[hnp, 0]  # noop
+        for w in range(W):
+            if hnp[w]:
+                nodes[w, lengths[w]] = int(nn[w])
+                times[w, lengths[w]] = int(nt[w])
+                lengths[w] += 1
+        cur_n, cur_t, alive = nn, nt, has
+    return nodes, times, lengths
+
+ref_n, ref_t, ref_l = ref_walks()
+
+# ---- distributed --------------------------------------------------------
+mesh = jax.make_mesh((D,), ("data",))
+idx_stacked, range_size = partition_edges(g.src, g.dst, g.ts, N, D,
+                                          edge_capacity_per_shard=4096)
+# provision for the worst case: every walk converging on one shard
+state = init_sharded_walks(D, 160, L, start_nodes, start_times, range_size)
+runner = make_distributed_walker(mesh, "data", idx_stacked, scfg,
+                                 range_size=range_size, max_length=L,
+                                 bucket_capacity=128)
+out = runner(state)
+got_n, got_t, got_l = gather_walks(out, W)
+assert int(np.asarray(out.dropped).sum()) == 0, "bucket overflow"
+np.testing.assert_array_equal(got_l, ref_l)
+np.testing.assert_array_equal(got_n, ref_n)
+np.testing.assert_array_equal(got_t, ref_t)
+print("DISTRIBUTED_OK")
+"""
+
+
+def test_distributed_equals_single_device():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "DISTRIBUTED_OK" in out.stdout, \
+        (out.stdout[-1500:], out.stderr[-3000:])

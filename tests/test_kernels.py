@@ -1,0 +1,129 @@
+"""Per-kernel allclose vs pure-jnp oracles across shape/dtype sweeps
+(interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.edge_store import store_from_arrays
+from repro.core.temporal_index import build_index, node_range
+from repro.data.synthetic import powerlaw_temporal_graph
+from repro.kernels import ref as kref
+from repro.kernels.walk_step import walk_step_tiled
+from repro.kernels.weight_prefix import weight_prefix
+
+MODES = [("index", "uniform"), ("index", "linear"), ("index", "exponential"),
+         ("weight", "uniform"), ("weight", "exponential"),
+         ("weight", "linear")]
+
+
+def _setup(E=2048, N=128, W=512, seed=2):
+    g = powerlaw_temporal_graph(N, E - 100, seed=seed)
+    store = store_from_arrays(g.src % N, g.dst % N, g.ts,
+                              edge_capacity=E, node_capacity=N)
+    idx = build_index(store, N)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    nodes = jnp.sort(jax.random.randint(k1, (W,), 0, N))
+    times = jax.random.randint(k2, (W,), 0, 10_000)
+    u = jax.random.uniform(k3, (W,))
+    return idx, nodes, times, u
+
+
+def _tile_inputs(idx, nodes, TW, TE):
+    W = nodes.shape[0]
+    E = idx.edge_capacity
+    a, b = node_range(idx, nodes)
+    T = W // TW
+    a_t, b_t = a.reshape(T, TW), b.reshape(T, TW)
+    base_blocks = jnp.clip(jnp.min(a_t, axis=1) // TE, 0, E // TE - 2)
+    base = base_blocks * TE
+    lo_raw = (a_t - base[:, None]).reshape(W)
+    hi_raw = (b_t - base[:, None]).reshape(W)
+    oversize = (lo_raw < 0) | (hi_raw > 2 * TE - 1)
+    lo = jnp.clip(lo_raw, 0, 2 * TE - 1)
+    hi = jnp.clip(hi_raw, 0, 2 * TE - 1)
+    tbase = idx.node_tbase[jnp.clip(nodes, 0, idx.node_capacity - 1)]
+    return base_blocks.astype(jnp.int32), lo, hi, oversize, tbase
+
+
+@pytest.mark.parametrize("mode,bias", MODES)
+@pytest.mark.parametrize("TW,TE", [(128, 256), (64, 512), (256, 128)])
+def test_walk_step_matches_ref(mode, bias, TW, TE):
+    idx, nodes, times, u = _setup()
+    E = idx.edge_capacity
+    base_blocks, lo, hi, oversize, tbase = _tile_inputs(idx, nodes, TW, TE)
+    lin = mode == "weight" and bias == "linear"
+    pfx = idx.plin[:E] if lin else idx.pexp[:E]
+    pfxs = idx.plin[1:E + 1] if lin else idx.pexp[1:E + 1]
+    args = (idx.ns_ts[:E], idx.ns_dst[:E], pfx, pfxs, base_blocks,
+            times, lo, hi, u, tbase)
+    got = walk_step_tiled(*args, mode=mode, bias=bias, tile_walks=TW,
+                          tile_edges=TE, interpret=True)
+    want = kref.walk_step_ref(*args, mode=mode, bias=bias, tile_walks=TW,
+                              tile_edges=TE)
+    ok = ~oversize
+    for g_, w_ in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g_)[np.asarray(ok)],
+                                      np.asarray(w_)[np.asarray(ok)])
+
+
+def test_walk_step_oracle_matches_engine():
+    """The oracle itself agrees with the engine's global-path sampling."""
+    from repro.configs.base import SamplerConfig
+    from repro.core.samplers import pick_in_neighborhood
+    from repro.core.temporal_index import temporal_cutoff
+    idx, nodes, times, u = _setup()
+    E = idx.edge_capacity
+    TW, TE = 128, 512
+    base_blocks, lo, hi, oversize, tbase = _tile_inputs(idx, nodes, TW, TE)
+    args = (idx.ns_ts[:E], idx.ns_dst[:E], idx.pexp[:E], idx.pexp[1:E + 1],
+            base_blocks, times, lo, hi, u, tbase)
+    k_loc, n, dst, ts = kref.walk_step_ref(
+        *args, mode="weight", bias="exponential", tile_walks=TW, tile_edges=TE)
+    a, b = node_range(idx, nodes)
+    c = temporal_cutoff(idx, a, b, times)
+    scfg = SamplerConfig(bias="exponential", mode="weight")
+    k_engine = pick_in_neighborhood(idx, scfg, c, b, u, nodes)
+    W = nodes.shape[0]
+    tile_of_walk = jnp.arange(W) // TW
+    k_global = base_blocks[tile_of_walk] * TE + k_loc
+    ok = np.asarray(~oversize & (n > 0))
+    np.testing.assert_array_equal(np.asarray(k_global)[ok],
+                                  np.asarray(k_engine)[ok])
+
+
+@pytest.mark.parametrize("E,tile", [(1024, 128), (2048, 256), (4096, 1024)])
+@pytest.mark.parametrize("scale", [1.0, 0.1])
+def test_weight_prefix_matches_ref(E, tile, scale):
+    k = jax.random.PRNGKey(E)
+    dt = -jax.random.uniform(k, (E,)) * 50
+    valid = jnp.arange(E) < (E * 3 // 4)
+    got = weight_prefix(dt, valid, scale=scale, tile=tile, interpret=True)
+    want = kref.weight_prefix_ref(dt, valid, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_weight_prefix_dtype_sweep():
+    for dtype in (jnp.float32, jnp.int32):
+        dt = -jnp.arange(512, dtype=dtype) % 20
+        valid = jnp.ones((512,), bool)
+        got = weight_prefix(dt.astype(jnp.float32) * -1.0, valid,
+                            scale=0.5, tile=128, interpret=True)
+        want = kref.weight_prefix_ref(dt.astype(jnp.float32) * -1.0,
+                                      valid, 0.5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_index_prefix_consistency(small_index):
+    """pexp built by build_index equals the fused kernel's output."""
+    idx = small_index
+    E = idx.edge_capacity
+    nc = idx.node_capacity
+    dt = (idx.ns_ts - idx.node_tref[jnp.clip(idx.ns_src, 0, nc - 1)])
+    valid = idx.ns_src < nc
+    got = weight_prefix(dt.astype(jnp.float32), valid, scale=1.0,
+                        tile=1024, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(idx.pexp),
+                               rtol=1e-5, atol=1e-4)

@@ -1,0 +1,141 @@
+"""Sampler distribution laws (paper §2.5).
+
+The closed-form inverse CDFs must reproduce their target categorical
+distributions exactly (up to Monte-Carlo noise), and the weight-based
+samplers must match softmax/linear weights over real timestamps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.samplers import (
+    index_exponential,
+    index_linear,
+    index_uniform,
+    weighted_pick_exp,
+    weighted_pick_linear,
+)
+
+NDRAWS = 200_000
+
+
+def _hist(picks, n):
+    return np.bincount(np.asarray(picks), minlength=n)[:n] / len(picks)
+
+
+def _chi2_ok(observed, expected, ndraws, tol=5.0):
+    # normalized chi2 per bucket bounded (loose MC gate)
+    exp_counts = expected * ndraws
+    mask = exp_counts > 5
+    chi2 = np.sum((observed[mask] * ndraws - exp_counts[mask]) ** 2
+                  / exp_counts[mask])
+    dof = mask.sum()
+    return chi2 < tol * max(dof, 1)
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 64])
+def test_index_uniform_law(n):
+    u = jax.random.uniform(jax.random.PRNGKey(0), (NDRAWS,))
+    picks = index_uniform(u, jnp.full((NDRAWS,), n, jnp.int32))
+    h = _hist(picks, n)
+    assert _chi2_ok(h, np.full(n, 1.0 / n), NDRAWS)
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 64])
+def test_index_linear_law(n):
+    u = jax.random.uniform(jax.random.PRNGKey(1), (NDRAWS,))
+    picks = index_linear(u, jnp.full((NDRAWS,), n, jnp.int32))
+    w = np.arange(1, n + 1, dtype=np.float64)
+    assert _chi2_ok(_hist(picks, n), w / w.sum(), NDRAWS)
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 20])
+def test_index_exponential_law(n):
+    u = jax.random.uniform(jax.random.PRNGKey(2), (NDRAWS,))
+    picks = index_exponential(u, jnp.full((NDRAWS,), n, jnp.int32))
+    w = np.exp(np.arange(n, dtype=np.float64) - n)
+    assert _chi2_ok(_hist(picks, n), w / w.sum(), NDRAWS)
+
+
+def test_index_exponential_large_n_asymptotic():
+    """Above the float32 e^n threshold the log-domain form takes over and
+    must still concentrate on the most recent positions."""
+    n = 500
+    u = jax.random.uniform(jax.random.PRNGKey(3), (NDRAWS,))
+    picks = np.asarray(index_exponential(u, jnp.full((NDRAWS,), n, jnp.int32)))
+    assert picks.min() >= 0 and picks.max() <= n - 1
+    # P(i >= n-5) = (e^5-1+...)/... ~ 1 - e^-5 ≈ 0.993
+    assert (picks >= n - 5).mean() > 0.98
+
+
+def test_weighted_exp_matches_softmax():
+    ts = jnp.asarray([0, 5, 5, 8, 9], jnp.int32)
+    tref = int(ts.max())
+    w = jnp.exp((ts - tref).astype(jnp.float32))
+    pexp = jnp.concatenate([jnp.zeros(1), jnp.cumsum(w)])
+    u = jax.random.uniform(jax.random.PRNGKey(4), (NDRAWS,))
+    c = jnp.zeros((NDRAWS,), jnp.int32)
+    b = jnp.full((NDRAWS,), 5, jnp.int32)
+    picks = weighted_pick_exp(pexp, c, b, u)
+    target = np.asarray(w / w.sum(), np.float64)
+    assert _chi2_ok(_hist(picks, 5), target, NDRAWS)
+
+
+def test_weighted_exp_suffix_neighborhood():
+    """Sampling from a suffix [c, b) uses the same global prefix array."""
+    ts = jnp.asarray([0, 5, 5, 8, 9], jnp.int32)
+    w = jnp.exp((ts - 9).astype(jnp.float32))
+    pexp = jnp.concatenate([jnp.zeros(1), jnp.cumsum(w)])
+    u = jax.random.uniform(jax.random.PRNGKey(5), (NDRAWS,))
+    c = jnp.full((NDRAWS,), 2, jnp.int32)
+    b = jnp.full((NDRAWS,), 5, jnp.int32)
+    picks = np.asarray(weighted_pick_exp(pexp, c, b, u)) - 2
+    wn = np.asarray(w)[2:]
+    assert _chi2_ok(_hist(picks, 3), wn / wn.sum(), NDRAWS)
+
+
+def test_weighted_linear_matches_weights():
+    ts = jnp.asarray([2, 4, 4, 10], jnp.int32)
+    tbase = 2
+    elem = (ts - tbase + 1).astype(jnp.float32)
+    plin = jnp.concatenate([jnp.zeros(1), jnp.cumsum(elem)])
+    u = jax.random.uniform(jax.random.PRNGKey(6), (NDRAWS,))
+    c = jnp.zeros((NDRAWS,), jnp.int32)
+    b = jnp.full((NDRAWS,), 4, jnp.int32)
+    tb = jnp.full((NDRAWS,), tbase, jnp.int32)
+    picks = weighted_pick_linear(plin, ts, tb, c, b, u)
+    # w_i = ts_i - ts_c + 1 with ts_c = 2
+    w = np.asarray(ts, np.float64) - 2 + 1
+    assert _chi2_ok(_hist(picks, 4), w / w.sum(), NDRAWS)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 1.0, exclude_max=True), st.integers(1, 10_000))
+def test_index_samplers_in_range(u, n):
+    uu = jnp.asarray([u], jnp.float32)
+    nn = jnp.asarray([n], jnp.int32)
+    for f in (index_uniform, index_linear, index_exponential):
+        i = int(f(uu, nn)[0])
+        assert 0 <= i < n
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=30),
+       st.floats(0.0, 1.0, exclude_max=True))
+def test_weighted_exp_exact_inverse_cdf(ts_list, u):
+    """Property: the returned k is the minimal index whose cumulative
+    normalized weight reaches u."""
+    ts = np.sort(np.asarray(ts_list, np.int32))
+    w = np.exp((ts - ts.max()).astype(np.float64))
+    pexp = jnp.concatenate([jnp.zeros(1), jnp.cumsum(jnp.asarray(w, jnp.float32))])
+    n = len(ts)
+    k = int(weighted_pick_exp(pexp, jnp.asarray([0], jnp.int32),
+                              jnp.asarray([n], jnp.int32),
+                              jnp.asarray([u], jnp.float32))[0])
+    cdf = np.cumsum(w) / w.sum()
+    expected = int(np.searchsorted(cdf, u, side="right"))
+    # float32 rounding at bucket boundaries may move the pick by one bucket
+    assert abs(k - min(expected, n - 1)) <= 1

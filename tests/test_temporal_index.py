@@ -1,0 +1,130 @@
+"""Dual-index invariants (paper §2.3): both views index the same edge
+multiset; node regions and temporal cutoffs match a numpy oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.edge_store import TS_PAD, store_from_arrays
+from repro.core.temporal_index import (
+    adjacency_contains,
+    build_index,
+    node_range,
+    ranged_search,
+    temporal_cutoff,
+)
+
+
+def test_views_same_multiset(small_index, small_graph):
+    idx = small_index
+    n = int(idx.num_edges)
+    store_triples = sorted(zip(np.asarray(idx.store.src)[:n].tolist(),
+                               np.asarray(idx.store.dst)[:n].tolist(),
+                               np.asarray(idx.store.ts)[:n].tolist()))
+    ns_triples = sorted(zip(np.asarray(idx.ns_src)[:n].tolist(),
+                            np.asarray(idx.ns_dst)[:n].tolist(),
+                            np.asarray(idx.ns_ts)[:n].tolist()))
+    raw = sorted(zip(small_graph.src.tolist(), small_graph.dst.tolist(),
+                     small_graph.ts.tolist()))
+    assert store_triples == raw == ns_triples
+
+
+def test_store_is_ts_sorted(small_index):
+    ts = np.asarray(small_index.store.ts)
+    assert np.all(np.diff(ts.astype(np.int64)) >= 0)
+
+
+def test_ns_view_sorted_by_node_then_ts(small_index):
+    idx = small_index
+    n = int(idx.num_edges)
+    src = np.asarray(idx.ns_src)[:n].astype(np.int64)
+    ts = np.asarray(idx.ns_ts)[:n].astype(np.int64)
+    key = src * (1 << 32) + ts
+    assert np.all(np.diff(key) >= 0)
+
+
+def test_node_ranges_match_numpy(small_index, small_graph):
+    idx = small_index
+    g = small_graph
+    for v in [0, 1, 5, 50, 199, 255]:
+        a, b = node_range(idx, jnp.asarray(v))
+        expected = int(np.sum(g.src == v))
+        assert int(b) - int(a) == expected
+
+
+def test_temporal_cutoff_matches_numpy(small_index, small_graph):
+    idx = small_index
+    g = small_graph
+    rng = np.random.default_rng(0)
+    nodes = rng.integers(0, 200, 64)
+    times = rng.integers(0, 10_000, 64)
+    a, b = node_range(idx, jnp.asarray(nodes, jnp.int32))
+    c = temporal_cutoff(idx, a, b, jnp.asarray(times, jnp.int32))
+    for i, (v, t) in enumerate(zip(nodes, times)):
+        mask = g.src == v
+        expected = int(np.sum(g.ts[mask] > t))
+        assert int(b[i]) - int(c[i]) == expected, (v, t)
+
+
+def test_group_counts_match_numpy(small_index, small_graph):
+    idx = small_index
+    g = small_graph
+    counts = np.asarray(idx.node_group_counts)
+    for v in [0, 1, 2, 10, 100, 199]:
+        expected = len(np.unique(g.ts[g.src == v]))
+        assert counts[v] == expected
+
+
+def test_adjacency_contains(small_index, small_graph):
+    idx = small_index
+    g = small_graph
+    u0, w0 = int(g.src[0]), int(g.dst[0])
+    assert bool(adjacency_contains(idx, jnp.asarray(u0), jnp.asarray(w0)))
+    # a non-edge: find a pair not present
+    pairs = set(zip(g.src.tolist(), g.dst.tolist()))
+    for w in range(200):
+        if (u0, w) not in pairs:
+            assert not bool(adjacency_contains(idx, jnp.asarray(u0),
+                                               jnp.asarray(w)))
+            break
+
+
+def test_prefix_arrays_monotone(small_index):
+    pexp = np.asarray(small_index.pexp)
+    plin = np.asarray(small_index.plin)
+    assert np.all(np.diff(pexp) >= 0)
+    assert np.all(np.diff(plin) >= 0)
+    assert pexp[0] == 0 and plin[0] == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=200),
+       st.integers(-5, 1005))
+def test_ranged_search_is_searchsorted(values, target):
+    arr = np.sort(np.asarray(values, np.int32))
+    pad = np.full(256 - len(arr), TS_PAD, np.int32)
+    arr_p = jnp.asarray(np.concatenate([arr, pad]))
+    lo = jnp.asarray([0], jnp.int32)
+    hi = jnp.asarray([len(arr)], jnp.int32)
+    t = jnp.asarray([target], jnp.int32)
+    got_strict = int(ranged_search(arr_p, lo, hi, t, strict=True)[0])
+    got_ge = int(ranged_search(arr_p, lo, hi, t, strict=False)[0])
+    assert got_strict == int(np.searchsorted(arr, target, side="right"))
+    assert got_ge == int(np.searchsorted(arr, target, side="left"))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(1, 100))
+def test_build_index_arbitrary_ts(base_ts, n):
+    """Index build is robust to arbitrary timestamp magnitudes."""
+    rng = np.random.default_rng(n)
+    src = rng.integers(0, 8, n).astype(np.int32)
+    dst = rng.integers(0, 8, n).astype(np.int32)
+    span = min(1000, 2**31 - 2 - base_ts)
+    ts = (base_ts + rng.integers(0, span + 1, n)).astype(np.int32)
+    store = store_from_arrays(src, dst, ts, edge_capacity=128,
+                              node_capacity=8)
+    idx = build_index(store, 8)
+    assert int(idx.num_edges) == n
+    assert np.all(np.isfinite(np.asarray(idx.pexp)))

@@ -1,0 +1,162 @@
+"""Walk-engine invariants: causality, path equivalence, start modes,
+node2vec second-order law."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core.edge_store import store_from_arrays
+from repro.core.temporal_index import build_index
+from repro.core.validation import validate_walks, validate_walks_np
+from repro.core.walk_engine import NODE_PAD, generate_walks
+
+ALL_PATHS = ("fullwalk", "grouped", "tiled")
+BIAS_MODES = [("uniform", "index"), ("linear", "index"),
+              ("exponential", "index"), ("uniform", "weight"),
+              ("linear", "weight"), ("exponential", "weight")]
+
+
+@pytest.mark.parametrize("bias,mode", BIAS_MODES)
+def test_walks_causal(small_index, bias, mode, key):
+    wcfg = WalkConfig(num_walks=512, max_length=16, start_mode="nodes")
+    scfg = SamplerConfig(bias=bias, mode=mode)
+    res = generate_walks(small_index, key, wcfg, scfg, SchedulerConfig())
+    rep = validate_walks(small_index, res)
+    assert float(rep.hop_valid_frac) == 1.0
+    assert float(rep.walk_valid_frac) == 1.0
+
+
+@pytest.mark.parametrize("path", ALL_PATHS[1:])
+def test_path_equivalence(small_index, path, key):
+    """Grouped and tiled layouts emit identical walks to fullwalk."""
+    wcfg = WalkConfig(num_walks=512, max_length=12, start_mode="nodes")
+    scfg = SamplerConfig(bias="exponential", mode="weight")
+    ref = generate_walks(small_index, key, wcfg, scfg,
+                         SchedulerConfig(path="fullwalk"))
+    got = generate_walks(small_index, key, wcfg, scfg,
+                         SchedulerConfig(path=path, tile_walks=128,
+                                         tile_edges=512))
+    assert jnp.array_equal(ref.nodes, got.nodes)
+    assert jnp.array_equal(ref.times, got.times)
+    assert jnp.array_equal(ref.lengths, got.lengths)
+
+
+def test_path_equivalence_hub_graph(hub_index, key):
+    """Equivalence must hold under mega-hub skew (oversize fallback path)."""
+    wcfg = WalkConfig(num_walks=1024, max_length=10, start_mode="nodes")
+    scfg = SamplerConfig(bias="exponential", mode="index")
+    ref = generate_walks(hub_index, key, wcfg, scfg,
+                         SchedulerConfig(path="fullwalk"))
+    for path in ("grouped", "tiled"):
+        got = generate_walks(hub_index, key, wcfg, scfg,
+                             SchedulerConfig(path=path, tile_walks=256,
+                                             tile_edges=1024))
+        assert jnp.array_equal(ref.nodes, got.nodes), path
+
+
+def test_edges_start_mode(small_index, key):
+    wcfg = WalkConfig(num_walks=256, max_length=8, start_mode="edges")
+    scfg = SamplerConfig(start_bias="linear")
+    res = generate_walks(small_index, key, wcfg, scfg, SchedulerConfig())
+    rep = validate_walks(small_index, res)
+    assert float(rep.hop_valid_frac) == 1.0
+    # edges mode records (src, dst) of the start edge
+    lengths = np.asarray(res.lengths)
+    assert lengths.min() >= 2
+
+
+def test_all_nodes_start_mode(small_index, key):
+    wcfg = WalkConfig(num_walks=512, max_length=8, start_mode="all_nodes")
+    res = generate_walks(small_index, key, wcfg, SamplerConfig(),
+                         SchedulerConfig())
+    nodes0 = np.asarray(res.nodes[:, 0])
+    live = nodes0 != NODE_PAD
+    # walk w starts at node w % node_capacity when that node is active
+    expect = np.arange(512) % 256
+    assert np.all(nodes0[live] == expect[live])
+
+
+def test_walk_buffer_padding(small_index, key):
+    res = generate_walks(small_index, key,
+                         WalkConfig(num_walks=128, max_length=12,
+                                    start_mode="nodes"),
+                         SamplerConfig(), SchedulerConfig())
+    nodes = np.asarray(res.nodes)
+    lengths = np.asarray(res.lengths)
+    for w in range(128):
+        assert np.all(nodes[w, lengths[w]:] == NODE_PAD)
+        assert np.all(nodes[w, :lengths[w]] != NODE_PAD)
+
+
+def test_validator_detects_corruption(small_index, key):
+    res = generate_walks(small_index, key,
+                         WalkConfig(num_walks=128, max_length=12,
+                                    start_mode="nodes"),
+                         SamplerConfig(), SchedulerConfig())
+    rep0 = validate_walks(small_index, res)
+    assert float(rep0.walk_valid_frac) == 1.0
+    # corrupt: swap a hop's timestamps to violate monotonicity
+    lengths = np.asarray(res.lengths)
+    w = int(np.argmax(lengths >= 3))
+    if lengths[w] >= 3:
+        times = res.times.at[w, 1].set(res.times[w, 2] + 1)
+        bad = res._replace(times=times)
+        rep = validate_walks(small_index, bad)
+        assert float(rep.walk_valid_frac) < 1.0
+
+
+def test_node2vec_second_order_law(key):
+    """With q -> inf, non-returning non-common hops are suppressed."""
+    # triangle u->v at t=1, v->u at t=2, v->w at t=2, u->w edge absent
+    src = np.asarray([0, 1, 1], np.int32)
+    dst = np.asarray([1, 0, 2], np.int32)
+    ts = np.asarray([1, 2, 2], np.int32)
+    store = store_from_arrays(src, dst, ts, edge_capacity=8, node_capacity=4)
+    idx = build_index(store, 4)
+    wcfg = WalkConfig(num_walks=4096, max_length=3, start_mode="all_nodes")
+    # p=inf suppresses return (1->0); q=1 keeps out. Start at node 0 only.
+    scfg = SamplerConfig(bias="uniform", mode="index",
+                         node2vec_p=1e9, node2vec_q=1.0)
+    res = generate_walks(idx, key, wcfg, scfg, SchedulerConfig(path="fullwalk"))
+    nodes = np.asarray(res.nodes)
+    started_at_0 = nodes[:, 0] == 0
+    two_hops = np.asarray(res.lengths) >= 3
+    sel = started_at_0 & two_hops
+    # from 0 -> 1 at t=1 the second hop is 1->0 (return, suppressed by p)
+    # or 1->2; returns should be rare (8 rejection rounds each 1/2 proposal:
+    # residual fallback keeps a tiny fraction)
+    second = nodes[sel, 2]
+    frac_return = np.mean(second == 0) if sel.sum() else 0.0
+    assert frac_return < 0.02
+
+
+def test_np_validator_agrees(small_index, small_graph, key):
+    res = generate_walks(small_index, key,
+                         WalkConfig(num_walks=256, max_length=10,
+                                    start_mode="nodes"),
+                         SamplerConfig(), SchedulerConfig())
+    rep = validate_walks(small_index, res)
+    hv, wv = validate_walks_np(
+        (small_graph.src, small_graph.dst, small_graph.ts),
+        np.asarray(res.nodes), np.asarray(res.times),
+        np.asarray(res.lengths))
+    assert abs(float(rep.hop_valid_frac) - hv) < 1e-6
+    assert abs(float(rep.walk_valid_frac) - wv) < 1e-6
+
+
+def test_stats_collection(small_index, key):
+    from repro.core import scheduler as sched
+    res = generate_walks(small_index, key,
+                         WalkConfig(num_walks=512, max_length=8,
+                                    start_mode="nodes"),
+                         SamplerConfig(), SchedulerConfig(),
+                         collect_stats=True)
+    stats = np.asarray(res.stats)
+    assert stats.shape == (8, sched.NUM_STATS)
+    # alive counts decrease monotonically
+    alive = stats[:, sched.STAT_ALIVE]
+    assert np.all(np.diff(alive) <= 0)
+    # grouped modeled bytes never exceed fullwalk modeled bytes
+    assert np.all(stats[:, sched.STAT_BYTES_GROUPED]
+                  <= stats[:, sched.STAT_BYTES_FULLWALK] + 1e-6)

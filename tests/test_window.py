@@ -1,0 +1,120 @@
+"""Sliding-window semantics (paper §2.6): eviction invariant, late drops,
+overflow behavior, bounded memory."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core.edge_store import make_batch
+from repro.core.validation import validate_walks
+from repro.core.walk_engine import generate_walks
+from repro.core.window import ingest, init_window
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+
+
+def test_window_eviction_invariant():
+    g = powerlaw_temporal_graph(100, 2000, seed=5)
+    st_ = init_window(edge_capacity=2048, node_capacity=128, window=2500)
+    for bs, bd, bt in chronological_batches(g, 8):
+        st_ = ingest(st_, make_batch(bs, bd, bt, capacity=512), 128)
+        n = int(st_.index.store.num_edges)
+        if n:
+            ts = np.asarray(st_.index.store.ts)[:n]
+            assert ts.min() >= int(st_.t_now) - 2500
+
+
+def test_window_keeps_exact_set():
+    """After the full replay, the store holds exactly the edges within Δ of
+    the final time."""
+    g = powerlaw_temporal_graph(50, 500, seed=6)
+    delta = 3000
+    st_ = init_window(edge_capacity=1024, node_capacity=64, window=delta)
+    for bs, bd, bt in chronological_batches(g, 5):
+        st_ = ingest(st_, make_batch(bs, bd, bt, capacity=256), 64)
+    t_now = int(st_.t_now)
+    expected = sorted(
+        (int(s), int(d), int(t))
+        for s, d, t in zip(g.src, g.dst, g.ts) if t >= t_now - delta)
+    n = int(st_.index.store.num_edges)
+    got = sorted(zip(np.asarray(st_.index.store.src)[:n].tolist(),
+                     np.asarray(st_.index.store.dst)[:n].tolist(),
+                     np.asarray(st_.index.store.ts)[:n].tolist()))
+    assert got == expected
+    assert int(st_.ingested) == 500
+
+
+def test_late_edges_dropped():
+    st_ = init_window(edge_capacity=64, node_capacity=8, window=10)
+    st_ = ingest(st_, make_batch([0], [1], [100], capacity=8), 8)
+    # t=50 is older than 100-10=90: dropped without retraction; t=95 kept
+    st_ = ingest(st_, make_batch([1, 2], [2, 3], [50, 95], capacity=8), 8)
+    assert int(st_.late_drops) == 1
+    assert int(st_.index.store.num_edges) == 2
+
+
+def test_overflow_keeps_newest():
+    st_ = init_window(edge_capacity=8, node_capacity=8, window=10_000)
+    ts = np.arange(12, dtype=np.int32)
+    st_ = ingest(st_, make_batch(np.zeros(12, np.int32),
+                                 np.ones(12, np.int32), ts, capacity=16), 8)
+    assert int(st_.overflow_drops) == 4
+    kept = np.asarray(st_.index.store.ts)[:8]
+    assert kept.tolist() == list(range(4, 12))
+
+
+def test_memory_constant_across_stream():
+    """Paper Fig. 11b: device bytes flat across batches."""
+    from repro.core.edge_store import store_nbytes
+    g = powerlaw_temporal_graph(100, 2000, seed=7)
+    st_ = init_window(edge_capacity=1024, node_capacity=128, window=1500)
+    sizes = []
+    for bs, bd, bt in chronological_batches(g, 10):
+        st_ = ingest(st_, make_batch(bs, bd, bt, capacity=256), 128)
+        sizes.append(store_nbytes(st_.index.store))
+    assert len(set(sizes)) == 1   # exactly constant: static shapes
+
+
+def test_walks_on_windowed_index_valid(key=jax.random.PRNGKey(0)):
+    g = powerlaw_temporal_graph(100, 2000, seed=8)
+    st_ = init_window(edge_capacity=2048, node_capacity=128, window=4000)
+    for bs, bd, bt in chronological_batches(g, 4):
+        st_ = ingest(st_, make_batch(bs, bd, bt, capacity=512), 128)
+        res = generate_walks(st_.index, key,
+                             WalkConfig(num_walks=256, max_length=8,
+                                        start_mode="nodes"),
+                             SamplerConfig(), SchedulerConfig())
+        rep = validate_walks(st_.index, res)
+        assert float(rep.hop_valid_frac) == 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7),
+                          st.integers(0, 1000)),
+                min_size=1, max_size=60),
+       st.integers(1, 500))
+def test_window_matches_bruteforce(edges, delta):
+    """Property: streaming ingestion == brute-force window filter."""
+    edges = sorted(edges, key=lambda e: e[2])
+    n = len(edges)
+    st_ = init_window(edge_capacity=128, node_capacity=8, window=delta)
+    third = max(n // 3, 1)
+    t_now = -1
+    consumed = []
+    for i in range(0, n, third):
+        chunk = edges[i:i + third]
+        consumed += chunk
+        bs = [e[0] for e in chunk]
+        bd = [e[1] for e in chunk]
+        bt = [e[2] for e in chunk]
+        st_ = ingest(st_, make_batch(bs, bd, bt, capacity=64), 8)
+        t_now = max(t_now, max(bt))
+        expected = sorted((s, d, t) for s, d, t in consumed
+                          if t >= t_now - delta)
+        m = int(st_.index.store.num_edges)
+        got = sorted(zip(np.asarray(st_.index.store.src)[:m].tolist(),
+                         np.asarray(st_.index.store.dst)[:m].tolist(),
+                         np.asarray(st_.index.store.ts)[:m].tolist()))
+        assert got == expected
