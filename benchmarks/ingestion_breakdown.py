@@ -1,11 +1,12 @@
 """Paper Table 4: per-batch ingestion time breakdown.
 
 Stages (TPU/CPU analog of the paper's NVTX ranges):
-  sort     — timestamp sort of the incoming batch + store merge sort
+  sort     — timestamp sort of the incoming batch (the store-side merge is
+             rank-based, DESIGN.md §4, measured in the sort-vs-merge emit)
   weight   — cumulative-weight prefix construction (the fused kernel path)
   h2d      — host->device transfer of the raw batch
-  pipeline — everything else in the jitted ingest (offsets, eviction,
-             gathers) + dispatch overhead
+  pipeline — everything else in the jitted ingest (merge ranks, eviction,
+             gathers, index rebuild) + dispatch overhead
 """
 from __future__ import annotations
 
@@ -17,15 +18,16 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.edge_store import make_batch
-from repro.core.window import ingest, init_window
+from repro.core.window import ingest, ingest_sort, init_window
 from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
 from repro.kernels.weight_prefix import weight_prefix
 
 
-def run(num_nodes=2048, num_edges=120_000, batches=12):
+def run(num_nodes=2048, num_edges=120_000, batches=12,
+        edge_capacity=131072, window=4000):
     g = powerlaw_temporal_graph(num_nodes, num_edges, seed=3)
-    state = init_window(edge_capacity=131072, node_capacity=num_nodes,
-                        window=4000)
+    state = init_window(edge_capacity=edge_capacity, node_capacity=num_nodes,
+                        window=window)
     bcap = num_edges // batches + 64
 
     t_sort = t_weight = t_h2d = t_total = 0.0
@@ -70,7 +72,37 @@ def run(num_nodes=2048, num_edges=120_000, batches=12):
     emit("table4/breakdown", 1e6 * tot / n,
          ";".join(f"{k}={100*v/tot:.1f}%" for k, v in parts.items())
          + f";total_ms={1e3*tot/n:.1f}")
+    _run_sort_vs_merge(g, num_nodes, num_edges, batches, bcap,
+                       edge_capacity, window)
     return parts
+
+
+def _run_sort_vs_merge(g, num_nodes, num_edges, batches, bcap,
+                       edge_capacity, window):
+    """Old-vs-new window advance: seed concat+argsort vs rank-based merge
+    (DESIGN.md §4), identical stream, identical states."""
+    timings = {}
+    for name, fn in (("sort", ingest_sort), ("merge", ingest)):
+        state = init_window(edge_capacity=edge_capacity,
+                            node_capacity=num_nodes, window=window)
+        per_batch_s = []
+        for bs, bd, bt in chronological_batches(g, batches):
+            batch = make_batch(bs, bd, bt, capacity=bcap)
+            jax.block_until_ready(batch.src)
+            t0 = time.perf_counter()
+            state = fn(state, batch, num_nodes)
+            jax.block_until_ready(state.index.ns_order)
+            per_batch_s.append(time.perf_counter() - t0)
+        # skip the compile batch when there is a steady state to report
+        steady = per_batch_s[1:] if len(per_batch_s) > 1 else per_batch_s
+        timings[name] = sum(steady) / len(steady)
+    edges_per_batch = num_edges / batches
+    for name, per_batch in timings.items():
+        emit(f"table4/ingest_{name}", 1e6 * per_batch,
+             f"edges_per_s={edges_per_batch/per_batch:.3e}")
+    emit("table4/merge_speedup",
+         1e6 * (timings["sort"] - timings["merge"]),
+         f"speedup={timings['sort']/timings['merge']:.2f}x")
 
 
 if __name__ == "__main__":

@@ -3,47 +3,67 @@
 Prints ``name,us_per_call,derived`` CSV lines. CPU wall-clock timings are
 relative claims only (DESIGN.md §9); the TPU performance story lives in
 EXPERIMENTS.md §Roofline/§Perf (from the compiled dry-run).
+
+Usage:
+    python -m benchmarks.run [--help] [filter]
+
+With a ``filter`` argument, only suites whose name contains the substring
+run. ``--help`` lists every suite with its paper counterpart (the same set
+documented in benchmarks/README.md).
 """
 from __future__ import annotations
 
 import sys
 import traceback
 
+# (suite name, module name, paper counterpart, one-line description)
+SUITES = [
+    ("table2_scheduler_ablation", "ablation_scheduler", "Table 2",
+     "walk throughput across scheduler paths + modeled HBM traffic"),
+    ("table3_tier_distribution", "tier_distribution", "Table 3",
+     "dispatch-plane tier statistics over the (W, G) grid"),
+    ("table4_ingestion_breakdown", "ingestion_breakdown", "Table 4",
+     "per-batch ingestion stage breakdown + sort-vs-merge advance"),
+    ("table5_tea_baseline", "baseline_tea", "Table 5",
+     "Tempest vs TEA-style CPU temporal-walk baseline"),
+    ("table6_validity_static", "validity_static", "Table 6",
+     "causal validity: temporal engine vs static walker"),
+    ("fig6_streaming_replay", "streaming_replay", "Fig. 6",
+     "streaming replay latency/headroom; 3 drivers old-vs-new throughput"),
+    ("fig7_scaling_edges", "scaling_edges", "Fig. 7",
+     "ingest + walk cost vs active edge count"),
+    ("fig8_9_param_sweeps", "param_sweeps", "Figs. 8-9",
+     "tile_walks/tile_edges (block-dim analog) + solo_threshold sweeps"),
+    ("fig10_window_sensitivity", "window_sensitivity", "Fig. 10",
+     "window duration sweep: active edges, drops, per-batch cost"),
+    ("fig11_memory_usage", "memory_usage", "Fig. 11",
+     "device bytes across a stream (exactly constant) + accounting"),
+]
+
+
+def _print_help() -> None:
+    print(__doc__.strip())
+    print("\nSuites:")
+    width = max(len(n) for n, *_ in SUITES)
+    for name, _mod, paper, desc in SUITES:
+        print(f"  {name:<{width}}  {paper:<9} {desc}")
+
 
 def main() -> None:
-    from benchmarks import (
-        ablation_scheduler,
-        baseline_tea,
-        ingestion_breakdown,
-        memory_usage,
-        param_sweeps,
-        scaling_edges,
-        streaming_replay,
-        tier_distribution,
-        validity_static,
-        window_sensitivity,
-    )
+    if any(a in ("-h", "--help") for a in sys.argv[1:]):
+        _print_help()
+        return
 
-    suites = [
-        ("table2_scheduler_ablation", ablation_scheduler.run),
-        ("table3_tier_distribution", tier_distribution.run),
-        ("table4_ingestion_breakdown", ingestion_breakdown.run),
-        ("table5_tea_baseline", baseline_tea.run),
-        ("table6_validity_static", validity_static.run),
-        ("fig6_streaming_replay", streaming_replay.run),
-        ("fig7_scaling_edges", scaling_edges.run),
-        ("fig8_9_param_sweeps", param_sweeps.run),
-        ("fig10_window_sensitivity", window_sensitivity.run),
-        ("fig11_memory_usage", memory_usage.run),
-    ]
+    import importlib
+
     only = sys.argv[1] if len(sys.argv) > 1 else None
     failed = []
-    for name, fn in suites:
+    for name, mod_name, _paper, _desc in SUITES:
         if only and only not in name:
             continue
         print(f"# --- {name} ---", flush=True)
         try:
-            fn()
+            importlib.import_module(f"benchmarks.{mod_name}").run()
         except Exception:
             traceback.print_exc()
             failed.append(name)

@@ -4,14 +4,20 @@ from repro.core.edge_store import (
     EdgeStore,
     empty_store,
     make_batch,
+    stack_batches,
     store_from_arrays,
 )
-from repro.core.temporal_index import TemporalIndex, build_index
+from repro.core.temporal_index import (
+    TemporalIndex,
+    build_index,
+    build_index_donated,
+)
 from repro.core.walk_engine import WalkResult, generate_walks
-from repro.core.window import WindowState, ingest, init_window
+from repro.core.window import WindowState, ingest, ingest_sort, init_window
 
 __all__ = [
-    "EdgeBatch", "EdgeStore", "empty_store", "make_batch",
+    "EdgeBatch", "EdgeStore", "empty_store", "make_batch", "stack_batches",
     "store_from_arrays", "TemporalIndex", "build_index",
-    "WalkResult", "generate_walks", "WindowState", "ingest", "init_window",
+    "build_index_donated", "WalkResult", "generate_walks", "WindowState",
+    "ingest", "ingest_sort", "init_window",
 ]

@@ -46,21 +46,55 @@ class EdgeStore(NamedTuple):
         return self.src.shape[0]
 
 
-def make_batch(src, dst, ts, capacity: int | None = None) -> EdgeBatch:
-    """Build an EdgeBatch from host arrays, padding to capacity."""
+def _pad_host(src, dst, ts, capacity: int):
+    """Shared host-side batch padding: zeros for src/dst, TS_PAD for ts.
+    Returns (src, dst, ts, n) numpy arrays of length ``capacity``."""
     src = np.asarray(src, np.int32)
     dst = np.asarray(dst, np.int32)
     ts = np.asarray(ts, np.int32)
     n = src.shape[0]
-    cap = capacity or max(n, 1)
-    if n > cap:
-        raise ValueError(f"batch of {n} exceeds capacity {cap}")
-    pad = cap - n
+    if n > capacity:
+        raise ValueError(f"batch of {n} exceeds capacity {capacity}")
+    pad = capacity - n
+    return (np.concatenate([src, np.zeros(pad, np.int32)]),
+            np.concatenate([dst, np.zeros(pad, np.int32)]),
+            np.concatenate([ts, np.full(pad, TS_PAD, np.int32)]),
+            n)
+
+
+def make_batch(src, dst, ts, capacity: int | None = None) -> EdgeBatch:
+    """Build an EdgeBatch from host arrays, padding to capacity."""
+    n = np.asarray(src).shape[0]
+    src, dst, ts, n = _pad_host(src, dst, ts, capacity or max(n, 1))
     return EdgeBatch(
-        src=jnp.asarray(np.concatenate([src, np.zeros(pad, np.int32)])),
-        dst=jnp.asarray(np.concatenate([dst, np.zeros(pad, np.int32)])),
-        ts=jnp.asarray(np.concatenate([ts, np.full(pad, TS_PAD, np.int32)])),
+        src=jnp.asarray(src),
+        dst=jnp.asarray(dst),
+        ts=jnp.asarray(ts),
         count=jnp.asarray(n, jnp.int32),
+    )
+
+
+def stack_batches(batches, capacity: int) -> EdgeBatch:
+    """Stack K host batches into one device-resident EdgeBatch of shape
+    [K, capacity] (+ count[K]) with a single host->device transfer.
+
+    The result is scan-able: ``jax.lax.scan`` over the leading axis yields
+    one per-batch EdgeBatch per step (used by streaming.replay_scan).
+    """
+    srcs, dsts, tss, counts = [], [], [], []
+    for s, d, t in batches:
+        s, d, t, n = _pad_host(s, d, t, capacity)
+        srcs.append(s)
+        dsts.append(d)
+        tss.append(t)
+        counts.append(n)
+    if not srcs:
+        raise ValueError("stack_batches needs at least one batch")
+    return EdgeBatch(
+        src=jnp.asarray(np.stack(srcs)),
+        dst=jnp.asarray(np.stack(dsts)),
+        ts=jnp.asarray(np.stack(tss)),
+        count=jnp.asarray(np.asarray(counts, np.int32)),
     )
 
 

@@ -1,12 +1,34 @@
-"""Streaming driver: chronological batch replay with per-batch walk
-generation (the paper's §3.3 operating regime) and stage timings."""
+"""Streaming drivers: chronological batch replay (paper §3.3 regime).
+
+Two drivers over the same merge-based ingest (DESIGN.md §4):
+
+* **Host loop** (`StreamingEngine.replay`) — one ingest dispatch + one walk
+  dispatch per batch, with a `block_until_ready` after each so per-stage
+  wall-clock timings can be recorded. This is the measurement driver
+  (benchmarks Table 4 / Fig. 6 need per-batch stage latencies).
+
+* **Device-resident scan** (`replay_scan` / `StreamingEngine.replay_device`)
+  — all K batches are stacked into one device array and the whole
+  ingest→rebuild→walk loop runs under a single `jax.lax.scan` with the
+  window state donated into the jit. Per-batch statistics (active edges,
+  drop counters, walk lengths) are accumulated on-device as scan outputs
+  and materialized **once** at the end — zero host round-trips between
+  batches. This is the throughput driver: dispatch overhead and host
+  synchronization are off the critical path, so sustained ingest bandwidth
+  is what the hardware allows.
+
+`ingest_and_walk` is the shared fused step: one jitted program covering
+merge-ingest + index rebuild + walk generation, donating the old state.
+"""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Iterable, List, Optional
+from functools import partial
+from typing import Callable, Iterable, List, NamedTuple, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import (
@@ -15,9 +37,15 @@ from repro.configs.base import (
     SchedulerConfig,
     WalkConfig,
 )
-from repro.core.edge_store import make_batch
+from repro.core.edge_store import EdgeBatch, make_batch, stack_batches
 from repro.core.walk_engine import generate_walks
-from repro.core.window import WindowState, ingest, init_window
+from repro.core.window import (
+    WindowState,
+    ingest,
+    ingest_impl,
+    ingest_sort,
+    init_window,
+)
 
 
 @dataclass
@@ -36,12 +64,91 @@ class StreamStats:
         return np.cumsum(self.sample_s)
 
 
-class StreamingEngine:
-    """Tempest's end-to-end loop: ingest -> rebuild -> walk."""
+class ReplayStats(NamedTuple):
+    """Per-batch statistics of a device-resident replay ([K] arrays).
 
-    def __init__(self, cfg: EngineConfig, batch_capacity: int):
+    Gathered as `lax.scan` outputs — reading them costs one device->host
+    transfer for the whole replay, not one per batch.
+    """
+
+    edges_active: jax.Array     # int32[K] store population after each batch
+    t_now: jax.Array            # int32[K]
+    ingested: jax.Array         # int32[K] cumulative counters after each batch
+    late_drops: jax.Array       # int32[K]
+    overflow_drops: jax.Array   # int32[K]
+    mean_len: jax.Array         # float32[K] mean walk length per batch
+
+
+def _ingest_and_walk_impl(state: WindowState, batch: EdgeBatch,
+                          key: jax.Array, node_capacity: int,
+                          wcfg: WalkConfig, scfg: SamplerConfig,
+                          sched_cfg: SchedulerConfig,
+                          bias_scale: float = 1.0):
+    state = ingest_impl(state, batch, node_capacity, bias_scale)
+    res = generate_walks(state.index, key, wcfg, scfg, sched_cfg)
+    return state, res
+
+
+# Fused step: ingest + rebuild + walk in ONE jitted program, old state
+# donated. One dispatch per batch instead of two, and XLA may overlap the
+# index rebuild with the first hops of the walk scan.
+ingest_and_walk = partial(
+    jax.jit,
+    static_argnames=("node_capacity", "wcfg", "scfg", "sched_cfg",
+                     "bias_scale"),
+    donate_argnums=(0,),
+)(_ingest_and_walk_impl)
+
+
+@partial(jax.jit,
+         static_argnames=("node_capacity", "wcfg", "scfg", "sched_cfg",
+                          "bias_scale"),
+         donate_argnums=(0,))
+def replay_scan(state: WindowState, batches: EdgeBatch, key: jax.Array,
+                node_capacity: int, wcfg: WalkConfig, scfg: SamplerConfig,
+                sched_cfg: SchedulerConfig, bias_scale: float = 1.0):
+    """Replay K stacked batches fully on device under `jax.lax.scan`.
+
+    ``batches`` holds [K, B_cap] arrays (see edge_store.stack_batches).
+    Returns ``(final_state, ReplayStats)`` — both still on device; the
+    caller decides when to synchronize (a single block_until_ready at the
+    end of the replay is the intended pattern).
+    """
+
+    def step(carry, batch):
+        st, k = carry
+        k, sub = jax.random.split(k)
+        st, res = _ingest_and_walk_impl(st, batch, sub, node_capacity,
+                                        wcfg, scfg, sched_cfg, bias_scale)
+        stats = ReplayStats(
+            edges_active=st.index.num_edges,
+            t_now=st.t_now,
+            ingested=st.ingested,
+            late_drops=st.late_drops,
+            overflow_drops=st.overflow_drops,
+            mean_len=jnp.mean(res.lengths.astype(jnp.float32)),
+        )
+        return (st, k), stats
+
+    (state, _), stats = jax.lax.scan(step, (state, key), batches)
+    return state, stats
+
+
+class StreamingEngine:
+    """Tempest's end-to-end loop: ingest -> rebuild -> walk.
+
+    ``ingest_impl`` selects the window-advance algorithm: ``"merge"`` (the
+    rank-based two-run merge, default) or ``"sort"`` (the seed's global
+    argsort, kept as the equivalence/benchmark reference).
+    """
+
+    def __init__(self, cfg: EngineConfig, batch_capacity: int,
+                 ingest_impl: str = "merge"):
+        if ingest_impl not in ("merge", "sort"):
+            raise ValueError(f"unknown ingest_impl {ingest_impl!r}")
         self.cfg = cfg
         self.batch_capacity = batch_capacity
+        self._ingest = ingest if ingest_impl == "merge" else ingest_sort
         self.state: WindowState = init_window(
             cfg.window.edge_capacity, cfg.window.node_capacity,
             int(cfg.window.duration))
@@ -51,8 +158,8 @@ class StreamingEngine:
     def ingest_batch(self, src, dst, ts) -> None:
         batch = make_batch(src, dst, ts, capacity=self.batch_capacity)
         t0 = time.perf_counter()
-        self.state = ingest(self.state, batch,
-                            self.cfg.window.node_capacity)
+        self.state = self._ingest(self.state, batch,
+                                  self.cfg.window.node_capacity)
         jax.block_until_ready(self.state.index.ns_order)
         self.stats.ingest_s.append(time.perf_counter() - t0)
         self.stats.edges_active.append(int(self.state.index.num_edges))
@@ -70,9 +177,27 @@ class StreamingEngine:
 
     def replay(self, batches: Iterable, wcfg: WalkConfig,
                on_batch: Optional[Callable] = None):
+        """Host-loop driver: per-batch dispatch + sync (stage timings)."""
         for bs, bd, bt in batches:
             self.ingest_batch(bs, bd, bt)
             res = self.sample_walks(wcfg)
             if on_batch is not None:
                 on_batch(self, res)
         return self.stats
+
+    def replay_device(self, batches: Iterable, wcfg: WalkConfig):
+        """Device-resident driver: one `lax.scan` over all batches, one
+        host sync at the end. Returns (ReplayStats on host, wall seconds).
+        """
+        stacked = stack_batches(batches, self.batch_capacity)
+        self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
+        self.state, stats = replay_scan(
+            self.state, stacked, sub, self.cfg.window.node_capacity,
+            wcfg, self.cfg.sampler, self.cfg.scheduler)
+        jax.block_until_ready(stats)           # the single sync point
+        elapsed = time.perf_counter() - t0
+        # NOTE: self.stats is left untouched — StreamStats' lists are
+        # parallel per host-loop batch, and this driver has no per-batch
+        # host timings to pair with. Everything lives in the return value.
+        return ReplayStats(*(np.asarray(a) for a in stats)), elapsed

@@ -85,9 +85,8 @@ class TemporalIndex(NamedTuple):
         return self.ns_order.shape[0]
 
 
-@partial(jax.jit, static_argnames=("node_capacity", "bias_scale"))
-def build_index(store: EdgeStore, node_capacity: int,
-                bias_scale: float = 1.0) -> TemporalIndex:
+def _build_index_impl(store: EdgeStore, node_capacity: int,
+                      bias_scale: float = 1.0) -> TemporalIndex:
     """Bulk dual-index reconstruction (paper §2.6: two sorts + linear passes)."""
     E = store.capacity
     n_valid = store.num_edges
@@ -161,6 +160,20 @@ def build_index(store: EdgeStore, node_capacity: int,
         pexp_store=pexp_store, plin_store=plin_store,
         adj_order=adj_order, adj_dst=adj_dst,
     )
+
+
+# ``build_index`` leaves the caller's store valid (tests and static pipelines
+# read the raw store after indexing). ``build_index_donated`` donates the
+# store buffers for standalone rebuild-in-place callers (init_window; any
+# re-index of a store the caller is done with). Inside the already-jitted
+# window advance the inner jit's donation annotation is inert — there, buffer
+# reuse comes from ``ingest``'s own donate_argnums (DESIGN.md §4).
+build_index = partial(jax.jit, static_argnames=("node_capacity",
+                                                "bias_scale"))(
+    _build_index_impl)
+build_index_donated = partial(jax.jit,
+                              static_argnames=("node_capacity", "bias_scale"),
+                              donate_argnums=(0,))(_build_index_impl)
 
 
 # ---------------------------------------------------------------------------

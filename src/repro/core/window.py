@@ -2,13 +2,29 @@
 
 The active window W(t) = {e : t − Δ ≤ t_e ≤ t}. Each incoming batch:
 
-1. is sorted by timestamp (GPU radix sort in the paper; XLA sort here),
+1. is sorted by timestamp (GPU radix sort in the paper; XLA sort here —
+   the batch is small, so this is the O(b log b) part),
 2. advances t to max(t, batch max ts),
 3. drops batch edges older than t − Δ ("too late", no retraction),
 4. evicts the store prefix older than t − Δ (prefix drop — the payoff of the
    timestamp-sorted shared store),
-5. merges the two sorted runs and **bulk-rebuilds** the dual index
-   (paper: reconstruction over incremental mutation).
+5. merges the two **already-sorted runs** into the new store and
+   bulk-rebuilds the dual index (paper: reconstruction over incremental
+   mutation).
+
+Step (5) is merge-based (DESIGN.md §4): the surviving store suffix and the
+sorted batch are two sorted runs, so each element's output position is its
+own index plus a ``searchsorted`` rank into the *other* run — O(m·log b +
+b·log m) vectorized searches and one scatter, replacing the seed's global
+concat+argsort (O((m+b)·log(m+b))). The seed path is kept as
+``ingest_sort`` as the equivalence reference; both produce byte-identical
+``WindowState``s (tested in tests/test_streaming_merge.py).
+
+The public ``ingest`` donates the incoming ``WindowState`` (``jax.jit``
+``donate_argnums``), so the window advances in place: XLA aliases the old
+store/index buffers into the new ones instead of reallocating ~10 arrays of
+edge capacity per batch. Callers must treat the passed-in state as consumed
+(every in-repo caller already reassigns ``state = ingest(state, ...)``).
 
 Everything is static-shape: the store is capacity-padded; on overflow the
 *oldest* edges are dropped (the window semantics make this the only
@@ -23,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.edge_store import TS_PAD, EdgeBatch, EdgeStore
-from repro.core.temporal_index import TemporalIndex, build_index
+from repro.core.temporal_index import TemporalIndex, build_index, build_index_donated
 
 
 class WindowState(NamedTuple):
@@ -39,17 +55,30 @@ def init_window(edge_capacity: int, node_capacity: int, window: int,
                 bias_scale: float = 1.0) -> WindowState:
     from repro.core.edge_store import empty_store
     store = empty_store(edge_capacity, node_capacity)
-    index = build_index(store, node_capacity, bias_scale)
-    z = jnp.asarray(0, jnp.int32)
-    return WindowState(index=index, t_now=z,
+    index = build_index_donated(store, node_capacity, bias_scale)
+    # distinct scalar buffers: donation (ingest donate_argnums) rejects a
+    # state whose fields alias one another
+    def z():
+        return jnp.asarray(0, jnp.int32)
+    return WindowState(index=index, t_now=z(),
                        window=jnp.asarray(window, jnp.int32),
-                       ingested=z, late_drops=z, overflow_drops=z)
+                       ingested=z(), late_drops=z(), overflow_drops=z())
 
 
-@partial(jax.jit, static_argnames=("node_capacity", "bias_scale"))
-def ingest(state: WindowState, batch: EdgeBatch, node_capacity: int,
-           bias_scale: float = 1.0) -> WindowState:
-    """Advance the window by one batch and rebuild the dual index."""
+# ---------------------------------------------------------------------------
+# Shared pipeline stages (steps 1-4): batch sort, time advance, late drop,
+# prefix eviction. Both the merge and the reference sort path run these.
+# ---------------------------------------------------------------------------
+
+
+def _prepare_runs(state: WindowState, batch: EdgeBatch, node_capacity: int):
+    """Return the two ts-sorted runs to merge plus bookkeeping scalars.
+
+    Run S: the surviving store suffix, compacted to the front of length-E
+    arrays (TS_PAD / virtual-node padding beyond ``keep_n``).
+    Run B: the kept batch edges, ts-sorted and compacted to the front of
+    length-B arrays (TS_PAD padding beyond ``bn``).
+    """
     store = state.index.store
     E = store.capacity
     B = batch.src.shape[0]
@@ -88,23 +117,22 @@ def ingest(state: WindowState, batch: EdgeBatch, node_capacity: int,
     sdst = jnp.where(live, store.dst[jnp.clip(idx, 0, E - 1)], 0)
     sts = jnp.where(live, store.ts[jnp.clip(idx, 0, E - 1)], TS_PAD)
 
-    # (5) merge two ts-sorted runs: concat + sort (XLA sort is the TPU
-    # analog of the paper's radix sort; O((m+b) log) vs O(m+b), recorded
-    # as a hardware adaptation).
-    msrc = jnp.concatenate([ssrc, bsrc])
-    mdst = jnp.concatenate([sdst, bdst])
-    mts = jnp.concatenate([sts, bts])
-    morder = jnp.argsort(mts).astype(jnp.int32)
-    msrc, mdst, mts = msrc[morder], mdst[morder], mts[morder]
+    return ((ssrc, sdst, sts, keep_n), (bsrc, bdst, bts, bn), t_now, late)
+
+
+def _finalize(state: WindowState, merged, keep_n, bn, t_now, late,
+              batch_count, node_capacity: int, bias_scale: float):
+    """Overflow-clip the merged run to capacity and rebuild the dual index."""
+    msrc, mdst, mts = merged
+    E = state.index.store.capacity
+    EM = msrc.shape[0]
 
     total = keep_n + bn
     overflow = jnp.maximum(total - E, 0)
     # on overflow keep the NEWEST E edges: shift window right by `overflow`
-    shift = overflow
-    idx2 = jnp.arange(E, dtype=jnp.int32) + shift
+    idx2 = jnp.arange(E, dtype=jnp.int32) + overflow
     n_after = jnp.minimum(total, E)
     live2 = jnp.arange(E, dtype=jnp.int32) < n_after
-    EM = msrc.shape[0]
     new_store = EdgeStore(
         src=jnp.where(live2, msrc[jnp.clip(idx2, 0, EM - 1)], node_capacity),
         dst=jnp.where(live2, mdst[jnp.clip(idx2, 0, EM - 1)], 0),
@@ -115,7 +143,70 @@ def ingest(state: WindowState, batch: EdgeBatch, node_capacity: int,
     index = build_index(new_store, node_capacity, bias_scale)
     return WindowState(
         index=index, t_now=t_now, window=state.window,
-        ingested=state.ingested + batch.count,
+        ingested=state.ingested + batch_count,
         late_drops=state.late_drops + late,
         overflow_drops=state.overflow_drops + overflow,
     )
+
+
+# ---------------------------------------------------------------------------
+# Step 5, merge path (default): rank-based two-run merge, O(m+b) data
+# movement + O(m log b + b log m) vectorized binary searches. No global sort.
+# ---------------------------------------------------------------------------
+
+
+def ingest_impl(state: WindowState, batch: EdgeBatch, node_capacity: int,
+                bias_scale: float = 1.0) -> WindowState:
+    """Merge-based window advance (unjitted body; see ``ingest``)."""
+    run_s, run_b, t_now, late = _prepare_runs(state, batch, node_capacity)
+    ssrc, sdst, sts, keep_n = run_s
+    bsrc, bdst, bts, bn = run_b
+    E = sts.shape[0]
+    B = bts.shape[0]
+
+    # Stable two-run merge by rank: an element's output position is its own
+    # run index plus the count of other-run elements that precede it. Ties
+    # break store-first (side="left" for store elems, side="right" for batch
+    # elems), exactly matching a stable argsort over [store ++ batch] — which
+    # is what the reference path computes — so the two paths are bit-equal.
+    rank_s = jnp.searchsorted(bts, sts, side="left").astype(jnp.int32)
+    rank_b = jnp.searchsorted(sts, bts, side="right").astype(jnp.int32)
+    pos_s = jnp.arange(E, dtype=jnp.int32) + rank_s
+    pos_b = jnp.arange(B, dtype=jnp.int32) + rank_b
+
+    EM = E + B
+    msrc = jnp.zeros((EM,), jnp.int32).at[pos_s].set(ssrc).at[pos_b].set(bsrc)
+    mdst = jnp.zeros((EM,), jnp.int32).at[pos_s].set(sdst).at[pos_b].set(bdst)
+    mts = jnp.full((EM,), TS_PAD, jnp.int32).at[pos_s].set(sts).at[pos_b].set(bts)
+
+    return _finalize(state, (msrc, mdst, mts), keep_n, bn, t_now, late,
+                     batch.count, node_capacity, bias_scale)
+
+
+def _ingest_sort_impl(state: WindowState, batch: EdgeBatch, node_capacity: int,
+                      bias_scale: float = 1.0) -> WindowState:
+    """Seed reference path: concat + global stable argsort (O((m+b) log))."""
+    run_s, run_b, t_now, late = _prepare_runs(state, batch, node_capacity)
+    ssrc, sdst, sts, keep_n = run_s
+    bsrc, bdst, bts, bn = run_b
+
+    msrc = jnp.concatenate([ssrc, bsrc])
+    mdst = jnp.concatenate([sdst, bdst])
+    mts = jnp.concatenate([sts, bts])
+    morder = jnp.argsort(mts).astype(jnp.int32)
+    msrc, mdst, mts = msrc[morder], mdst[morder], mts[morder]
+
+    return _finalize(state, (msrc, mdst, mts), keep_n, bn, t_now, late,
+                     batch.count, node_capacity, bias_scale)
+
+
+# Public entry points. ``ingest`` (merge path) donates the old WindowState so
+# XLA advances the window without reallocating the edge store + index arrays;
+# ``ingest_sort`` is the non-donating seed reference kept for equivalence
+# tests and old-vs-new benchmarking.
+ingest = partial(jax.jit, static_argnames=("node_capacity", "bias_scale"),
+                 donate_argnums=(0,))(ingest_impl)
+ingest_merge = ingest
+ingest_sort = partial(jax.jit,
+                      static_argnames=("node_capacity", "bias_scale"))(
+    _ingest_sort_impl)

@@ -1,0 +1,157 @@
+"""Fallback for the `hypothesis` package on bare environments.
+
+When hypothesis is installed, conftest.py leaves it alone and the property
+tests run as real property tests. When it is missing, conftest installs this
+module under ``sys.modules["hypothesis"]`` so ``from hypothesis import
+given, settings`` and ``from hypothesis import strategies as st`` still
+resolve — but ``@given`` degrades to a **fixed-examples** decorator: a
+deterministic seeded RNG draws ``max_examples`` example tuples (the first
+example is the minimal one: lower bounds, min sizes) and runs the test body
+once per tuple. No shrinking, no database — just enough to keep tier-1
+collection and coverage alive without the dependency.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+_FALLBACK_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    """A draw rule: ``draw(rng)`` for random examples, ``minimal()`` for
+    the deterministic first example."""
+
+    def __init__(self, draw, minimal):
+        self._draw = draw
+        self._minimal = minimal
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def minimal(self):
+        return self._minimal()
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     lambda: min_value)
+
+
+def floats(min_value=0.0, max_value=1.0, exclude_max=False, **_kw):
+    span = max_value - min_value
+
+    def draw(rng):
+        v = min_value + rng.random() * span
+        if exclude_max and v >= max_value:
+            v = min_value + 0.5 * span
+        return v
+
+    return _Strategy(draw, lambda: min_value)
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)), lambda: False)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements), lambda: elements[0])
+
+
+def lists(elem, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elem.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw,
+                     lambda: [elem.minimal() for _ in range(min_size)])
+
+
+def tuples(*elems):
+    return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems),
+                     lambda: tuple(e.minimal() for e in elems))
+
+
+def given(*strategies):
+    def decorate(fn):
+        # cross-process-stable seed (str hash() is salted; id() is not
+        # reproducible): a failing drawn example must be re-drawable.
+        seed_base = zlib.crc32(fn.__qualname__.encode())
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _FALLBACK_MAX_EXAMPLES)
+            n = min(n, _FALLBACK_MAX_EXAMPLES)
+            executed = 0
+            for i in range(n):
+                if i == 0:
+                    drawn = tuple(s.minimal() for s in strategies)
+                else:
+                    rng = random.Random(seed_base * 1000 + i)
+                    drawn = tuple(s.draw(rng) for s in strategies)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                    executed += 1
+                except _Unsatisfied:
+                    continue        # assume() rejected this example
+            if executed == 0:
+                # mirror real hypothesis' Unsatisfied: a test whose filter
+                # rejects every example must not silently pass
+                raise AssertionError(
+                    f"{fn.__qualname__}: assume() rejected all {n} fallback "
+                    f"examples — vacuous property test")
+
+        # pytest must not mistake the drawn parameters for fixtures: drop
+        # the wraps()-installed __wrapped__ (inspect.signature follows it)
+        # and present a zero-argument signature.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples=None, **_kw):
+    def decorate(fn):
+        if max_examples is not None:
+            fn._max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+class HealthCheck:
+    all = classmethod(lambda cls: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+def install():
+    """Register this module as ``hypothesis`` (+ ``.strategies``)."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "tuples"):
+        setattr(strat, name, globals()[name])
+    hyp.strategies = strat
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

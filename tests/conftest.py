@@ -1,6 +1,21 @@
+import importlib.util
+import pathlib
+
 import jax
 import numpy as np
 import pytest
+
+# Optional-dependency shim: on bare environments the property tests degrade
+# to fixed examples instead of failing collection (tests/_hypothesis_compat).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_compat",
+        pathlib.Path(__file__).parent / "_hypothesis_compat.py")
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    _mod.install()
 
 from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
 from repro.core.edge_store import store_from_arrays
