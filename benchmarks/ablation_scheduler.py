@@ -1,14 +1,20 @@
-"""Paper Table 2: cooperative scheduler ablation.
+"""Paper Table 2: cooperative scheduler ablation + per-hop regroup
+old-vs-new (Fig. 8 analog).
 
 Variants (DESIGN.md mapping):
-  fullwalk    <-> Full-Walk   (one lane per walk, no grouping)
-  grouped     <-> Coop-Global (per-step regrouping, metadata from "global")
-  tiled       <-> Coop        (regrouping + VMEM-staged metadata kernel)
+  fullwalk        <-> Full-Walk   (one lane per walk, no grouping)
+  grouped-lexsort <-> Coop-Global with the seed's per-hop O(W log W)
+                      lexsort + inverse-scatter regrouping
+  grouped-bucket  <-> Coop-Global with the O(W) counting regroup and
+                      carried permutation (DESIGN.md §10)
+  tiled-lexsort / tiled-bucket <-> Coop (VMEM-staged metadata kernel) over
+                      either regrouping
 
-Reported: M-steps/s wall-clock (CPU, relative), plus the modeled per-step
-HBM bytes for fullwalk vs grouped — the structural metric that the launch
-count plays in the paper (DESIGN.md §9: launch counts are not a TPU
-quantity).
+Reported: walks/s and M-steps/s wall-clock (CPU, relative — the
+grouped-lexsort vs grouped-bucket delta is the regroup win), plus the
+modeled per-step HBM bytes for fullwalk vs grouped — the structural metric
+that the launch count plays in the paper (DESIGN.md §9: launch counts are
+not a TPU quantity).
 """
 from __future__ import annotations
 
@@ -26,6 +32,17 @@ DATASETS = {
     "megahub": dict(num_nodes=256, num_edges=60000, skew=2.2),
 }
 
+# (label, path, regroup) — the old-vs-new regroup benchmark rides the
+# same grid: grouped-lexsort is the seed behavior, grouped-bucket the
+# production path
+VARIANTS = [
+    ("fullwalk", "fullwalk", "bucket"),
+    ("grouped-lexsort", "grouped", "lexsort"),
+    ("grouped-bucket", "grouped", "bucket"),
+    ("tiled-lexsort", "tiled", "lexsort"),
+    ("tiled-bucket", "tiled", "bucket"),
+]
+
 
 def run(repeats: int = 3):
     wcfg = WalkConfig(num_walks=4096, max_length=40, start_mode="nodes")
@@ -33,22 +50,27 @@ def run(repeats: int = 3):
     rows = []
     for dname, kw in DATASETS.items():
         g, idx = make_bench_index(**kw)
-        for path in ("fullwalk", "grouped", "tiled"):
-            cfg = SchedulerConfig(path=path, tile_walks=256, tile_edges=1024)
+        for label, path, regroup in VARIANTS:
+            cfg = SchedulerConfig(path=path, regroup=regroup,
+                                  tile_walks=256, tile_edges=1024)
             mean, std, res = timeit(
                 generate_walks, idx, jax.random.PRNGKey(0), wcfg, scfg, cfg,
                 repeats=repeats)
             msps = steps_per_sec(res, mean)
-            # modeled bytes from dispatch stats
-            res2 = generate_walks(idx, jax.random.PRNGKey(0), wcfg, scfg,
-                                  cfg, collect_stats=True)
-            st = np.asarray(res2.stats)
-            b_full = st[:, sched.STAT_BYTES_FULLWALK].sum()
-            b_grp = st[:, sched.STAT_BYTES_GROUPED].sum()
-            emit(f"table2/{dname}/{path}", mean * 1e6,
-                 f"Msteps/s={msps:.2f};bytes_full={b_full:.3g};"
-                 f"bytes_grouped={b_grp:.3g};std_us={std*1e6:.0f}")
-            rows.append((dname, path, msps, b_full, b_grp))
+            walks_s = wcfg.num_walks / mean
+            derived = (f"walks_per_s={walks_s:.3g};Msteps/s={msps:.2f};"
+                       f"std_us={std*1e6:.0f}")
+            if label in ("fullwalk", "grouped-bucket", "tiled-bucket"):
+                # modeled bytes from dispatch stats (layout-level metric:
+                # identical across regroup flavors, so sampled once each)
+                res2 = generate_walks(idx, jax.random.PRNGKey(0), wcfg,
+                                      scfg, cfg, collect_stats=True)
+                st = np.asarray(res2.stats)
+                b_full = st[:, sched.STAT_BYTES_FULLWALK].sum()
+                b_grp = st[:, sched.STAT_BYTES_GROUPED].sum()
+                derived += f";bytes_full={b_full:.3g};bytes_grouped={b_grp:.3g}"
+            emit(f"table2/{dname}/{label}", mean * 1e6, derived)
+            rows.append((dname, label, walks_s, msps))
     return rows
 
 

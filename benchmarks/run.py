@@ -18,8 +18,9 @@ import traceback
 
 # (suite name, module name, paper counterpart, one-line description)
 SUITES = [
-    ("table2_scheduler_ablation", "ablation_scheduler", "Table 2",
-     "walk throughput across scheduler paths + modeled HBM traffic"),
+    ("table2_scheduler_ablation", "ablation_scheduler", "Table 2 / Fig. 8",
+     "walks/s across scheduler paths incl. per-hop regroup old-vs-new "
+     "(lexsort vs bucket) + modeled HBM traffic"),
     ("table3_tier_distribution", "tier_distribution", "Table 3",
      "dispatch-plane tier statistics over the (W, G) grid"),
     ("table4_ingestion_breakdown", "ingestion_breakdown", "Table 4",

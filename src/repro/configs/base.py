@@ -51,6 +51,12 @@ class SchedulerConfig:
     """
 
     path: str = "grouped"             # fullwalk | grouped | tiled (pallas)
+    # per-hop regrouping algorithm for the grouped/tiled paths:
+    #   bucket  — O(W) counting regroup with carried permutation (DESIGN.md §10)
+    #   lexsort — the seed's per-hop O(W log W) sort + inverse scatter
+    #             (kept as the equivalence/benchmark reference)
+    regroup: str = "bucket"
+    regroup_time: bool = True         # conditional time subsort inside buckets
     solo_threshold: int = 4           # paper W_warp default (Fig. 9)
     tile_walks: int = 256             # paper block-dim analog (Fig. 8): walks per VMEM tile
     tile_edges: int = 1024            # edges staged per VMEM tile (smem panel analog)

@@ -12,12 +12,19 @@ from repro.core.temporal_index import (
     build_index,
     build_index_donated,
 )
-from repro.core.walk_engine import WalkResult, generate_walks
+from repro.core.walk_engine import (
+    WalkBuffers,
+    WalkResult,
+    alloc_walk_buffers,
+    generate_walks,
+    generate_walks_donated,
+)
 from repro.core.window import WindowState, ingest, ingest_sort, init_window
 
 __all__ = [
     "EdgeBatch", "EdgeStore", "empty_store", "make_batch", "stack_batches",
     "store_from_arrays", "TemporalIndex", "build_index",
-    "build_index_donated", "WalkResult", "generate_walks", "WindowState",
-    "ingest", "ingest_sort", "init_window",
+    "build_index_donated", "WalkBuffers", "WalkResult",
+    "alloc_walk_buffers", "generate_walks", "generate_walks_donated",
+    "WindowState", "ingest", "ingest_sort", "init_window",
 ]

@@ -19,6 +19,9 @@ Two drivers over the same merge-based ingest (DESIGN.md §4):
 
 `ingest_and_walk` is the shared fused step: one jitted program covering
 merge-ingest + index rebuild + walk generation, donating the old state.
+`ingest_and_walk_donated` additionally consumes the previous round's walk
+buffers, and `replay_scan` carries them through the scan, so steady-state
+replay reallocates nothing on the walk side either (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -38,7 +41,13 @@ from repro.configs.base import (
     WalkConfig,
 )
 from repro.core.edge_store import EdgeBatch, make_batch, stack_batches
-from repro.core.walk_engine import generate_walks
+from repro.core.walk_engine import (
+    WalkBuffers,
+    _generate_walks_impl,
+    alloc_walk_buffers,
+    generate_walks,
+    generate_walks_donated,
+)
 from repro.core.window import (
     WindowState,
     ingest,
@@ -83,9 +92,11 @@ def _ingest_and_walk_impl(state: WindowState, batch: EdgeBatch,
                           key: jax.Array, node_capacity: int,
                           wcfg: WalkConfig, scfg: SamplerConfig,
                           sched_cfg: SchedulerConfig,
-                          bias_scale: float = 1.0):
+                          bias_scale: float = 1.0,
+                          walk_bufs: Optional[WalkBuffers] = None):
     state = ingest_impl(state, batch, node_capacity, bias_scale)
-    res = generate_walks(state.index, key, wcfg, scfg, sched_cfg)
+    res = _generate_walks_impl(state.index, key, wcfg, scfg, sched_cfg,
+                               buffers=walk_bufs)
     return state, res
 
 
@@ -98,6 +109,29 @@ ingest_and_walk = partial(
                      "bias_scale"),
     donate_argnums=(0,),
 )(_ingest_and_walk_impl)
+
+
+def _ingest_and_walk_donated_impl(state: WindowState, batch: EdgeBatch,
+                                  walk_bufs: WalkBuffers, key: jax.Array,
+                                  node_capacity: int, wcfg: WalkConfig,
+                                  scfg: SamplerConfig,
+                                  sched_cfg: SchedulerConfig,
+                                  bias_scale: float = 1.0):
+    return _ingest_and_walk_impl(state, batch, key, node_capacity, wcfg,
+                                 scfg, sched_cfg, bias_scale,
+                                 walk_bufs=walk_bufs)
+
+
+# Fully donated fused step (DESIGN.md §10): both the window state AND the
+# previous round's walk buffers are consumed, so a steady-state host loop
+# reallocates nothing per batch — chain with
+# ``bufs = WalkBuffers(res.nodes, res.times)`` between calls.
+ingest_and_walk_donated = partial(
+    jax.jit,
+    static_argnames=("node_capacity", "wcfg", "scfg", "sched_cfg",
+                     "bias_scale"),
+    donate_argnums=(0, 2),
+)(_ingest_and_walk_donated_impl)
 
 
 @partial(jax.jit,
@@ -116,10 +150,11 @@ def replay_scan(state: WindowState, batches: EdgeBatch, key: jax.Array,
     """
 
     def step(carry, batch):
-        st, k = carry
+        st, k, bufs = carry
         k, sub = jax.random.split(k)
         st, res = _ingest_and_walk_impl(st, batch, sub, node_capacity,
-                                        wcfg, scfg, sched_cfg, bias_scale)
+                                        wcfg, scfg, sched_cfg, bias_scale,
+                                        walk_bufs=bufs)
         stats = ReplayStats(
             edges_active=st.index.num_edges,
             t_now=st.t_now,
@@ -128,9 +163,12 @@ def replay_scan(state: WindowState, batches: EdgeBatch, key: jax.Array,
             overflow_drops=st.overflow_drops,
             mean_len=jnp.mean(res.lengths.astype(jnp.float32)),
         )
-        return (st, k), stats
+        # walk buffers ride the scan carry: batch k+1's walks are written
+        # into batch k's storage (DESIGN.md §10)
+        return (st, k, WalkBuffers(res.nodes, res.times)), stats
 
-    (state, _), stats = jax.lax.scan(step, (state, key), batches)
+    (state, _, _), stats = jax.lax.scan(
+        step, (state, key, alloc_walk_buffers(wcfg)), batches)
     return state, stats
 
 
@@ -154,6 +192,8 @@ class StreamingEngine:
             int(cfg.window.duration))
         self.key = jax.random.PRNGKey(cfg.seed)
         self.stats = StreamStats()
+        # walk-buffer pool for sample_walks_donated, keyed by (W, L)
+        self._walk_bufs: dict = {}
 
     def ingest_batch(self, src, dst, ts) -> None:
         batch = make_batch(src, dst, ts, capacity=self.batch_capacity)
@@ -173,7 +213,52 @@ class StreamingEngine:
                              collect_stats=collect_stats)
         jax.block_until_ready(res.nodes)
         self.stats.sample_s.append(time.perf_counter() - t0)
+        self._record_walks_valid(res)
         return res
+
+    def sample_walks_donated(self, wcfg: WalkConfig):
+        """Like ``sample_walks`` but reuses a per-shape walk-buffer pool
+        through ``generate_walks_donated`` (DESIGN.md §10): steady-state
+        sampling allocates nothing on the walk side.
+
+        Caveat: the *previous* WalkResult returned for the same
+        (num_walks, max_length) shape is consumed by this call — copy it
+        (``np.asarray``) first if it must outlive the next round.
+        """
+        shape_key = (wcfg.num_walks, wcfg.max_length)
+        bufs = self._walk_bufs.pop(shape_key, None)
+        if bufs is None:
+            bufs = alloc_walk_buffers(wcfg)
+        self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
+        res = generate_walks_donated(self.state.index, sub, bufs, wcfg,
+                                     self.cfg.sampler, self.cfg.scheduler)
+        jax.block_until_ready(res.nodes)
+        self.stats.sample_s.append(time.perf_counter() - t0)
+        self._walk_bufs[shape_key] = WalkBuffers(res.nodes, res.times)
+        self._record_walks_valid(res)
+        return res
+
+    def sample_walks_sharded(self, wcfg: WalkConfig, mesh=None):
+        """Device-parallel sampling: the walk axis sharded over the mesh
+        (defaults to all devices) against the replicated window index —
+        see repro.distributed.walks (DESIGN.md §10).
+        """
+        from repro.distributed.walks import generate_walks_sharded
+        self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
+        res = generate_walks_sharded(self.state.index, sub, wcfg,
+                                     self.cfg.sampler, self.cfg.scheduler,
+                                     mesh=mesh)
+        jax.block_until_ready(res.nodes)
+        self.stats.sample_s.append(time.perf_counter() - t0)
+        self._record_walks_valid(res)
+        return res
+
+    def _record_walks_valid(self, res) -> None:
+        lengths = np.asarray(res.lengths)
+        frac = float(np.mean(lengths >= 2)) if lengths.size else 0.0
+        self.stats.walks_valid.append(frac)
 
     def replay(self, batches: Iterable, wcfg: WalkConfig,
                on_batch: Optional[Callable] = None):

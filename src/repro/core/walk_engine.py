@@ -7,7 +7,7 @@ Execution paths (the TPU mapping of the paper's dispatch plane):
   whatever order walks happen to sit in memory.
 
 * ``grouped`` — the hierarchical-cooperative-scheduling adaptation (§2.4.3):
-  each hop, walks are sorted by (current node, current time); identical
+  each hop, walks are regrouped by (current node, current time); identical
   (node, time) pairs form *segments* whose temporal cutoff is computed once
   at the segment head and broadcast to members, and whose gathers touch
   contiguous index regions (the TPU analog of coalesced, smem-amortized
@@ -18,10 +18,25 @@ Execution paths (the TPU mapping of the paper's dispatch plane):
   Pallas kernel (kernels/walk_step.py), which stages each task's edge slice
   in VMEM (the smem-panel analog). Selected via SchedulerConfig.path.
 
-All paths produce **identical walks for identical keys** (tested): random
-draws are generated in original walk order and permuted alongside the state,
-so grouping is purely an execution-layout decision — the paper makes the
-same claim for its tiers.
+The per-hop regrouping itself comes in two flavors
+(``SchedulerConfig.regroup``, DESIGN.md §10): ``bucket`` (default) is an
+O(W) counting regroup (core/scheduler.py::bucket_regroup) whose permutation
+is **carried across hops** in the walk state — lanes stay in grouped order
+and only the lane→walk map is tracked, so neither a fresh O(W log W) sort
+nor a scatter-built inverse permutation is paid per hop. ``lexsort`` keeps
+the seed's per-hop ``jnp.lexsort`` + inverse scatter as the
+equivalence/benchmark reference.
+
+All paths and regroup modes produce **identical walks for identical keys**
+(tested): random draws are generated in original walk order and indexed
+through the lane→walk map, so grouping is purely an execution-layout
+decision — the paper makes the same claim for its tiers.
+
+Steady-state callers reuse the output buffers via
+``generate_walks_donated`` (walk arrays donated back into the jit,
+DESIGN.md §10), and ``repro.distributed.walks.generate_walks_sharded``
+shards the walk axis across devices (walks are embarrassingly parallel;
+the index is replicated).
 """
 from __future__ import annotations
 
@@ -56,11 +71,40 @@ class WalkResult(NamedTuple):
     stats: Optional[jax.Array]   # float32[L, sched.NUM_STATS] or None
 
 
+class WalkBuffers(NamedTuple):
+    """Reusable walk output buffers (donated through the jit boundary).
+
+    Holds the two O(W·L) arrays of a WalkResult. The walk loop overwrites
+    *every* cell (the start writes column 0, and each hop writes its column
+    for all W lanes, PAD for non-advancing walks), so the previous round's
+    contents are dead on entry: the donated storage flows straight into the
+    scan carry and XLA updates it in place — steady-state walk generation
+    allocates only the [W] lengths vector (DESIGN.md §10).
+    """
+
+    nodes: jax.Array     # int32[W, L+1]
+    times: jax.Array     # int32[W, L+1]
+
+
+def alloc_walk_buffers(wcfg: WalkConfig) -> WalkBuffers:
+    """Allocate walk buffers for ``generate_walks_donated`` round-trips."""
+    W, L = wcfg.num_walks, wcfg.max_length
+    return WalkBuffers(
+        nodes=jnp.full((W, L + 1), NODE_PAD, jnp.int32),
+        times=jnp.full((W, L + 1), NODE_PAD, jnp.int32),
+    )
+
+
 class _Carry(NamedTuple):
+    # cur_node/cur_time/prev_node/alive are in *lane* order; ``lane`` maps
+    # lane -> original walk id (identity for fullwalk/lexsort, the carried
+    # bucket-regroup permutation otherwise). nodes/times/lengths stay in
+    # walk order throughout.
     cur_node: jax.Array
     cur_time: jax.Array
     prev_node: jax.Array
     alive: jax.Array
+    lane: jax.Array
     nodes: jax.Array
     times: jax.Array
     lengths: jax.Array
@@ -72,18 +116,30 @@ class _Carry(NamedTuple):
 
 
 def start_walks(index: TemporalIndex, wcfg: WalkConfig, scfg: SamplerConfig,
-                key: jax.Array) -> _Carry:
+                key: jax.Array, walk_offset=0,
+                buffers: Optional[WalkBuffers] = None) -> _Carry:
     W = wcfg.num_walks
     L = wcfg.max_length
-    nodes = jnp.full((W, L + 1), NODE_PAD, jnp.int32)
-    times = jnp.full((W, L + 1), NODE_PAD, jnp.int32)
+    if buffers is None:
+        nodes = jnp.full((W, L + 1), NODE_PAD, jnp.int32)
+        times = jnp.full((W, L + 1), NODE_PAD, jnp.int32)
+    else:
+        # every cell is overwritten before the result is read (see
+        # WalkBuffers), so the stale contents pass through untouched and
+        # the donated storage is updated in place
+        nodes = buffers.nodes
+        times = buffers.times
+    lane = jnp.arange(W, dtype=jnp.int32)
 
     t_floor = jnp.where(index.num_edges > 0, index.store.ts[0] - 1, 0)
 
     if wcfg.start_mode == "all_nodes":
-        # paper §3.3: k walks from every active source node
+        # paper §3.3: k walks from every active source node; walk_offset
+        # shifts the assignment for sharded generation (walk w on shard s
+        # starts where global walk s·Wd + w would)
         nc = index.node_capacity
-        cur = (jnp.arange(W, dtype=jnp.int32) % nc)
+        cur = ((walk_offset + jnp.arange(W, dtype=jnp.int32)) % nc).astype(
+            jnp.int32)
         deg = index.node_starts[cur + 1] - index.node_starts[cur]
         alive = deg > 0
         cur_time = jnp.full((W,), 1, jnp.int32) * t_floor
@@ -114,7 +170,7 @@ def start_walks(index: TemporalIndex, wcfg: WalkConfig, scfg: SamplerConfig,
         nodes = nodes.at[:, 1].set(jnp.where(alive, cur, NODE_PAD))
         times = times.at[:, 1].set(jnp.where(alive, cur_time, NODE_PAD))
         return _Carry(cur_node=cur, cur_time=cur_time, prev_node=src,
-                      alive=alive, nodes=nodes, times=times,
+                      alive=alive, lane=lane, nodes=nodes, times=times,
                       lengths=jnp.where(alive, 2, 0).astype(jnp.int32))
     else:
         raise ValueError(f"unknown start_mode {wcfg.start_mode!r}")
@@ -123,7 +179,7 @@ def start_walks(index: TemporalIndex, wcfg: WalkConfig, scfg: SamplerConfig,
     times = times.at[:, 0].set(jnp.where(alive, cur_time, NODE_PAD))
     return _Carry(cur_node=cur, cur_time=cur_time,
                   prev_node=jnp.full((W,), -1, jnp.int32),
-                  alive=alive, nodes=nodes, times=times,
+                  alive=alive, lane=lane, nodes=nodes, times=times,
                   lengths=alive.astype(jnp.int32))
 
 
@@ -183,20 +239,19 @@ def _hop_fullwalk(index, scfg, carry: _Carry, step: jax.Array,
     return _advance(carry, step, nn, nt, has_next)
 
 
-def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
-                 hop_key) -> _Carry:
-    """Sort by (node, time); dedup the cutoff search per segment head."""
-    W = carry.cur_node.shape[0]
-    nc = index.node_capacity
-    node_key = jnp.where(carry.alive, carry.cur_node, nc + 1)
-    perm = jnp.lexsort((carry.cur_time, node_key)).astype(jnp.int32)
+# ---------------------------------------------------------------------------
+# Grouped layouts: shared segment cutoff + draw/pick helpers
+# ---------------------------------------------------------------------------
 
-    s_node = carry.cur_node[perm]
-    s_time = carry.cur_time[perm]
-    s_prev = carry.prev_node[perm]
-    s_alive = carry.alive[perm]
 
-    # segment heads: first lane of each unique (node, time) pair
+def _segment_cutoff(index: TemporalIndex, s_node, s_time):
+    """(b, c) for lanes grouped by (node, time): Γ_t(v) = [c, b) per lane.
+
+    Segment heads are re-derived from the materialized order — contiguous
+    equal (node, time) runs share one cutoff — so *any* lane permutation is
+    correct; better grouping only improves dedup and gather locality.
+    """
+    W = s_node.shape[0]
     p_node = jnp.concatenate([jnp.full((1,), -2, jnp.int32), s_node[:-1]])
     p_time = jnp.concatenate([jnp.full((1,), -2, jnp.int32), s_time[:-1]])
     head = (s_node != p_node) | (s_time != p_time)
@@ -207,17 +262,36 @@ def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
     c_head = temporal_cutoff(index, a, b, s_time)
     c = jax.ops.segment_max(jnp.where(head, c_head, 0), seg_id,
                             num_segments=W)[seg_id]
-    n = b - c
-    has_next_s = s_alive & (n > 0)
+    return b, c
 
-    # draws follow original walk order for path-equivalence; permute them
+
+def _bucket_prologue(index: TemporalIndex, sched_cfg, carry: _Carry):
+    """Regroup lanes by current node (DESIGN.md §10) and permute the walk
+    state; shared by the grouped and tiled bucket hops. Returns the
+    composed lane→walk map plus the permuted per-lane state."""
+    nc = index.node_capacity
+    node_key = jnp.where(carry.alive, carry.cur_node, nc + 1)
+    pp = sched.bucket_regroup(node_key, carry.cur_time, nc,
+                              time_subsort=sched_cfg.regroup_time)
+    return (carry.lane[pp], carry.cur_node[pp], carry.cur_time[pp],
+            carry.prev_node[pp], carry.alive[pp])
+
+
+def _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, order):
+    """Sample positions k ∈ [c, b) for grouped lanes.
+
+    ``order`` maps lane -> original walk id; draws are generated in walk-id
+    order and indexed through it, which is what makes every layout emit
+    identical walks for identical keys.
+    """
+    W = s_node.shape[0]
     use_n2v = (scfg.node2vec_p != 1.0) or (scfg.node2vec_q != 1.0)
     if not use_n2v:
-        u = jax.random.uniform(hop_key, (W,))[perm]
+        u = jax.random.uniform(hop_key, (W,))[order]
         k = pick_in_neighborhood(index, scfg, c, b, u, s_node)
     else:
         beta_max = node2vec_max_beta(scfg.node2vec_p, scfg.node2vec_q)
-        us = jax.random.uniform(hop_key, (N2V_ROUNDS, 2, W))[:, :, perm]
+        us = jax.random.uniform(hop_key, (N2V_ROUNDS, 2, W))[:, :, order]
 
         def round_(carry_, uv):
             k_acc, accepted = carry_
@@ -233,21 +307,57 @@ def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
         k0 = pick_in_neighborhood(index, scfg, c, b, us[0, 0], s_node)
         (k, _), _ = jax.lax.scan(round_, (k0, jnp.zeros((W,), bool)), us)
 
-    k = jnp.clip(k, 0, index.edge_capacity - 1)
+    return jnp.clip(k, 0, index.edge_capacity - 1)
+
+
+def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
+                 hop_key) -> _Carry:
+    """Reference regroup: fresh lexsort by (node, time) + inverse scatter."""
+    W = carry.cur_node.shape[0]
+    nc = index.node_capacity
+    node_key = jnp.where(carry.alive, carry.cur_node, nc + 1)
+    perm = jnp.lexsort((carry.cur_time, node_key)).astype(jnp.int32)
+
+    s_node = carry.cur_node[perm]
+    s_time = carry.cur_time[perm]
+    s_prev = carry.prev_node[perm]
+    s_alive = carry.alive[perm]
+
+    b, c = _segment_cutoff(index, s_node, s_time)
+    has_next_s = s_alive & (b - c > 0)
+
+    k = _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, perm)
     nn_s = index.ns_dst[k]
     nt_s = index.ns_ts[k]
 
     # unsort back to original walk order
     inv = jnp.zeros((W,), jnp.int32).at[perm].set(
         jnp.arange(W, dtype=jnp.int32))
-    nn = nn_s[inv]
-    nt = nt_s[inv]
-    has_next = has_next_s[inv]
-    return _advance(carry, step, nn, nt, has_next)
+    return _advance(carry, step, nn_s[inv], nt_s[inv], has_next_s[inv])
+
+
+def _hop_grouped_bucket(index, scfg, sched_cfg, carry: _Carry,
+                        step: jax.Array, hop_key) -> _Carry:
+    """O(W) counting regroup with carried permutation (DESIGN.md §10).
+
+    Lanes stay in grouped order across hops — the regroup permutes the
+    *previous* lane layout (walks keep near-sorted order naturally, since a
+    segment's members scatter over one node's neighbor list) and composes
+    into ``carry.lane``; no inverse permutation is ever built.
+    """
+    lane, s_node, s_time, s_prev, s_alive = _bucket_prologue(
+        index, sched_cfg, carry)
+
+    b, c = _segment_cutoff(index, s_node, s_time)
+    has_next_s = s_alive & (b - c > 0)
+
+    k = _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, lane)
+    return _advance_lanes(carry, lane, step, s_node, s_time, s_prev,
+                          index.ns_dst[k], index.ns_ts[k], has_next_s)
 
 
 def _hop_tiled(index, scfg, sched_cfg, carry: _Carry, step, hop_key) -> _Carry:
-    """Grouped layout with the Pallas kernel executing search+sample."""
+    """Lexsort layout with the Pallas kernel executing search+sample."""
     from repro.kernels import ops as kops
     W = carry.cur_node.shape[0]
     node_key = jnp.where(carry.alive, carry.cur_node, index.node_capacity + 1)
@@ -266,7 +376,27 @@ def _hop_tiled(index, scfg, sched_cfg, carry: _Carry, step, hop_key) -> _Carry:
     return _advance(carry, step, nn_s[inv], nt_s[inv], has_next_s[inv])
 
 
+def _hop_tiled_bucket(index, scfg, sched_cfg, carry: _Carry, step,
+                      hop_key) -> _Carry:
+    """Bucket-regrouped layout feeding the Pallas kernel (DESIGN.md §10).
+
+    The counting regroup yields an exact node sort (LSD passes over the
+    full node id), which is all the tile/task-table construction needs.
+    """
+    from repro.kernels import ops as kops
+    lane, s_node, s_time, s_prev, s_alive = _bucket_prologue(
+        index, sched_cfg, carry)
+    u = jax.random.uniform(hop_key, (carry.cur_node.shape[0],))[lane]
+
+    k, n = kops.walk_step(index, s_node, s_time, u, scfg, sched_cfg)
+    has_next_s = s_alive & (n > 0)
+    k = jnp.clip(k, 0, index.edge_capacity - 1)
+    return _advance_lanes(carry, lane, step, s_node, s_time, s_prev,
+                          index.ns_dst[k], index.ns_ts[k], has_next_s)
+
+
 def _advance(carry: _Carry, step, next_node, next_time, has_next) -> _Carry:
+    """Advance with lanes in walk order (fullwalk / lexsort paths)."""
     nodes = carry.nodes.at[:, step + 1].set(
         jnp.where(has_next, next_node, NODE_PAD).astype(jnp.int32),
         mode="drop")
@@ -278,8 +408,30 @@ def _advance(carry: _Carry, step, next_node, next_time, has_next) -> _Carry:
         cur_time=jnp.where(has_next, next_time, carry.cur_time),
         prev_node=jnp.where(has_next, carry.cur_node, carry.prev_node),
         alive=has_next,
+        lane=carry.lane,
         nodes=nodes, times=times,
         lengths=carry.lengths + has_next.astype(jnp.int32),
+    )
+
+
+def _advance_lanes(carry: _Carry, lane, step, s_node, s_time, s_prev,
+                   next_node, next_time, has_next) -> _Carry:
+    """Advance with lanes in grouped order; walk buffers scatter via lane."""
+    nodes = carry.nodes.at[lane, step + 1].set(
+        jnp.where(has_next, next_node, NODE_PAD).astype(jnp.int32),
+        mode="drop")
+    times = carry.times.at[lane, step + 1].set(
+        jnp.where(has_next, next_time, NODE_PAD).astype(jnp.int32),
+        mode="drop")
+    return _Carry(
+        cur_node=jnp.where(has_next, next_node, s_node),
+        cur_time=jnp.where(has_next, next_time, s_time),
+        prev_node=jnp.where(has_next, s_node, s_prev),
+        alive=has_next,
+        lane=lane,
+        nodes=nodes, times=times,
+        lengths=carry.lengths.at[lane].add(has_next.astype(jnp.int32),
+                                           mode="drop"),
     )
 
 
@@ -288,21 +440,24 @@ def _advance(carry: _Carry, step, next_node, next_time, has_next) -> _Carry:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("wcfg", "scfg", "sched_cfg",
-                                   "collect_stats"))
-def generate_walks(index: TemporalIndex, key: jax.Array,
-                   wcfg: WalkConfig, scfg: SamplerConfig,
-                   sched_cfg: SchedulerConfig,
-                   collect_stats: bool = False) -> WalkResult:
-    """Generate ``wcfg.num_walks`` temporal walks of ≤ ``max_length`` hops."""
+def _generate_walks_impl(index: TemporalIndex, key: jax.Array,
+                         wcfg: WalkConfig, scfg: SamplerConfig,
+                         sched_cfg: SchedulerConfig,
+                         collect_stats: bool = False,
+                         buffers: Optional[WalkBuffers] = None,
+                         walk_offset=0) -> WalkResult:
+    """Shared walk-generation body behind every jit entry point."""
     start_key, walk_key = jax.random.split(key)
-    carry0 = start_walks(index, wcfg, scfg, start_key)
+    carry0 = start_walks(index, wcfg, scfg, start_key,
+                         walk_offset=walk_offset, buffers=buffers)
     L = wcfg.max_length
-    first_hop = carry0.lengths.max() if wcfg.start_mode == "edges" else None
     # number of remaining hops: start already consumed 1 edge in edges-mode
     hops = L - 1 if wcfg.start_mode == "edges" else L
 
     path = sched_cfg.path
+    bucket = sched_cfg.regroup == "bucket"
+    if sched_cfg.regroup not in ("bucket", "lexsort"):
+        raise ValueError(f"unknown regroup {sched_cfg.regroup!r}")
 
     def body(carry, step):
         hop_key = jax.random.fold_in(walk_key, step)
@@ -315,10 +470,18 @@ def generate_walks(index: TemporalIndex, key: jax.Array,
         if path == "fullwalk":
             carry = _hop_fullwalk(index, scfg, carry, write_pos, hop_key)
         elif path == "grouped":
-            carry = _hop_grouped(index, scfg, carry, write_pos, hop_key)
+            if bucket:
+                carry = _hop_grouped_bucket(index, scfg, sched_cfg, carry,
+                                            write_pos, hop_key)
+            else:
+                carry = _hop_grouped(index, scfg, carry, write_pos, hop_key)
         elif path == "tiled":
-            carry = _hop_tiled(index, scfg, sched_cfg, carry, write_pos,
-                               hop_key)
+            if bucket:
+                carry = _hop_tiled_bucket(index, scfg, sched_cfg, carry,
+                                          write_pos, hop_key)
+            else:
+                carry = _hop_tiled(index, scfg, sched_cfg, carry, write_pos,
+                                   hop_key)
         else:
             raise ValueError(f"unknown scheduler path {path!r}")
         return carry, st
@@ -328,3 +491,29 @@ def generate_walks(index: TemporalIndex, key: jax.Array,
     return WalkResult(nodes=carry.nodes, times=carry.times,
                       lengths=carry.lengths,
                       stats=stats if collect_stats else None)
+
+
+# Generate ``wcfg.num_walks`` temporal walks of ≤ ``max_length`` hops.
+generate_walks = partial(
+    jax.jit,
+    static_argnames=("wcfg", "scfg", "sched_cfg", "collect_stats"),
+)(_generate_walks_impl)
+
+
+def _generate_walks_donated_impl(index: TemporalIndex, key: jax.Array,
+                                 buffers: WalkBuffers, wcfg: WalkConfig,
+                                 scfg: SamplerConfig,
+                                 sched_cfg: SchedulerConfig) -> WalkResult:
+    return _generate_walks_impl(index, key, wcfg, scfg, sched_cfg,
+                                collect_stats=False, buffers=buffers)
+
+
+# Donating entry point for steady-state loops (DESIGN.md §10): pass the
+# previous round's WalkResult arrays (or alloc_walk_buffers once) as
+# ``buffers`` and XLA reuses their storage for the new result instead of
+# allocating ~2·W·(L+1) ints per call. The passed-in buffers are consumed.
+generate_walks_donated = partial(
+    jax.jit,
+    static_argnames=("wcfg", "scfg", "sched_cfg"),
+    donate_argnums=(2,),
+)(_generate_walks_donated_impl)

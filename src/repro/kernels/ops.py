@@ -49,9 +49,16 @@ def walk_step(index: TemporalIndex, s_node: jax.Array, s_time: jax.Array,
     base = base_blocks * TE
     lo = (a_t - base[:, None]).reshape(W)
     hi = (b_t - base[:, None]).reshape(W)
-    oversize = (lo < 0) | (hi > 2 * TE - 1)
-    lo_k = jnp.clip(lo, 0, 2 * TE - 1)
-    hi_k = jnp.clip(hi, 0, 2 * TE - 1)
+    # a region ending exactly at the staged window's edge (hi == 2·TE) fits
+    # [base, base + 2·TE) and is served in-tile; only hi > 2·TE overflows.
+    # In-tile lanes satisfy 0 <= lo <= hi <= 2·TE (including empty regions
+    # with lo == hi == 2·TE), so the clips below pass them through
+    # unchanged and only bound the garbage of oversize lanes (whose kernel
+    # output is masked out below). A tighter 2·TE - 1 clip on lo would turn
+    # an empty end-of-window region into a phantom 1-edge region.
+    oversize = (lo < 0) | (hi > 2 * TE)
+    lo_k = jnp.clip(lo, 0, 2 * TE)
+    hi_k = jnp.clip(hi, 0, 2 * TE)
 
     if scfg.mode == "weight" and scfg.bias == "linear":
         pfx = index.plin[:E]

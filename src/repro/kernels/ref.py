@@ -41,7 +41,10 @@ def walk_step_ref(ns_ts, ns_dst, pfx, pfx_shift,
         k = c + picker(u, n)
     elif mode == "weight":
         p_c = pfx[jnp.clip(c, 0, E - 1)]
-        p_hi = pfx[jnp.clip(ghi, 0, E - 1)]
+        # P(ghi) via the shifted row (pfx_shift[j] = P(j+1)): pfx[ghi]
+        # would clamp-misread when a region ends at the array edge
+        # (ghi == E), mirroring the kernel's hi == 2·TE case.
+        p_hi = jnp.where(ghi > 0, pfx_shift[jnp.clip(ghi - 1, 0, E - 1)], 0.0)
         if bias == "exponential":
             total = p_hi - p_c
             target = p_c + u * total

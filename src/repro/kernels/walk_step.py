@@ -82,7 +82,11 @@ def _kernel(mode: str, bias: str,
         px = jnp.concatenate([px0_ref[...], px1_ref[...]])    # P(base+j)
         ps = jnp.concatenate([ps0_ref[...], ps1_ref[...]])    # P(base+j+1)
         p_c = jnp.sum(jnp.where(pos == c[:, None], px[None, :], 0.0), axis=1)
-        p_hi = jnp.sum(jnp.where(pos == hi, px[None, :], 0.0), axis=1)
+        # P(hi) comes from the shifted row: ps[j] = P(base+j+1), so
+        # P(hi) = ps[hi-1]. Reading px[hi] silently yields 0 when hi == 2·TE
+        # (a region ending exactly at the staged window's edge — a legal
+        # in-tile task), which would zero the neighborhood's weight mass.
+        p_hi = jnp.sum(jnp.where(pos == hi - 1, ps[None, :], 0.0), axis=1)
         if bias == "exponential":
             total = p_hi - p_c
             target = p_c + u * total

@@ -14,6 +14,8 @@ from repro.models import model as M
 
 ARCHS = list_archs()
 
+pytestmark = pytest.mark.slow      # per-arch model-zoo smoke (forward/grad/decode for every assigned arch)
+
 
 def _batch(cfg, key, B=2, S=32):
     k1, k2, k3 = jax.random.split(key, 3)

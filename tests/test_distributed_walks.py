@@ -6,6 +6,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -84,6 +86,8 @@ np.testing.assert_array_equal(got_n, ref_n)
 np.testing.assert_array_equal(got_t, ref_t)
 print("DISTRIBUTED_OK")
 """
+
+pytestmark = pytest.mark.slow      # 8-device subprocess walk migration
 
 
 def test_distributed_equals_single_device():

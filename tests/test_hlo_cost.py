@@ -10,6 +10,8 @@ import pytest
 from repro.launch.hlo_cost import analyze_hlo_text, shape_elems_bytes
 from repro.launch.roofline import collective_bytes_from_hlo
 
+pytestmark = pytest.mark.slow      # HLO lowering / static-analyzer regressions
+
 
 def _compile(f, *specs):
     return jax.jit(f).lower(*specs).compile()

@@ -39,9 +39,12 @@ def _tile_inputs(idx, nodes, TW, TE):
     base = base_blocks * TE
     lo_raw = (a_t - base[:, None]).reshape(W)
     hi_raw = (b_t - base[:, None]).reshape(W)
-    oversize = (lo_raw < 0) | (hi_raw > 2 * TE - 1)
-    lo = jnp.clip(lo_raw, 0, 2 * TE - 1)
-    hi = jnp.clip(hi_raw, 0, 2 * TE - 1)
+    # mirrors kernels/ops.py: hi == 2*TE fits the staged window exactly;
+    # lo clips to 2*TE so empty end-of-window regions (lo == hi == 2*TE)
+    # stay empty
+    oversize = (lo_raw < 0) | (hi_raw > 2 * TE)
+    lo = jnp.clip(lo_raw, 0, 2 * TE)
+    hi = jnp.clip(hi_raw, 0, 2 * TE)
     tbase = idx.node_tbase[jnp.clip(nodes, 0, idx.node_capacity - 1)]
     return base_blocks.astype(jnp.int32), lo, hi, oversize, tbase
 

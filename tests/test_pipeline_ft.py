@@ -7,6 +7,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.distributed.fault_tolerance import StragglerPolicy, TrainSupervisor
 from repro.train.optimizer import AdamWConfig, init_opt_state
@@ -33,6 +34,8 @@ np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                            rtol=1e-5, atol=1e-5)
 print("PIPELINE_OK")
 """
+
+pytestmark = pytest.mark.slow      # multi-device subprocess pipeline + FT supervisor
 
 
 def test_gpipe_matches_sequential():

@@ -21,9 +21,14 @@ from repro.core.streaming import (
     ReplayStats,
     StreamingEngine,
     ingest_and_walk,
+    ingest_and_walk_donated,
     replay_scan,
 )
-from repro.core.walk_engine import generate_walks
+from repro.core.walk_engine import (
+    WalkBuffers,
+    alloc_walk_buffers,
+    generate_walks,
+)
 from repro.core.window import ingest, ingest_sort, init_window
 from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
 
@@ -166,6 +171,79 @@ def test_ingest_and_walk_fused_step_matches_separate_dispatches():
     # donation consumed the input state
     with pytest.raises(Exception):
         np.asarray(fused_in.index.store.ts)
+
+
+def test_ingest_and_walk_donated_chain_matches_separate_dispatches():
+    """The fully donated fused step (state + walk buffers consumed) equals
+    the non-donating path batch for batch when chained through
+    ``WalkBuffers(res.nodes, res.times)`` (DESIGN.md §10)."""
+    g = powerlaw_temporal_graph(64, 2000, seed=17)
+    scfg = SamplerConfig(bias="exponential", mode="weight")
+    sched = SchedulerConfig(path="grouped")
+    wcfg = WalkConfig(num_walks=64, max_length=6, start_mode="nodes")
+    batches = [make_batch(bs, bd, bt, capacity=1024)
+               for bs, bd, bt in chronological_batches(g, 3)]
+
+    ref_state = init_window(edge_capacity=2048, node_capacity=64,
+                            window=10_000)
+    don_state = init_window(edge_capacity=2048, node_capacity=64,
+                            window=10_000)
+    bufs = alloc_walk_buffers(wcfg)
+    prev_res = None
+    for i, batch in enumerate(batches):
+        key = jax.random.PRNGKey(100 + i)
+        ref_state = ingest_sort(ref_state, batch, 64)
+        ref_walks = generate_walks(ref_state.index, key, wcfg, scfg, sched)
+        don_state, res = ingest_and_walk_donated(
+            don_state, batch, bufs, key, 64, wcfg, scfg, sched)
+        np.testing.assert_array_equal(np.asarray(ref_walks.nodes),
+                                      np.asarray(res.nodes))
+        np.testing.assert_array_equal(np.asarray(ref_walks.lengths),
+                                      np.asarray(res.lengths))
+        if prev_res is not None:
+            with pytest.raises(Exception):       # consumed by this round
+                np.asarray(prev_res.nodes)
+        bufs = WalkBuffers(res.nodes, res.times)
+        prev_res = res
+    _assert_states_equal(ref_state, don_state)
+
+
+def test_engine_sample_walks_donated_pool():
+    """StreamingEngine.sample_walks_donated: identical walks to
+    sample_walks for the same seed, per-shape buffer reuse (the previous
+    same-shape result is consumed), and walks_valid recording."""
+    g = powerlaw_temporal_graph(64, 3000, seed=9)
+    wcfg = WalkConfig(num_walks=128, max_length=6, start_mode="nodes")
+    plain = _engine(num_nodes=64, edge_capacity=4096, duration=100_000)
+    pool = _engine(num_nodes=64, edge_capacity=4096, duration=100_000)
+    plain.ingest_batch(g.src[:1000], g.dst[:1000], g.ts[:1000])
+    pool.ingest_batch(g.src[:1000], g.dst[:1000], g.ts[:1000])
+
+    a1 = plain.sample_walks(wcfg)
+    b1 = pool.sample_walks_donated(wcfg)
+    np.testing.assert_array_equal(np.asarray(a1.nodes),
+                                  np.asarray(b1.nodes))
+    a2 = plain.sample_walks(wcfg)
+    b2 = pool.sample_walks_donated(wcfg)      # consumes b1's buffers
+    np.testing.assert_array_equal(np.asarray(a2.nodes),
+                                  np.asarray(b2.nodes))
+    with pytest.raises(Exception):
+        np.asarray(b1.nodes)
+    assert len(pool.stats.walks_valid) == 2
+    assert all(0.0 <= v <= 1.0 for v in pool.stats.walks_valid)
+
+
+def test_engine_sample_walks_sharded():
+    from repro.core.validation import validate_walks
+    g = powerlaw_temporal_graph(64, 3000, seed=9)
+    eng = _engine(num_nodes=64, edge_capacity=4096, duration=100_000)
+    eng.ingest_batch(g.src[:1000], g.dst[:1000], g.ts[:1000])
+    wcfg = WalkConfig(num_walks=128, max_length=6, start_mode="nodes")
+    res = eng.sample_walks_sharded(wcfg)
+    assert res.nodes.shape == (128, 7)
+    rep = validate_walks(eng.state.index, res)
+    assert float(rep.walk_valid_frac) == 1.0
+    assert len(eng.stats.walks_valid) == 1
 
 
 def test_replay_scan_walk_lengths_sane():

@@ -4,6 +4,7 @@ downstream consumers (skipgram embeddings, LM batches)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import (
     EngineConfig,
@@ -21,6 +22,8 @@ from repro.train.embeddings import (
     link_prediction_auc,
     train_on_walks,
 )
+
+pytestmark = pytest.mark.slow      # end-to-end streaming system + downstream consumers
 
 
 def test_streaming_end_to_end():
@@ -43,6 +46,11 @@ def test_streaming_end_to_end():
     assert len(stats.ingest_s) == 8
     assert all(v == 1.0 for v in seen_valid)           # paper §3.10
     assert int(eng.state.ingested) == 20_000
+    # walks_valid is populated per sampling round (fraction of walks that
+    # advanced at least one hop)
+    assert len(stats.walks_valid) == 8
+    assert all(0.0 <= v <= 1.0 for v in stats.walks_valid)
+    assert stats.walks_valid[-1] > 0.0
     # bounded memory: active edges never exceed capacity
     assert max(stats.edges_active) <= 1 << 15
 

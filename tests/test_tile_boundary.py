@@ -1,0 +1,145 @@
+"""Tile-boundary coverage for the tiled path (regression for the
+kernels/ops.py oversize predicate and the walk_step.py P(hi) one-hot read):
+regions ending exactly at the staged window's edge (hi == 2·tile_edges),
+empty neighborhoods, oversize fallback, and the weight-mode
+linear/exponential biases — every lane cross-checked against the engine's
+global sampling, and the whole tiled path cross-checked walk-for-walk
+against fullwalk."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core.edge_store import store_from_arrays
+from repro.core.samplers import pick_in_neighborhood
+from repro.core.temporal_index import build_index, node_range, temporal_cutoff
+from repro.core.walk_engine import generate_walks
+from repro.kernels import ops as kops
+from repro.kernels.walk_step import walk_step_tiled
+
+E, N, TW, TE = 64, 8, 4, 8
+
+# node -> out-degree; regions in the (src, ts)-sorted ns view:
+#   node 0: [0, 16)  -> tile base 0,  hi = 16 == 2*TE (exact fit, head)
+#   node 1: [16, 16) -> empty region
+#   node 2: [16, 20) -> small in-tile region
+#   node 3: [20, 40) -> span 20 > 2*TE   (oversize -> global fallback)
+#   node 4: [40, 48) -> unused by the crafted lanes
+#   node 5: [48, 64) -> tile base 48, hi = 16 == 2*TE (exact fit, tail of
+#                       the store: region ends at E exactly)
+_DEGS = {0: 16, 2: 4, 3: 20, 4: 8, 5: 16}
+
+
+def _make_index():
+    src, dst, ts = [], [], []
+    for j, d in _DEGS.items():
+        for i in range(d):
+            src.append(j)
+            dst.append((j + 1 + i) % N)
+            ts.append(j * 100 + 2 * i)     # even ts; odd queries fall between
+    store = store_from_arrays(src, dst, ts, edge_capacity=E, node_capacity=N)
+    return build_index(store, N)
+
+
+def _lanes():
+    # one tile each: exact-fit head / empty+small / oversize / exact-fit
+    # tail + empty region AT the end of the store (node 7: a == b == E,
+    # i.e. lo == hi == 2*TE relative to the tile base)
+    s_node = jnp.asarray([0, 0, 0, 0, 1, 1, 2, 2,
+                          3, 3, 3, 3, 5, 5, 7, 7], jnp.int32)
+    # per lane: before-all (full), mid, near-end, at/after-max (empty)
+    s_time = jnp.asarray([-1, 15, 29, 30, 0, 1000, 199, 203,
+                          299, 305, 321, 400, 499, 515, 0, 999], jnp.int32)
+    rng = np.random.default_rng(7)
+    u = rng.uniform(size=16).astype(np.float32)
+    u[0], u[12] = 0.0, 0.999999           # inverse-CDF endpoints
+    return s_node, s_time, jnp.asarray(u)
+
+
+def _engine_pick(idx, scfg, nodes, times, u):
+    a, b = node_range(idx, nodes)
+    c = temporal_cutoff(idx, a, b, times)
+    return pick_in_neighborhood(idx, scfg, c, b, u, nodes), b - c
+
+
+MODES = [("weight", "exponential"), ("weight", "linear"),
+         ("weight", "uniform"), ("index", "exponential"),
+         ("index", "linear"), ("index", "uniform")]
+
+
+@pytest.mark.parametrize("mode,bias", MODES)
+def test_walk_step_boundary_lanes_match_engine(mode, bias):
+    """ops.walk_step == global engine sampling on every live lane,
+    including exact-fit (hi == 2·TE), empty, and oversize lanes."""
+    idx = _make_index()
+    s_node, s_time, u = _lanes()
+    cfg = SchedulerConfig(path="tiled", tile_walks=TW, tile_edges=TE)
+    scfg = SamplerConfig(bias=bias, mode=mode)
+    k, n = kops.walk_step(idx, s_node, s_time, u, scfg, cfg)
+    k_ref, n_ref = _engine_pick(idx, scfg, s_node, s_time, u)
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(n_ref))
+    live = np.asarray(n_ref) > 0
+    assert live.sum() >= 10          # the crafted lanes are mostly live
+    np.testing.assert_array_equal(np.asarray(k)[live],
+                                  np.asarray(k_ref)[live])
+
+
+@pytest.mark.parametrize("mode,bias", [("weight", "exponential"),
+                                       ("weight", "linear")])
+def test_kernel_serves_exact_fit_regions(mode, bias):
+    """The Pallas kernel itself (not the fallback) handles hi == 2·TE:
+    feed it tile inputs containing exact-fit regions and compare against
+    the engine. Before the P(hi) fix the weight-mode mass read back 0 for
+    these lanes and the pick degraded to the uniform fallback."""
+    idx = _make_index()
+    s_node, s_time, u = _lanes()
+    a, b = node_range(idx, s_node)
+    T = 16 // TW
+    a_t, b_t = a.reshape(T, TW), b.reshape(T, TW)
+    base_blocks = jnp.clip(jnp.min(a_t, axis=1) // TE, 0, E // TE - 2)
+    base = base_blocks * TE
+    lo = (a_t - base[:, None]).reshape(16)
+    hi = (b_t - base[:, None]).reshape(16)
+    oversize = np.asarray((lo < 0) | (hi > 2 * TE))
+    # the predicate regression: exact-fit lanes must be in-tile
+    exact_fit = np.asarray(hi) == 2 * TE
+    assert exact_fit.sum() == 8 and not oversize[exact_fit].any()
+
+    lin = bias == "linear"
+    pfx = idx.plin[:E] if lin else idx.pexp[:E]
+    pfxs = idx.plin[1:E + 1] if lin else idx.pexp[1:E + 1]
+    tbase = idx.node_tbase[jnp.clip(s_node, 0, N - 1)]
+    k_loc, n, _, _ = walk_step_tiled(
+        idx.ns_ts[:E], idx.ns_dst[:E], pfx, pfxs,
+        base_blocks.astype(jnp.int32), s_time,
+        jnp.clip(lo, 0, 2 * TE), jnp.clip(hi, 0, 2 * TE), u, tbase,
+        mode=mode, bias=bias, tile_walks=TW, tile_edges=TE, interpret=True)
+    tile_of_walk = jnp.arange(16, dtype=jnp.int32) // TW
+    k_glob = base_blocks[tile_of_walk] * TE + k_loc
+
+    scfg = SamplerConfig(bias=bias, mode=mode)
+    k_ref, n_ref = _engine_pick(idx, scfg, s_node, s_time, u)
+    ok = ~oversize & (np.asarray(n_ref) > 0)
+    np.testing.assert_array_equal(np.asarray(n)[~oversize],
+                                  np.asarray(n_ref)[~oversize])
+    np.testing.assert_array_equal(np.asarray(k_glob)[ok],
+                                  np.asarray(k_ref)[ok])
+
+
+@pytest.mark.parametrize("bias", ["exponential", "linear"])
+@pytest.mark.parametrize("regroup", ["lexsort", "bucket"])
+def test_tiled_boundary_graph_equivalence(bias, regroup, key):
+    """Whole-engine regression on the boundary graph: tiled == fullwalk
+    byte-for-byte with tiny tiles, both regroup modes, weight biases."""
+    idx = _make_index()
+    wcfg = WalkConfig(num_walks=64, max_length=8, start_mode="nodes")
+    scfg = SamplerConfig(bias=bias, mode="weight")
+    ref = generate_walks(idx, key, wcfg, scfg,
+                         SchedulerConfig(path="fullwalk"))
+    got = generate_walks(idx, key, wcfg, scfg,
+                         SchedulerConfig(path="tiled", regroup=regroup,
+                                         tile_walks=8, tile_edges=TE))
+    assert jnp.array_equal(ref.nodes, got.nodes)
+    assert jnp.array_equal(ref.times, got.times)
+    assert jnp.array_equal(ref.lengths, got.lengths)

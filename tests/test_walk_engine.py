@@ -27,16 +27,19 @@ def test_walks_causal(small_index, bias, mode, key):
     assert float(rep.walk_valid_frac) == 1.0
 
 
+@pytest.mark.parametrize("regroup", ("bucket", "lexsort"))
 @pytest.mark.parametrize("path", ALL_PATHS[1:])
-def test_path_equivalence(small_index, path, key):
-    """Grouped and tiled layouts emit identical walks to fullwalk."""
+def test_path_equivalence(small_index, path, regroup, key):
+    """Grouped and tiled layouts emit identical walks to fullwalk, under
+    both the O(W) bucket regroup (carried permutation) and the lexsort
+    reference (DESIGN.md §10)."""
     wcfg = WalkConfig(num_walks=512, max_length=12, start_mode="nodes")
     scfg = SamplerConfig(bias="exponential", mode="weight")
     ref = generate_walks(small_index, key, wcfg, scfg,
                          SchedulerConfig(path="fullwalk"))
     got = generate_walks(small_index, key, wcfg, scfg,
-                         SchedulerConfig(path=path, tile_walks=128,
-                                         tile_edges=512))
+                         SchedulerConfig(path=path, regroup=regroup,
+                                         tile_walks=128, tile_edges=512))
     assert jnp.array_equal(ref.nodes, got.nodes)
     assert jnp.array_equal(ref.times, got.times)
     assert jnp.array_equal(ref.lengths, got.lengths)
@@ -49,10 +52,52 @@ def test_path_equivalence_hub_graph(hub_index, key):
     ref = generate_walks(hub_index, key, wcfg, scfg,
                          SchedulerConfig(path="fullwalk"))
     for path in ("grouped", "tiled"):
-        got = generate_walks(hub_index, key, wcfg, scfg,
-                             SchedulerConfig(path=path, tile_walks=256,
-                                             tile_edges=1024))
-        assert jnp.array_equal(ref.nodes, got.nodes), path
+        for regroup in ("bucket", "lexsort"):
+            got = generate_walks(hub_index, key, wcfg, scfg,
+                                 SchedulerConfig(path=path, regroup=regroup,
+                                                 tile_walks=256,
+                                                 tile_edges=1024))
+            assert jnp.array_equal(ref.nodes, got.nodes), (path, regroup)
+
+
+def test_regroup_time_subsort_off_equivalence(small_index, key):
+    """Node-only bucketing (no time subsort) is still byte-equivalent —
+    grouping is purely an execution layout."""
+    wcfg = WalkConfig(num_walks=512, max_length=10, start_mode="nodes")
+    scfg = SamplerConfig(bias="linear", mode="weight")
+    ref = generate_walks(small_index, key, wcfg, scfg,
+                         SchedulerConfig(path="fullwalk"))
+    got = generate_walks(small_index, key, wcfg, scfg,
+                         SchedulerConfig(path="grouped", regroup="bucket",
+                                         regroup_time=False))
+    assert jnp.array_equal(ref.nodes, got.nodes)
+    assert jnp.array_equal(ref.lengths, got.lengths)
+
+
+def test_generate_walks_donated_matches_and_consumes(small_index, key):
+    """Donated entry point: byte-identical results, buffers consumed, and
+    chaining the previous result's arrays works (DESIGN.md §10)."""
+    from repro.core.walk_engine import (WalkBuffers, alloc_walk_buffers,
+                                        generate_walks_donated)
+    wcfg = WalkConfig(num_walks=256, max_length=10, start_mode="nodes")
+    scfg = SamplerConfig(bias="exponential", mode="weight")
+    cfg = SchedulerConfig(path="grouped", regroup="bucket")
+    ref = generate_walks(small_index, key, wcfg, scfg, cfg)
+    bufs = alloc_walk_buffers(wcfg)
+    got = generate_walks_donated(small_index, key, bufs, wcfg, scfg, cfg)
+    assert jnp.array_equal(ref.nodes, got.nodes)
+    assert jnp.array_equal(ref.times, got.times)
+    assert jnp.array_equal(ref.lengths, got.lengths)
+    with pytest.raises(Exception):
+        np.asarray(bufs.nodes)          # storage was donated
+    # round 2 reuses round 1's result arrays as buffers
+    key2 = jax.random.PRNGKey(99)
+    ref2 = generate_walks(small_index, key2, wcfg, scfg, cfg)
+    got2 = generate_walks_donated(small_index, key2,
+                                  WalkBuffers(got.nodes, got.times),
+                                  wcfg, scfg, cfg)
+    assert jnp.array_equal(ref2.nodes, got2.nodes)
+    assert jnp.array_equal(ref2.lengths, got2.lengths)
 
 
 def test_edges_start_mode(small_index, key):
