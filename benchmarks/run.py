@@ -39,6 +39,9 @@ SUITES = [
      "window duration sweep: active edges, drops, per-batch cost"),
     ("fig11_memory_usage", "memory_usage", "Fig. 11",
      "device bytes across a stream (exactly constant) + accounting"),
+    ("serving_load", "serving_load", "— (§11)",
+     "open-loop Poisson serving: mixed-bias queries through the "
+     "coalescer; p50/p99 latency + walks/s vs offered load"),
 ]
 
 

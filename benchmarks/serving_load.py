@@ -1,0 +1,125 @@
+"""Serving-load benchmark: open-loop Poisson arrivals, mixed-bias traffic.
+
+No direct paper counterpart — this measures the serving subsystem
+(DESIGN.md §11) the ROADMAP's "heavy traffic" north star needs: many
+tenants submitting small heterogeneous ``WalkQuery``s, coalesced into
+fixed-shape batches.
+
+**Open-loop** means arrivals follow a Poisson process at the offered rate
+regardless of completions (a closed loop would throttle arrivals to the
+service's pace and hide queueing delay — the coordinated-omission trap).
+Per offered load this reports p50/p99 submit→complete latency, walks/s,
+drop counts (backpressure + oversize), and lane occupancy (coalescing
+efficiency: live lanes over dispatched lanes).
+
+CPU wall-clock caveats of DESIGN.md §9 apply; the relative shape —
+latency flat until the knee, then queueing blow-up and backpressure
+drops — is the claim, not the absolute numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    ServeConfig,
+    WindowConfig,
+)
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.serve import ServeStats, WalkQuery, WalkService
+
+BIASES = ("uniform", "linear", "exponential")
+
+
+def _mixed_workload(rng: np.random.Generator, n: int, nc: int):
+    """Heterogeneous tenants: all three biases, both start modes, varied
+    fan-out and length — nothing here shares a compile-time config."""
+    out = []
+    for i in range(n):
+        bias = BIASES[int(rng.integers(3))]
+        max_length = int(rng.integers(2, 17))
+        lanes = int(rng.integers(1, 9))
+        seed = int(rng.integers(1 << 20))
+        if rng.random() < 0.3:
+            out.append(WalkQuery(num_walks=lanes, start_mode="edges",
+                                 bias=bias,
+                                 start_bias=BIASES[int(rng.integers(3))],
+                                 max_length=max_length, seed=seed))
+        else:
+            starts = tuple(int(s) for s in rng.integers(0, nc, lanes))
+            out.append(WalkQuery(start_nodes=starts, bias=bias,
+                                 max_length=max_length, seed=seed))
+    return out
+
+
+def _drive_open_loop(svc: WalkService, queries, arrivals_s):
+    """Submit each query at its Poisson arrival time; serve in between."""
+    n = len(queries)
+    i = 0
+    t0 = time.perf_counter()
+    while i < n or svc.pending_count:
+        now = time.perf_counter() - t0
+        while i < n and arrivals_s[i] <= now:
+            svc.submit(queries[i])
+            i += 1
+        if svc.pending_count:
+            svc.step()
+        elif i < n:
+            time.sleep(min(max(arrivals_s[i] - now, 0.0), 5e-4))
+    return time.perf_counter() - t0
+
+
+def run(offered_loads_qps=(100, 400, 1600), n_queries=150,
+        num_nodes=1024, num_edges=60_000, seed=17):
+    g = powerlaw_temporal_graph(num_nodes, num_edges, seed=seed)
+    cfg = EngineConfig(
+        window=WindowConfig(duration=6000, edge_capacity=1 << 16,
+                            node_capacity=num_nodes),
+        sampler=SamplerConfig(mode="index"),
+        scheduler=SchedulerConfig(path="grouped"))
+    serve_cfg = ServeConfig(queue_capacity=64,
+                            lane_buckets=(64, 256, 1024),
+                            length_buckets=(4, 8, 16))
+    svc = WalkService(cfg, serve_cfg,
+                      batch_capacity=num_edges // 4 + 64)
+    for bs, bd, bt in chronological_batches(g, 4):
+        svc.ingest(bs, bd, bt)
+
+    rng = np.random.default_rng(seed)
+    # warm the jit cache across the FULL bucket grid (lane bucket × length
+    # bucket × start mode), one batch per shape, so the measured loads see
+    # steady-state dispatch, not compilation
+    for lanes in serve_cfg.lane_buckets:
+        for length in serve_cfg.length_buckets:
+            starts = tuple(int(s) for s in rng.integers(0, num_nodes, lanes))
+            svc.submit(WalkQuery(start_nodes=starts, max_length=length,
+                                 seed=1))
+            svc.step()
+            svc.submit(WalkQuery(num_walks=lanes, start_mode="edges",
+                                 max_length=length, seed=2))
+            svc.step()
+    svc.drain()
+
+    for qps in offered_loads_qps:
+        svc.stats = ServeStats()      # fresh counters per offered load
+        queries = _mixed_workload(rng, n_queries, num_nodes)
+        arrivals = np.cumsum(rng.exponential(1.0 / qps, n_queries))
+        wall = _drive_open_loop(svc, queries, arrivals)
+        svc.drain()
+        s = svc.stats
+        emit(f"serving/load_{qps}qps",
+             1e6 * (np.mean(s.latencies_s) if s.latencies_s else float("nan")),
+             f"p50_ms={s.p50_ms:.2f};p99_ms={s.p99_ms:.2f};"
+             f"walks_per_s={s.walks_per_s:.0f};steps_per_s={s.steps_per_s:.0f};"
+             f"served={s.completed};dropped={s.dropped};"
+             f"batches={s.batches};occupancy={s.lane_occupancy:.2f};"
+             f"wall_s={wall:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Multi-tenant walk-query serving over a live edge stream (DESIGN.md §11).
+
+    PYTHONPATH=src python examples/serve_walks.py
+
+Three tenants with incompatible needs — different biases, fan-outs, walk
+lengths, seeds — share every GPU dispatch: the coalescer packs their
+queries into one shape-bucketed lane batch, and the per-lane RNG makes
+each tenant's answer bit-identical to running it alone.
+"""
+import numpy as np
+
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    ServeConfig,
+    WindowConfig,
+)
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.serve import WalkQuery, WalkService
+
+
+def main():
+    g = powerlaw_temporal_graph(num_nodes=1000, num_edges=50_000, seed=7)
+    cfg = EngineConfig(
+        window=WindowConfig(duration=4000, edge_capacity=1 << 16,
+                            node_capacity=1024),
+        sampler=SamplerConfig(mode="index"),       # bias is per-query now
+        scheduler=SchedulerConfig(path="grouped"))
+    svc = WalkService(cfg, ServeConfig(queue_capacity=256,
+                                       lane_buckets=(64, 256, 1024),
+                                       length_buckets=(8, 16, 32)),
+                      batch_capacity=16384)
+
+    batches = list(chronological_batches(g, 5))
+    for bs, bd, bt in batches[:-1]:
+        svc.ingest(bs, bd, bt)
+
+    # three tenants, one dispatch
+    recommender = WalkQuery(start_nodes=tuple(range(0, 48)),
+                            bias="exponential", max_length=12, seed=101)
+    fraud_team = WalkQuery(start_nodes=(7, 11, 13), bias="uniform",
+                           max_length=30, seed=202)
+    embedder = WalkQuery(num_walks=64, start_mode="edges", bias="linear",
+                         start_bias="exponential", max_length=16, seed=303)
+    tickets = {name: svc.submit(q, strict=True) for name, q in
+               [("recommender", recommender), ("fraud", fraud_team),
+                ("embedder", embedder)]}
+    while svc.pending_count:
+        svc.step()
+    results = {}
+    for name, t in tickets.items():
+        r = results[name] = svc.poll(t)
+        lens = r.lengths
+        print(f"{name:12s} bias={r.query.bias:11s} walks={len(lens):3d} "
+              f"mean_len={lens.mean():5.2f} latency={1e3*r.latency_s:6.1f}ms")
+
+    # coalesced == solo, bit for bit (the §11 guarantee)
+    solo_nodes, _, solo_lengths = svc.run_query_solo(fraud_team)
+    assert np.array_equal(solo_nodes, results["fraud"].nodes)
+    assert np.array_equal(solo_lengths, results["fraud"].lengths)
+    print("fraud tenant: solo run == coalesced run, bit for bit")
+
+    # snapshot double-buffer: keep serving the current window while the
+    # next batch ingests; publish() swaps atomically
+    bs, bd, bt = batches[-1]
+    svc.begin_ingest(bs, bd, bt)
+    t = svc.submit(recommender, strict=True)     # runs against old window
+    svc.step()
+    svc.poll(t)
+    svc.publish()                                # new window from here on
+    print(f"snapshot version={svc.snapshots.version} "
+          f"(served 1 query mid-ingest)")
+
+    s = svc.stats
+    print(f"\nserved {s.completed} queries in {s.batches} batches "
+          f"(occupancy {s.lane_occupancy:.0%}), p50={s.p50_ms:.1f}ms "
+          f"p99={s.p99_ms:.1f}ms, {s.walks_per_s:.0f} walks/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,22 @@ class WalkConfig:
 
 
 @dataclass(frozen=True)
+class ServeConfig:
+    """Walk-query serving layer (repro.serve, DESIGN.md §11).
+
+    Shape buckets bound the jit-cache footprint: a coalesced batch always
+    compiles at (lane bucket × length bucket × start mode), never at the
+    exact query shape. Buckets must be sorted ascending; the largest lane
+    bucket is the lane budget of one dispatch.
+    """
+
+    queue_capacity: int = 1024        # pending-query slots; beyond -> dropped
+    lane_buckets: Tuple[int, ...] = (64, 256, 1024, 4096)
+    length_buckets: Tuple[int, ...] = (4, 8, 16, 32, 80)
+    drop_oversize: bool = True        # drop queries exceeding the largest buckets
+
+
+@dataclass(frozen=True)
 class EngineConfig:
     window: WindowConfig = field(default_factory=WindowConfig)
     sampler: SamplerConfig = field(default_factory=SamplerConfig)

@@ -13,18 +13,27 @@ from repro.core.temporal_index import (
     build_index_donated,
 )
 from repro.core.walk_engine import (
+    LaneParams,
     WalkBuffers,
     WalkResult,
     alloc_walk_buffers,
+    generate_walk_lanes,
     generate_walks,
     generate_walks_donated,
 )
-from repro.core.window import WindowState, ingest, ingest_sort, init_window
+from repro.core.window import (
+    WindowState,
+    ingest,
+    ingest_nodonate,
+    ingest_sort,
+    init_window,
+)
 
 __all__ = [
     "EdgeBatch", "EdgeStore", "empty_store", "make_batch", "stack_batches",
     "store_from_arrays", "TemporalIndex", "build_index",
-    "build_index_donated", "WalkBuffers", "WalkResult",
-    "alloc_walk_buffers", "generate_walks", "generate_walks_donated",
-    "WindowState", "ingest", "ingest_sort", "init_window",
+    "build_index_donated", "LaneParams", "WalkBuffers", "WalkResult",
+    "alloc_walk_buffers", "generate_walk_lanes", "generate_walks",
+    "generate_walks_donated", "WindowState", "ingest", "ingest_nodonate",
+    "ingest_sort", "init_window",
 ]

@@ -102,6 +102,64 @@ def index_pick(bias: str, u: jax.Array, n: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Per-lane bias dispatch (serving subsystem, DESIGN.md §11)
+#
+# The three closed-form inverse CDFs are elementwise in (u, n), so a
+# heterogeneous batch dispatches them branchlessly: every lane evaluates
+# all three O(1) formulas and a two-level select keeps the one named by its
+# int8/int32 bias code. This is the vectorized analog of `lax.switch` —
+# identical results, no cross-lane divergence, and each lane's pick is a
+# pure function of (bias_code, u, n), which is what makes a coalesced
+# mega-batch bit-identical to running each query solo.
+# ---------------------------------------------------------------------------
+
+BIAS_UNIFORM = 0
+BIAS_LINEAR = 1
+BIAS_EXPONENTIAL = 2
+
+BIAS_CODES = {
+    "uniform": BIAS_UNIFORM,
+    "linear": BIAS_LINEAR,
+    "exponential": BIAS_EXPONENTIAL,
+}
+
+
+def bias_code(bias: str) -> int:
+    """Map a bias name to its per-lane dispatch code."""
+    try:
+        return BIAS_CODES[bias]
+    except KeyError:
+        raise ValueError(f"unknown bias {bias!r} "
+                         f"(expected one of {sorted(BIAS_CODES)})") from None
+
+
+def index_pick_lanes(code: jax.Array, u: jax.Array, n: jax.Array) -> jax.Array:
+    """Per-lane index sampling: ``code[i]`` selects the inverse CDF of lane i."""
+    i_uni = index_uniform(u, n)
+    i_lin = index_linear(u, n)
+    i_exp = index_exponential(u, n)
+    return jnp.where(code == BIAS_UNIFORM, i_uni,
+                     jnp.where(code == BIAS_LINEAR, i_lin, i_exp))
+
+
+def pick_in_neighborhood_lanes(index: TemporalIndex, code: jax.Array,
+                               c: jax.Array, b: jax.Array,
+                               u: jax.Array) -> jax.Array:
+    """Per-lane-bias pick of k ∈ [c, b); index-mode closed forms only.
+
+    Valid only when b > c (caller masks empty neighborhoods).
+    """
+    return c + index_pick_lanes(code, u, b - c)
+
+
+def pick_start_edges_lanes(index: TemporalIndex, code: jax.Array,
+                           u: jax.Array) -> jax.Array:
+    """Per-lane-bias start-edge sampling over the timestamp view."""
+    n = jnp.broadcast_to(index.num_edges, u.shape).astype(jnp.int32)
+    return index_pick_lanes(code, u, n)
+
+
+# ---------------------------------------------------------------------------
 # Weight-based samplers (exact, O(log n) over prefix arrays)
 # ---------------------------------------------------------------------------
 

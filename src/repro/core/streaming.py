@@ -211,9 +211,7 @@ class StreamingEngine:
         res = generate_walks(self.state.index, sub, wcfg,
                              self.cfg.sampler, self.cfg.scheduler,
                              collect_stats=collect_stats)
-        jax.block_until_ready(res.nodes)
-        self.stats.sample_s.append(time.perf_counter() - t0)
-        self._record_walks_valid(res)
+        self._finish_sample(res, t0)
         return res
 
     def sample_walks_donated(self, wcfg: WalkConfig):
@@ -233,10 +231,8 @@ class StreamingEngine:
         t0 = time.perf_counter()
         res = generate_walks_donated(self.state.index, sub, bufs, wcfg,
                                      self.cfg.sampler, self.cfg.scheduler)
-        jax.block_until_ready(res.nodes)
-        self.stats.sample_s.append(time.perf_counter() - t0)
+        self._finish_sample(res, t0)
         self._walk_bufs[shape_key] = WalkBuffers(res.nodes, res.times)
-        self._record_walks_valid(res)
         return res
 
     def sample_walks_sharded(self, wcfg: WalkConfig, mesh=None):
@@ -250,15 +246,20 @@ class StreamingEngine:
         res = generate_walks_sharded(self.state.index, sub, wcfg,
                                      self.cfg.sampler, self.cfg.scheduler,
                                      mesh=mesh)
-        jax.block_until_ready(res.nodes)
-        self.stats.sample_s.append(time.perf_counter() - t0)
-        self._record_walks_valid(res)
+        self._finish_sample(res, t0)
         return res
 
-    def _record_walks_valid(self, res) -> None:
+    def _finish_sample(self, res, t0: float) -> float:
+        """Shared stats tail of every sample_walks* entry point: sync,
+        record wall time + valid-walk fraction, return the elapsed
+        seconds."""
+        jax.block_until_ready(res.nodes)
+        elapsed = time.perf_counter() - t0
+        self.stats.sample_s.append(elapsed)
         lengths = np.asarray(res.lengths)
         frac = float(np.mean(lengths >= 2)) if lengths.size else 0.0
         self.stats.walks_valid.append(frac)
+        return elapsed
 
     def replay(self, batches: Iterable, wcfg: WalkConfig,
                on_batch: Optional[Callable] = None):

@@ -37,6 +37,17 @@ Steady-state callers reuse the output buffers via
 DESIGN.md §10), and ``repro.distributed.walks.generate_walks_sharded``
 shards the walk axis across devices (walks are embarrassingly parallel;
 the index is replicated).
+
+**Per-lane sampler parameters** (``LaneParams`` / ``generate_walk_lanes``,
+DESIGN.md §11): the serving coalescer packs many heterogeneous queries
+into one fixed-shape batch, so bias, max length, and RNG seed become
+per-lane *arrays* instead of compile-time config. Bias dispatches
+branchlessly over the three closed-form inverse CDFs
+(samplers.index_pick_lanes), per-lane max length masks ``has_next`` once a
+lane's own budget is spent, and every lane draws from an RNG stream folded
+by (request seed, walk-within-request, step) — independent of batch shape
+and of which other lanes are present, which makes a coalesced batch
+bit-identical to running each query solo.
 """
 from __future__ import annotations
 
@@ -52,7 +63,9 @@ from repro.core.samplers import (
     node2vec_beta,
     node2vec_max_beta,
     pick_in_neighborhood,
+    pick_in_neighborhood_lanes,
     pick_start_edges,
+    pick_start_edges_lanes,
 )
 from repro.core.temporal_index import (
     TemporalIndex,
@@ -95,6 +108,39 @@ def alloc_walk_buffers(wcfg: WalkConfig) -> WalkBuffers:
     )
 
 
+class LaneParams(NamedTuple):
+    """Per-lane sampler parameters for a coalesced walk batch (DESIGN.md §11).
+
+    All arrays are [W] in walk order. ``rid``/``wid`` drive the per-lane
+    RNG: lane draws come from ``fold_in(fold_in(fold_in(base, rid), wid),
+    tag)`` with tag 0 for the start draw and tag s+1 for scan step s — a
+    pure function of (request seed, walk-within-request, step). A lane's
+    stream therefore does not depend on the batch shape or on which other
+    lanes share the batch: the bit-identity guarantee the serving
+    coalescer relies on.
+    """
+
+    start_node: jax.Array   # int32[W] start node (start_mode="nodes")
+    bias: jax.Array         # int32[W] hop-bias code (samplers.BIAS_CODES)
+    start_bias: jax.Array   # int32[W] start-edge bias code (start_mode="edges")
+    max_len: jax.Array      # int32[W] per-lane hop budget (edges emitted <= max_len)
+    rid: jax.Array          # int32[W] request seed folded into the RNG
+    wid: jax.Array          # int32[W] walk index within the request
+    active: jax.Array       # bool[W] real lane vs bucket padding
+
+
+def _lane_keys(key: jax.Array, lanes: LaneParams) -> jax.Array:
+    """Per-lane PRNG keys: base key folded by request seed then walk id."""
+    ks = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, lanes.rid)
+    return jax.vmap(jax.random.fold_in)(ks, lanes.wid)
+
+
+def _lane_uniform(lane_keys: jax.Array, tag) -> jax.Array:
+    """One U[0,1) draw per lane from the step-``tag`` substream."""
+    ks = jax.vmap(jax.random.fold_in, in_axes=(0, None))(lane_keys, tag)
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(ks)
+
+
 class _Carry(NamedTuple):
     # cur_node/cur_time/prev_node/alive are in *lane* order; ``lane`` maps
     # lane -> original walk id (identity for fullwalk/lexsort, the carried
@@ -117,7 +163,9 @@ class _Carry(NamedTuple):
 
 def start_walks(index: TemporalIndex, wcfg: WalkConfig, scfg: SamplerConfig,
                 key: jax.Array, walk_offset=0,
-                buffers: Optional[WalkBuffers] = None) -> _Carry:
+                buffers: Optional[WalkBuffers] = None,
+                lanes: Optional[LaneParams] = None,
+                lane_keys: Optional[jax.Array] = None) -> _Carry:
     W = wcfg.num_walks
     L = wcfg.max_length
     if buffers is None:
@@ -132,6 +180,44 @@ def start_walks(index: TemporalIndex, wcfg: WalkConfig, scfg: SamplerConfig,
     lane = jnp.arange(W, dtype=jnp.int32)
 
     t_floor = jnp.where(index.num_edges > 0, index.store.ts[0] - 1, 0)
+
+    if lanes is not None:
+        # Per-lane starts (DESIGN.md §11). Padding lanes (active=False)
+        # stay dead: all-PAD rows with length 0.
+        nc = index.node_capacity
+        if wcfg.start_mode == "nodes":
+            # explicit per-lane start nodes; mirrors all_nodes aliveness
+            # (a start node with no in-window edges yields an empty walk)
+            cur = jnp.clip(lanes.start_node, 0, nc - 1)
+            deg = index.node_starts[cur + 1] - index.node_starts[cur]
+            alive = (lanes.active & (deg > 0) & (lanes.start_node >= 0)
+                     & (lanes.start_node < nc))
+            cur_time = jnp.full((W,), 1, jnp.int32) * t_floor
+            nodes = nodes.at[:, 0].set(jnp.where(alive, cur, NODE_PAD))
+            times = times.at[:, 0].set(jnp.where(alive, cur_time, NODE_PAD))
+            return _Carry(cur_node=cur, cur_time=cur_time,
+                          prev_node=jnp.full((W,), -1, jnp.int32),
+                          alive=alive, lane=lane, nodes=nodes, times=times,
+                          lengths=alive.astype(jnp.int32))
+        if wcfg.start_mode == "edges":
+            # per-lane biased start-edge selection over the timestamp view
+            u = _lane_uniform(lane_keys, 0)
+            e = pick_start_edges_lanes(index, lanes.start_bias, u)
+            e = jnp.clip(e, 0, index.edge_capacity - 1)
+            src = index.store.src[e]
+            cur = index.store.dst[e]
+            cur_time = index.store.ts[e]
+            alive = lanes.active & (index.num_edges > 0)
+            nodes = nodes.at[:, 0].set(jnp.where(alive, src, NODE_PAD))
+            times = times.at[:, 0].set(jnp.where(alive, cur_time, NODE_PAD))
+            nodes = nodes.at[:, 1].set(jnp.where(alive, cur, NODE_PAD))
+            times = times.at[:, 1].set(jnp.where(alive, cur_time, NODE_PAD))
+            return _Carry(cur_node=cur, cur_time=cur_time, prev_node=src,
+                          alive=alive, lane=lane, nodes=nodes, times=times,
+                          lengths=jnp.where(alive, 2, 0).astype(jnp.int32))
+        raise ValueError(
+            f"lane batches support start_mode 'nodes'|'edges', "
+            f"got {wcfg.start_mode!r}")
 
     if wcfg.start_mode == "all_nodes":
         # paper §3.3: k walks from every active source node; walk_offset
@@ -189,10 +275,14 @@ def start_walks(index: TemporalIndex, wcfg: WalkConfig, scfg: SamplerConfig,
 
 
 def _sample_hop(index: TemporalIndex, scfg: SamplerConfig,
-                cur_node, cur_time, prev_node, alive, hop_key):
+                cur_node, cur_time, prev_node, alive, hop_key,
+                lane_bias=None, lane_u=None):
     """Given per-walk (node, time), returns (next_node, next_time, has_next).
 
     Pure sampling logic shared by every path; callers control the layout.
+    With ``lane_bias``/``lane_u`` (walk-order arrays, DESIGN.md §11) the
+    draw is the caller-supplied per-lane uniform and the bias dispatches
+    per lane over the closed-form inverse CDFs.
     """
     W = cur_node.shape[0]
     a, b = node_range(index, cur_node)
@@ -201,7 +291,9 @@ def _sample_hop(index: TemporalIndex, scfg: SamplerConfig,
     has_next = alive & (n > 0)
 
     use_n2v = (scfg.node2vec_p != 1.0) or (scfg.node2vec_q != 1.0)
-    if not use_n2v:
+    if lane_u is not None:
+        k = pick_in_neighborhood_lanes(index, lane_bias, c, b, lane_u)
+    elif not use_n2v:
         u = jax.random.uniform(hop_key, (W,))
         k = pick_in_neighborhood(index, scfg, c, b, u, cur_node)
     else:
@@ -232,10 +324,13 @@ def _sample_hop(index: TemporalIndex, scfg: SamplerConfig,
 
 
 def _hop_fullwalk(index, scfg, carry: _Carry, step: jax.Array,
-                  hop_key) -> _Carry:
+                  hop_key, lane_bias=None, lane_u=None,
+                  lane_limit=None) -> _Carry:
     nn, nt, has_next, _ = _sample_hop(
         index, scfg, carry.cur_node, carry.cur_time, carry.prev_node,
-        carry.alive, hop_key)
+        carry.alive, hop_key, lane_bias=lane_bias, lane_u=lane_u)
+    if lane_limit is not None:
+        has_next = has_next & lane_limit
     return _advance(carry, step, nn, nt, has_next)
 
 
@@ -277,16 +372,22 @@ def _bucket_prologue(index: TemporalIndex, sched_cfg, carry: _Carry):
             carry.prev_node[pp], carry.alive[pp])
 
 
-def _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, order):
+def _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, order,
+               lane_bias=None, lane_u=None):
     """Sample positions k ∈ [c, b) for grouped lanes.
 
     ``order`` maps lane -> original walk id; draws are generated in walk-id
     order and indexed through it, which is what makes every layout emit
-    identical walks for identical keys.
+    identical walks for identical keys. ``lane_bias``/``lane_u`` are
+    walk-order per-lane arrays (DESIGN.md §11), indexed through ``order``
+    the same way.
     """
     W = s_node.shape[0]
     use_n2v = (scfg.node2vec_p != 1.0) or (scfg.node2vec_q != 1.0)
-    if not use_n2v:
+    if lane_u is not None:
+        k = pick_in_neighborhood_lanes(index, lane_bias[order], c, b,
+                                       lane_u[order])
+    elif not use_n2v:
         u = jax.random.uniform(hop_key, (W,))[order]
         k = pick_in_neighborhood(index, scfg, c, b, u, s_node)
     else:
@@ -311,7 +412,8 @@ def _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, order):
 
 
 def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
-                 hop_key) -> _Carry:
+                 hop_key, lane_bias=None, lane_u=None,
+                 lane_limit=None) -> _Carry:
     """Reference regroup: fresh lexsort by (node, time) + inverse scatter."""
     W = carry.cur_node.shape[0]
     nc = index.node_capacity
@@ -325,8 +427,11 @@ def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
 
     b, c = _segment_cutoff(index, s_node, s_time)
     has_next_s = s_alive & (b - c > 0)
+    if lane_limit is not None:
+        has_next_s = has_next_s & lane_limit[perm]
 
-    k = _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, perm)
+    k = _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, perm,
+                   lane_bias=lane_bias, lane_u=lane_u)
     nn_s = index.ns_dst[k]
     nt_s = index.ns_ts[k]
 
@@ -337,7 +442,8 @@ def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
 
 
 def _hop_grouped_bucket(index, scfg, sched_cfg, carry: _Carry,
-                        step: jax.Array, hop_key) -> _Carry:
+                        step: jax.Array, hop_key, lane_bias=None,
+                        lane_u=None, lane_limit=None) -> _Carry:
     """O(W) counting regroup with carried permutation (DESIGN.md §10).
 
     Lanes stay in grouped order across hops — the regroup permutes the
@@ -350,8 +456,11 @@ def _hop_grouped_bucket(index, scfg, sched_cfg, carry: _Carry,
 
     b, c = _segment_cutoff(index, s_node, s_time)
     has_next_s = s_alive & (b - c > 0)
+    if lane_limit is not None:
+        has_next_s = has_next_s & lane_limit[lane]
 
-    k = _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, lane)
+    k = _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, lane,
+                   lane_bias=lane_bias, lane_u=lane_u)
     return _advance_lanes(carry, lane, step, s_node, s_time, s_prev,
                           index.ns_dst[k], index.ns_ts[k], has_next_s)
 
@@ -445,11 +554,21 @@ def _generate_walks_impl(index: TemporalIndex, key: jax.Array,
                          sched_cfg: SchedulerConfig,
                          collect_stats: bool = False,
                          buffers: Optional[WalkBuffers] = None,
-                         walk_offset=0) -> WalkResult:
+                         walk_offset=0,
+                         lanes: Optional[LaneParams] = None) -> WalkResult:
     """Shared walk-generation body behind every jit entry point."""
-    start_key, walk_key = jax.random.split(key)
+    if lanes is not None:
+        _check_lane_support(wcfg, scfg, sched_cfg, lanes)
+        # one base key; lane streams are derived by fold_in, no split —
+        # the split would make draws depend on batch composition
+        lane_keys = _lane_keys(key, lanes)
+        start_key = walk_key = key
+    else:
+        lane_keys = None
+        start_key, walk_key = jax.random.split(key)
     carry0 = start_walks(index, wcfg, scfg, start_key,
-                         walk_offset=walk_offset, buffers=buffers)
+                         walk_offset=walk_offset, buffers=buffers,
+                         lanes=lanes, lane_keys=lane_keys)
     L = wcfg.max_length
     # number of remaining hops: start already consumed 1 edge in edges-mode
     hops = L - 1 if wcfg.start_mode == "edges" else L
@@ -462,19 +581,32 @@ def _generate_walks_impl(index: TemporalIndex, key: jax.Array,
     def body(carry, step):
         hop_key = jax.random.fold_in(walk_key, step)
         write_pos = step + (1 if wcfg.start_mode == "edges" else 0)
+        if lanes is not None:
+            # per-lane draw for this hop (tag s+1; tag 0 is the start draw)
+            # and the per-lane budget: column write_pos+1 is written only
+            # while it stays within the lane's own max_len
+            lane_kw = dict(
+                lane_bias=lanes.bias,
+                lane_u=_lane_uniform(lane_keys, step + 1),
+                lane_limit=(write_pos + 1) <= lanes.max_len,
+            )
+        else:
+            lane_kw = {}
         if collect_stats:
             st = sched.dispatch_stats(index, carry.cur_node, carry.alive,
                                       sched_cfg)
         else:
             st = jnp.zeros((sched.NUM_STATS,), jnp.float32)
         if path == "fullwalk":
-            carry = _hop_fullwalk(index, scfg, carry, write_pos, hop_key)
+            carry = _hop_fullwalk(index, scfg, carry, write_pos, hop_key,
+                                  **lane_kw)
         elif path == "grouped":
             if bucket:
                 carry = _hop_grouped_bucket(index, scfg, sched_cfg, carry,
-                                            write_pos, hop_key)
+                                            write_pos, hop_key, **lane_kw)
             else:
-                carry = _hop_grouped(index, scfg, carry, write_pos, hop_key)
+                carry = _hop_grouped(index, scfg, carry, write_pos, hop_key,
+                                     **lane_kw)
         elif path == "tiled":
             if bucket:
                 carry = _hop_tiled_bucket(index, scfg, sched_cfg, carry,
@@ -493,11 +625,54 @@ def _generate_walks_impl(index: TemporalIndex, key: jax.Array,
                       stats=stats if collect_stats else None)
 
 
+def _check_lane_support(wcfg: WalkConfig, scfg: SamplerConfig,
+                        sched_cfg: SchedulerConfig,
+                        lanes: LaneParams) -> None:
+    """Static (trace-time) validation of a per-lane batch (DESIGN.md §11)."""
+    if scfg.mode != "index":
+        raise ValueError(
+            "per-lane batches require SamplerConfig.mode='index': the "
+            "per-lane dispatch selects over the three closed-form inverse "
+            f"CDFs (got mode={scfg.mode!r})")
+    if scfg.node2vec_p != 1.0 or scfg.node2vec_q != 1.0:
+        raise ValueError(
+            "per-lane batches do not support node2vec second-order bias "
+            "(set node2vec_p=node2vec_q=1.0)")
+    if sched_cfg.path == "tiled":
+        raise ValueError(
+            "per-lane batches support paths 'fullwalk'|'grouped'; the "
+            "tiled Pallas kernel compiles a single bias per dispatch")
+    if lanes.start_node.shape[0] != wcfg.num_walks:
+        raise ValueError(
+            f"lane arrays have {lanes.start_node.shape[0]} lanes but "
+            f"wcfg.num_walks={wcfg.num_walks}")
+
+
 # Generate ``wcfg.num_walks`` temporal walks of ≤ ``max_length`` hops.
 generate_walks = partial(
     jax.jit,
     static_argnames=("wcfg", "scfg", "sched_cfg", "collect_stats"),
 )(_generate_walks_impl)
+
+
+def _generate_walk_lanes_impl(index: TemporalIndex, key: jax.Array,
+                              lanes: LaneParams, wcfg: WalkConfig,
+                              scfg: SamplerConfig,
+                              sched_cfg: SchedulerConfig,
+                              buffers: Optional[WalkBuffers] = None
+                              ) -> WalkResult:
+    return _generate_walks_impl(index, key, wcfg, scfg, sched_cfg,
+                                buffers=buffers, lanes=lanes)
+
+
+# Coalesced heterogeneous batch (DESIGN.md §11): one fixed-shape dispatch
+# serving many queries, with bias / max_length / RNG seed per lane. The
+# jit cache keys on (wcfg, scfg, sched_cfg) — the serving coalescer keeps
+# that set small by bucketing batch shapes.
+generate_walk_lanes = partial(
+    jax.jit,
+    static_argnames=("wcfg", "scfg", "sched_cfg"),
+)(_generate_walk_lanes_impl)
 
 
 def _generate_walks_donated_impl(index: TemporalIndex, key: jax.Array,

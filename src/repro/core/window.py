@@ -210,3 +210,12 @@ ingest_merge = ingest
 ingest_sort = partial(jax.jit,
                       static_argnames=("node_capacity", "bias_scale"))(
     _ingest_sort_impl)
+
+# Non-donating merge ingest for the serving snapshot double-buffer
+# (serve/snapshot.py, DESIGN.md §11): the *old* WindowState must stay
+# readable while walk queries run against it and the next window builds
+# concurrently, so the input cannot be donated. Same math as ``ingest``,
+# byte-identical output; costs one fresh store+index allocation per call.
+ingest_nodonate = partial(jax.jit,
+                          static_argnames=("node_capacity", "bias_scale"))(
+    ingest_impl)

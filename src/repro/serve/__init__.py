@@ -1,0 +1,28 @@
+"""Walk-query serving subsystem (DESIGN.md §11): multi-tenant request
+coalescing over the streaming engine.
+
+* ``WalkQuery`` / ``QueryResult`` — the request model (per-request bias,
+  max length, seed, start nodes).
+* coalescer — shape-bucketed packing of many queries into one
+  fixed-shape ``generate_walk_lanes`` dispatch, plus result slicing.
+* ``SnapshotManager`` — window double-buffer: serve against a consistent
+  snapshot while the next ingest builds.
+* ``WalkService`` — the service loop: fixed-capacity queue with
+  backpressure + drop accounting, FIFO coalescing, p50/p99 latency and
+  walks/s stats.
+"""
+from repro.serve.coalescer import (
+    LaneSlice,
+    bucketize,
+    pack_queries,
+    slice_result,
+)
+from repro.serve.query import QueryResult, WalkQuery
+from repro.serve.service import QueueFull, ServeStats, WalkService
+from repro.serve.snapshot import SnapshotManager
+
+__all__ = [
+    "LaneSlice", "bucketize", "pack_queries", "slice_result",
+    "QueryResult", "WalkQuery", "QueueFull", "ServeStats", "WalkService",
+    "SnapshotManager",
+]

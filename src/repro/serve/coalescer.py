@@ -1,0 +1,110 @@
+"""Request coalescing: heterogeneous queries -> one fixed-shape lane batch.
+
+The packing problem (DESIGN.md §11): the walk engine dispatches
+fixed-shape programs (jit caches key on ``(num_walks, max_length,
+start_mode)``), while traffic arrives as many small heterogeneous
+requests. The coalescer bridges the two:
+
+* **shape buckets** — a batch always runs at a bucketed (lane count,
+  max length) from ``ServeConfig``, never at the exact request shape, so
+  arbitrary traffic compiles at most ``len(lane_buckets) ×
+  len(length_buckets) × 2`` programs;
+* **lane packing** — queries are laid out back-to-back along the walk
+  axis; surplus bucket lanes are marked inactive (``LaneParams.active``)
+  and cost only VPU lanes, not correctness;
+* **result slicing** — each query's rows are sliced back out and trimmed
+  to its own ``max_length + 1`` columns (everything beyond is PAD by the
+  per-lane termination in the engine).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.samplers import bias_code
+from repro.core.walk_engine import LaneParams, WalkResult
+from repro.serve.query import WalkQuery
+
+
+def bucketize(n: int, buckets: Sequence[int]) -> Optional[int]:
+    """Smallest bucket >= n, or None when n exceeds every bucket."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return None
+
+
+@dataclass(frozen=True)
+class LaneSlice:
+    """Where one query's lanes live inside a coalesced batch."""
+
+    offset: int
+    count: int
+
+
+def pack_queries(queries: Sequence[WalkQuery], num_lanes: int,
+                 max_length: int) -> Tuple[LaneParams, List[LaneSlice]]:
+    """Lay queries out back-to-back along the walk axis.
+
+    Returns the engine-ready ``LaneParams`` (device arrays, ``num_lanes``
+    wide, padding lanes inactive) and one ``LaneSlice`` per query. All
+    queries must share a start mode and fit the bucket shape; the service
+    guarantees both.
+    """
+    total = sum(q.num_lanes for q in queries)
+    if total > num_lanes:
+        raise ValueError(f"{total} lanes exceed the {num_lanes}-lane bucket")
+    if any(q.max_length > max_length for q in queries):
+        raise ValueError("query max_length exceeds the length bucket")
+    start_node = np.zeros(num_lanes, np.int32)
+    bias = np.zeros(num_lanes, np.int32)
+    start_bias = np.zeros(num_lanes, np.int32)
+    max_len = np.zeros(num_lanes, np.int32)
+    rid = np.zeros(num_lanes, np.int32)
+    wid = np.zeros(num_lanes, np.int32)
+    active = np.zeros(num_lanes, bool)
+
+    slices: List[LaneSlice] = []
+    off = 0
+    for q in queries:
+        n = q.num_lanes
+        sl = slice(off, off + n)
+        if q.start_mode == "nodes":
+            start_node[sl] = np.asarray(q.start_nodes, np.int32)
+        bias[sl] = bias_code(q.bias)
+        start_bias[sl] = bias_code(q.start_bias)
+        max_len[sl] = q.max_length
+        rid[sl] = np.int32(q.seed)
+        wid[sl] = np.arange(n, dtype=np.int32)
+        active[sl] = True
+        slices.append(LaneSlice(offset=off, count=n))
+        off += n
+
+    return LaneParams(
+        start_node=jnp.asarray(start_node),
+        bias=jnp.asarray(bias),
+        start_bias=jnp.asarray(start_bias),
+        max_len=jnp.asarray(max_len),
+        rid=jnp.asarray(rid),
+        wid=jnp.asarray(wid),
+        active=jnp.asarray(active),
+    ), slices
+
+
+def slice_result(nodes: np.ndarray, times: np.ndarray, lengths: np.ndarray,
+                 sl: LaneSlice, query: WalkQuery):
+    """One query's rows out of the batch result, trimmed to its columns."""
+    cols = query.max_length + 1
+    rows = slice(sl.offset, sl.offset + sl.count)
+    return (nodes[rows, :cols].copy(), times[rows, :cols].copy(),
+            lengths[rows].copy())
+
+
+def result_arrays(res: WalkResult):
+    """Materialize a batch result on host once (single device->host copy
+    per array; per-query slicing then stays in numpy)."""
+    return (np.asarray(res.nodes), np.asarray(res.times),
+            np.asarray(res.lengths))

@@ -1,0 +1,297 @@
+"""Multi-tenant walk-query service over the streaming engine (DESIGN.md §11).
+
+``WalkService`` is the front door the ROADMAP's "serve heavy traffic"
+goal needs: many callers submit small heterogeneous ``WalkQuery``s; the
+service queues them (fixed capacity, backpressure by drop + accounting),
+coalesces compatible queries into one fixed-shape ``generate_walk_lanes``
+dispatch per ``step()``, slices each tenant's rows back out, and tracks
+p50/p99 submit→complete latency plus walks/s throughput.
+
+Coalescing policy: strict FIFO head-of-line — ``step()`` takes the oldest
+pending query, then greedily folds in every other pending query with the
+same (start mode, length bucket) group key, in arrival order, until the
+largest lane bucket is full. Older traffic is never overtaken by more
+than one batch formation, and a lone query still rides a right-sized
+(small) bucket instead of the mega-batch shape.
+
+Determinism: results are bit-identical to running each query solo
+(``run_query_solo``) because lane RNG folds by (query seed, walk id,
+step) and the per-lane bias/length dispatch is pure per lane — the
+coalescer only decides *where* a lane sits, never *what* it computes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import EngineConfig, ServeConfig, WalkConfig
+from repro.core.edge_store import make_batch
+from repro.core.walk_engine import generate_walk_lanes
+from repro.core.window import WindowState, init_window
+from repro.serve.coalescer import (
+    bucketize,
+    pack_queries,
+    result_arrays,
+    slice_result,
+)
+from repro.serve.query import QueryResult, WalkQuery
+from repro.serve.snapshot import SnapshotManager
+
+
+class QueueFull(RuntimeError):
+    """Raised by ``submit(..., strict=True)`` when the queue is at capacity."""
+
+
+# percentile window: counters are lifetime totals, but the latency/batch
+# samples backing p50/p99 are a bounded recent window so a long-running
+# service neither grows without bound nor pays O(history) per stat read
+STATS_WINDOW = 65536
+
+
+@dataclass
+class ServeStats:
+    """Serving counters + latency/throughput accounting."""
+
+    submitted: int = 0
+    completed: int = 0
+    dropped_backpressure: int = 0   # queue at capacity
+    dropped_oversize: int = 0       # exceeds the largest shape bucket
+    batches: int = 0                # coalesced dispatches
+    lanes_dispatched: int = 0       # incl. bucket padding
+    lanes_live: int = 0             # real query lanes
+    walks: int = 0                  # walks returned to callers
+    hops: int = 0                   # edges traversed in returned walks
+    busy_s: float = 0.0             # total wall time inside dispatches
+    latencies_s: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=STATS_WINDOW))
+    sample_s: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=STATS_WINDOW))
+
+    @property
+    def dropped(self) -> int:
+        return self.dropped_backpressure + self.dropped_oversize
+
+    def latency_percentile(self, q: float) -> float:
+        """q-th percentile of submit→complete latency (recent window), s."""
+        if not self.latencies_s:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latencies_s), q))
+
+    @property
+    def p50_ms(self) -> float:
+        return 1e3 * self.latency_percentile(50)
+
+    @property
+    def p99_ms(self) -> float:
+        return 1e3 * self.latency_percentile(99)
+
+    @property
+    def walks_per_s(self) -> float:
+        return self.walks / self.busy_s if self.busy_s > 0 else 0.0
+
+    @property
+    def steps_per_s(self) -> float:
+        return self.hops / self.busy_s if self.busy_s > 0 else 0.0
+
+    @property
+    def lane_occupancy(self) -> float:
+        """Live fraction of dispatched lanes (bucket-padding overhead)."""
+        return (self.lanes_live / self.lanes_dispatched
+                if self.lanes_dispatched else 0.0)
+
+
+class WalkService:
+    """Walk-query serving over a snapshot double-buffered window.
+
+    The service owns a ``SnapshotManager`` (feed it edges via ``ingest`` /
+    ``begin_ingest`` + ``publish``) and a fixed-capacity FIFO of pending
+    queries. ``submit`` enqueues (or drops, under backpressure);
+    ``step`` serves one coalesced batch; ``drain`` loops until empty.
+    """
+
+    def __init__(self, cfg: EngineConfig,
+                 serve_cfg: ServeConfig = ServeConfig(),
+                 state: Optional[WindowState] = None,
+                 batch_capacity: int = 8192):
+        if cfg.sampler.mode != "index":
+            raise ValueError(
+                "serving requires SamplerConfig.mode='index' (per-lane "
+                "dispatch over the closed-form inverse CDFs)")
+        if cfg.sampler.node2vec_p != 1.0 or cfg.sampler.node2vec_q != 1.0:
+            raise ValueError("serving does not support node2vec bias")
+        if list(serve_cfg.lane_buckets) != sorted(serve_cfg.lane_buckets) \
+                or list(serve_cfg.length_buckets) != sorted(
+                    serve_cfg.length_buckets):
+            raise ValueError("ServeConfig buckets must be sorted ascending")
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        # the tiled kernel compiles one bias per dispatch; serve on the
+        # grouped path instead (same walks — tested path equivalence)
+        self.sched_cfg = (dataclasses.replace(cfg.scheduler, path="grouped")
+                         if cfg.scheduler.path == "tiled" else cfg.scheduler)
+        self.batch_capacity = batch_capacity
+        self.snapshots = SnapshotManager(
+            state if state is not None else init_window(
+                cfg.window.edge_capacity, cfg.window.node_capacity,
+                int(cfg.window.duration)),
+            cfg.window.node_capacity)
+        # NOT split per call: lane RNG identity lives in (seed, walk, step)
+        # folds, and solo/coalesced bit-equality needs a stable base.
+        self.base_key = jax.random.PRNGKey(cfg.seed)
+        self.stats = ServeStats()
+        self._pending: Deque[Tuple[int, float, WalkQuery]] = deque()
+        self._results: Dict[int, QueryResult] = {}
+        self._next_ticket = 0
+
+    # ------------------------------------------------------------------
+    # Ingest side (snapshot double-buffer)
+    # ------------------------------------------------------------------
+
+    def ingest(self, src, dst, ts) -> None:
+        """Advance the window synchronously (begin + publish)."""
+        self.begin_ingest(src, dst, ts)
+        self.publish()
+
+    def begin_ingest(self, src, dst, ts) -> None:
+        """Start building the next window; serving continues against the
+        current snapshot until ``publish``."""
+        batch = make_batch(src, dst, ts, capacity=self.batch_capacity)
+        self.snapshots.begin_ingest(batch)
+
+    def publish(self) -> None:
+        self.snapshots.publish()
+
+    # ------------------------------------------------------------------
+    # Query side
+    # ------------------------------------------------------------------
+
+    def _oversize(self, query: WalkQuery) -> bool:
+        return (bucketize(query.num_lanes, self.serve_cfg.lane_buckets)
+                is None
+                or bucketize(query.max_length, self.serve_cfg.length_buckets)
+                is None)
+
+    def submit(self, query: WalkQuery, strict: bool = False) -> Optional[int]:
+        """Enqueue a query; returns its ticket, or None when dropped.
+
+        Drops (counted in ``stats``) happen when the fixed-capacity queue
+        is full (backpressure) or the query exceeds the largest shape
+        bucket. ``strict=True`` raises instead of dropping.
+        """
+        if self._oversize(query):
+            if strict or not self.serve_cfg.drop_oversize:
+                raise ValueError(
+                    f"query needs {query.num_lanes} lanes × "
+                    f"{query.max_length} hops; largest bucket is "
+                    f"{self.serve_cfg.lane_buckets[-1]} × "
+                    f"{self.serve_cfg.length_buckets[-1]}")
+            self.stats.dropped_oversize += 1
+            return None
+        if len(self._pending) >= self.serve_cfg.queue_capacity:
+            if strict:
+                raise QueueFull(
+                    f"{len(self._pending)} queries pending "
+                    f"(capacity {self.serve_cfg.queue_capacity})")
+            self.stats.dropped_backpressure += 1
+            return None
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, time.perf_counter(), query))
+        self.stats.submitted += 1
+        return ticket
+
+    def poll(self, ticket: int) -> Optional[QueryResult]:
+        """Fetch (and forget) a completed query's result."""
+        return self._results.pop(ticket, None)
+
+    @property
+    def pending_count(self) -> int:
+        return len(self._pending)
+
+    def _group_key(self, query: WalkQuery):
+        return (query.start_mode,
+                bucketize(query.max_length, self.serve_cfg.length_buckets))
+
+    def _take_batch(self):
+        """FIFO head-of-line group: the oldest query fixes the group key;
+        fold in same-group queries (arrival order) up to the lane budget."""
+        head_key = self._group_key(self._pending[0][2])
+        budget = self.serve_cfg.lane_buckets[-1]
+        taken, kept, lanes = [], deque(), 0
+        for item in self._pending:
+            q = item[2]
+            if self._group_key(q) == head_key and lanes + q.num_lanes <= budget:
+                taken.append(item)
+                lanes += q.num_lanes
+            else:
+                kept.append(item)
+        self._pending = kept
+        return head_key, taken, lanes
+
+    def step(self) -> int:
+        """Serve one coalesced batch; returns the number of queries served."""
+        if not self._pending:
+            return 0
+        (start_mode, len_bucket), taken, lanes = self._take_batch()
+        lane_bucket = bucketize(lanes, self.serve_cfg.lane_buckets)
+        queries = [q for _, _, q in taken]
+        params, slices = pack_queries(queries, lane_bucket, len_bucket)
+        wcfg = WalkConfig(num_walks=lane_bucket, max_length=len_bucket,
+                          start_mode=start_mode)
+        t0 = time.perf_counter()
+        res = generate_walk_lanes(self.snapshots.current.index,
+                                  self.base_key, params, wcfg,
+                                  self.cfg.sampler, self.sched_cfg)
+        jax.block_until_ready(res.nodes)
+        elapsed = time.perf_counter() - t0
+        self.stats.sample_s.append(elapsed)
+        self.stats.busy_s += elapsed
+        nodes, times, lengths = result_arrays(res)
+        done_t = time.perf_counter()
+        self.stats.batches += 1
+        self.stats.lanes_dispatched += lane_bucket
+        self.stats.lanes_live += lanes
+        for (ticket, arrival, q), sl in zip(taken, slices):
+            qn, qt, ql = slice_result(nodes, times, lengths, sl, q)
+            self._results[ticket] = QueryResult(
+                ticket=ticket, query=q, nodes=qn, times=qt, lengths=ql,
+                latency_s=done_t - arrival)
+            self.stats.completed += 1
+            self.stats.walks += q.num_lanes
+            self.stats.hops += int(np.sum(np.clip(ql - 1, 0, None)))
+            self.stats.latencies_s.append(done_t - arrival)
+        return len(taken)
+
+    def drain(self) -> List[QueryResult]:
+        """Serve until the queue is empty; return all completed results."""
+        while self._pending:
+            self.step()
+        out = list(self._results.values())
+        self._results.clear()
+        return out
+
+    # ------------------------------------------------------------------
+    # Reference path
+    # ------------------------------------------------------------------
+
+    def run_query_solo(self, query: WalkQuery):
+        """Run one query alone at its exact shape (no coalescing, no
+        bucketing) against the current snapshot. The per-lane RNG makes
+        this bit-identical to the same query served coalesced — the
+        equivalence the tests pin down.
+        """
+        params, (sl,) = pack_queries([query], query.num_lanes,
+                                     query.max_length)
+        wcfg = WalkConfig(num_walks=query.num_lanes,
+                          max_length=query.max_length,
+                          start_mode=query.start_mode)
+        res = generate_walk_lanes(self.snapshots.current.index,
+                                  self.base_key, params, wcfg,
+                                  self.cfg.sampler, self.sched_cfg)
+        return slice_result(*result_arrays(res), sl, query)

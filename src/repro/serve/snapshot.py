@@ -1,0 +1,71 @@
+"""Snapshot double-buffer: serve walks against a consistent window while
+the next ingest step builds (DESIGN.md §11).
+
+The streaming engine's donating ``ingest`` consumes its input state — the
+right call in a pure replay loop, and exactly wrong for serving, where
+in-flight queries must keep reading the window they were admitted
+against. The ``SnapshotManager`` therefore advances the window through
+the **non-donating** merge ingest (``window.ingest_nodonate``, same math,
+byte-identical output):
+
+* ``current`` — the front buffer. Immutable from the service's point of
+  view; every coalesced batch runs against it.
+* ``begin_ingest(batch)`` — dispatches the merge ingest into the back
+  buffer and returns immediately (JAX async dispatch): the device builds
+  the next window while the host keeps coalescing and dispatching walk
+  batches against ``current``.
+* ``publish()`` — waits for the back buffer and swaps it in atomically.
+  Queries admitted before the swap saw the old window; queries admitted
+  after see the new one. No query ever observes a half-ingested state.
+
+Two windows are alive at the swap point — the double-buffer's memory
+cost — and the old one is released to the allocator as soon as the last
+reference drops.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.edge_store import EdgeBatch
+from repro.core.window import WindowState, ingest_nodonate
+
+
+class SnapshotManager:
+    """Double-buffered ``WindowState`` for the serving layer."""
+
+    def __init__(self, state: WindowState, node_capacity: int):
+        self.current = state
+        self.node_capacity = node_capacity
+        self.version = 0          # bumped at every publish
+        self._next: Optional[WindowState] = None
+
+    @property
+    def ingest_in_flight(self) -> bool:
+        return self._next is not None
+
+    def begin_ingest(self, batch: EdgeBatch) -> None:
+        """Start building the next window; ``current`` stays serveable."""
+        if self._next is not None:
+            raise RuntimeError("an ingest is already in flight; publish() "
+                               "or discard() it first")
+        self._next = ingest_nodonate(self.current, batch, self.node_capacity)
+
+    def publish(self) -> WindowState:
+        """Wait for the in-flight ingest and swap it in as ``current``."""
+        if self._next is None:
+            raise RuntimeError("no ingest in flight; call begin_ingest first")
+        jax.block_until_ready(self._next.index.ns_order)
+        self.current, self._next = self._next, None
+        self.version += 1
+        return self.current
+
+    def discard(self) -> None:
+        """Drop an in-flight ingest without publishing it."""
+        self._next = None
+
+    def ingest(self, batch: EdgeBatch) -> WindowState:
+        """Synchronous convenience: begin + publish in one call."""
+        self.begin_ingest(batch)
+        return self.publish()

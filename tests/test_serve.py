@@ -1,0 +1,276 @@
+"""Serving subsystem (DESIGN.md §11): coalesced == solo bit-identity,
+shape buckets, queue backpressure, snapshot double-buffer."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    ServeConfig,
+    WalkConfig,
+    WindowConfig,
+)
+from repro.core.edge_store import make_batch
+from repro.core.validation import validate_walks_np
+from repro.core.walk_engine import NODE_PAD, generate_walk_lanes
+from repro.core.window import ingest, init_window
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.serve import WalkQuery, WalkService, bucketize, pack_queries
+
+NC = 128
+
+
+def _engine_cfg(**sched_kw):
+    return EngineConfig(
+        window=WindowConfig(duration=4000, edge_capacity=4096,
+                            node_capacity=NC),
+        sampler=SamplerConfig(mode="index"),
+        scheduler=SchedulerConfig(path="grouped", **sched_kw))
+
+
+def _serve_cfg(**kw):
+    kw.setdefault("lane_buckets", (8, 16, 64))
+    kw.setdefault("length_buckets", (4, 8))
+    return ServeConfig(**kw)
+
+
+# module-level cache rather than a fixture: the property test below must
+# not take fixture arguments (the hypothesis fallback shim presents a
+# zero-argument signature), so both share this helper.
+_SERVICE_CACHE = {}
+
+
+def _loaded_service():
+    if not _SERVICE_CACHE:
+        g = powerlaw_temporal_graph(100, 3000, seed=11)
+        svc = WalkService(_engine_cfg(), _serve_cfg())
+        for bs, bd, bt in chronological_batches(g, 3):
+            svc.ingest(bs, bd, bt)
+        _SERVICE_CACHE["svc"] = (g, svc)
+    return _SERVICE_CACHE["svc"]
+
+
+@pytest.fixture(scope="module")
+def loaded_service():
+    return _loaded_service()
+
+
+BIASES = ("uniform", "linear", "exponential")
+
+
+def _query(bias_i, edges_mode, n_lanes, max_length, seed, node0):
+    if edges_mode:
+        return WalkQuery(num_walks=n_lanes, start_mode="edges",
+                         bias=BIASES[bias_i],
+                         start_bias=BIASES[(bias_i + 1) % 3],
+                         max_length=max_length, seed=seed)
+    starts = tuple((node0 + 7 * i) % NC for i in range(n_lanes))
+    return WalkQuery(start_nodes=starts, bias=BIASES[bias_i],
+                     max_length=max_length, seed=seed)
+
+
+def _assert_solo_equals_coalesced(svc, queries):
+    tickets = [svc.submit(q, strict=True) for q in queries]
+    while svc.pending_count:
+        svc.step()
+    for t, q in zip(tickets, queries):
+        r = svc.poll(t)
+        assert r is not None
+        sn, st_, sl = svc.run_query_solo(q)
+        assert np.array_equal(r.nodes, sn), q
+        assert np.array_equal(r.times, st_), q
+        assert np.array_equal(r.lengths, sl), q
+
+
+def test_mixed_bias_equivalence_full_grid(loaded_service):
+    """Acceptance: a coalesced heterogeneous batch is bit-identical to
+    per-query solo runs — all three biases × both start modes."""
+    _, svc = loaded_service
+    queries = []
+    for i, bias in enumerate(BIASES):
+        queries.append(WalkQuery(start_nodes=(1 + i, 30 + i, 60 + i),
+                                 bias=bias, max_length=5 + i,
+                                 seed=100 + i))
+        queries.append(WalkQuery(num_walks=3, start_mode="edges", bias=bias,
+                                 start_bias=BIASES[(i + 1) % 3],
+                                 max_length=4 + i, seed=200 + i))
+    _assert_solo_equals_coalesced(svc, queries)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.booleans(),
+                          st.integers(1, 4), st.integers(2, 8),
+                          st.integers(0, 10_000), st.integers(0, NC - 1)),
+                min_size=1, max_size=6))
+def test_mixed_bias_equivalence_property(descriptors):
+    """Property: any mix of (bias, start mode, lanes, length, seed) packs
+    into coalesced batches bit-identical to each query alone."""
+    _, svc = _loaded_service()
+    queries = [_query(*d) for d in descriptors]
+    _assert_solo_equals_coalesced(svc, queries)
+
+
+def test_served_walks_are_causal(loaded_service):
+    """Coalesced answers are real temporal walks (hop-valid on the graph)."""
+    g, svc = loaded_service
+    queries = [WalkQuery(start_nodes=tuple(range(40)), bias=b, max_length=8,
+                         seed=i) for i, b in enumerate(BIASES)]
+    tickets = [svc.submit(q, strict=True) for q in queries]
+    while svc.pending_count:
+        svc.step()
+    for t in tickets:
+        r = svc.poll(t)
+        hv, _ = validate_walks_np((g.src, g.dst, g.ts), r.nodes, r.times,
+                                  r.lengths)
+        assert hv == 1.0
+        # rows past a lane's length are PAD; lengths respect max_length+1
+        assert r.lengths.max() <= r.query.max_length + 1
+        for w in range(r.nodes.shape[0]):
+            assert np.all(r.nodes[w, r.lengths[w]:] == NODE_PAD)
+
+
+def test_lane_paths_equivalent(loaded_service):
+    """fullwalk / grouped-bucket / grouped-lexsort serve identical walks."""
+    _, svc = loaded_service
+    q = WalkQuery(start_nodes=tuple(range(24)), bias="exponential",
+                  max_length=8, seed=9)
+    ref = None
+    for path, regroup in (("fullwalk", "bucket"), ("grouped", "bucket"),
+                          ("grouped", "lexsort")):
+        svc2 = WalkService(_engine_cfg(regroup=regroup), _serve_cfg(),
+                           state=svc.snapshots.current)
+        svc2.sched_cfg = dataclasses.replace(svc2.sched_cfg, path=path,
+                                             regroup=regroup)
+        got = svc2.run_query_solo(q)
+        if ref is None:
+            ref = got
+        else:
+            for a, b in zip(ref, got):
+                assert np.array_equal(a, b), (path, regroup)
+
+
+def test_queue_backpressure_and_drop_accounting():
+    svc = WalkService(_engine_cfg(), _serve_cfg(queue_capacity=3))
+    g = powerlaw_temporal_graph(100, 500, seed=2)
+    svc.ingest(g.src, g.dst, g.ts)
+    qs = [WalkQuery(start_nodes=(i % NC,), max_length=4, seed=i)
+          for i in range(5)]
+    tickets = [svc.submit(q) for q in qs]
+    assert tickets[:3] == [0, 1, 2] and tickets[3:] == [None, None]
+    assert svc.stats.dropped_backpressure == 2
+    assert svc.stats.submitted == 3
+    with pytest.raises(Exception):
+        svc.submit(qs[0], strict=True)
+    served = svc.drain()
+    assert len(served) == 3
+    # queue drained: submits accepted again
+    assert svc.submit(qs[3]) is not None
+
+
+def test_oversize_query_dropped_or_rejected():
+    svc = WalkService(_engine_cfg(), _serve_cfg())
+    big = WalkQuery(start_nodes=tuple(range(65)), max_length=4)   # > 64 lanes
+    long = WalkQuery(start_nodes=(1,), max_length=9)              # > 8 hops
+    assert svc.submit(big) is None and svc.submit(long) is None
+    assert svc.stats.dropped_oversize == 2
+    with pytest.raises(ValueError):
+        svc.submit(big, strict=True)
+
+
+def test_shape_buckets():
+    assert bucketize(1, (8, 16)) == 8
+    assert bucketize(8, (8, 16)) == 8
+    assert bucketize(9, (8, 16)) == 16
+    assert bucketize(17, (8, 16)) is None
+    params, slices = pack_queries(
+        [WalkQuery(start_nodes=(1, 2), max_length=3),
+         WalkQuery(num_walks=3, start_mode="edges", max_length=4)], 8, 4)
+    assert params.start_node.shape == (8,)
+    assert [(s.offset, s.count) for s in slices] == [(0, 2), (2, 3)]
+    assert np.asarray(params.active).tolist() == [True] * 5 + [False] * 3
+    with pytest.raises(ValueError):
+        pack_queries([WalkQuery(start_nodes=tuple(range(9)))], 8, 16)
+
+
+def test_snapshot_double_buffer_consistency():
+    """begin_ingest keeps the current snapshot serveable; publish swaps in
+    a window byte-identical to the donating ingest path."""
+    g = powerlaw_temporal_graph(100, 2000, seed=5)
+    batches = list(chronological_batches(g, 4))
+    svc = WalkService(_engine_cfg(), _serve_cfg())
+    ref = init_window(4096, NC, 4000)
+    for bs, bd, bt in batches[:-1]:
+        svc.ingest(bs, bd, bt)
+        ref = ingest(ref, make_batch(bs, bd, bt, capacity=svc.batch_capacity),
+                     NC)
+    bs, bd, bt = batches[-1]
+    svc.begin_ingest(bs, bd, bt)
+    assert svc.snapshots.ingest_in_flight
+    v0 = svc.snapshots.version
+    # the front buffer still serves while the back buffer builds
+    t = svc.submit(WalkQuery(start_nodes=(1, 2, 3), max_length=4, seed=1),
+                   strict=True)
+    svc.step()
+    r_old = svc.poll(t)
+    assert r_old is not None
+    before = [np.asarray(x) for x in jax.tree.leaves(svc.snapshots.current)]
+    svc.publish()
+    assert svc.snapshots.version == v0 + 1
+    ref = ingest(ref, make_batch(bs, bd, bt, capacity=svc.batch_capacity), NC)
+    after = jax.tree.leaves(svc.snapshots.current)
+    for got, want in zip(after, jax.tree.leaves(ref)):
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+    # the published window is a different state than the served snapshot
+    changed = any(not np.array_equal(a, np.asarray(b))
+                  for a, b in zip(before, after))
+    assert changed
+    with pytest.raises(RuntimeError):
+        svc.publish()                      # nothing in flight anymore
+
+
+def test_serving_rejects_unsupported_configs():
+    with pytest.raises(ValueError):
+        WalkService(dataclasses.replace(
+            _engine_cfg(), sampler=SamplerConfig(mode="weight")))
+    with pytest.raises(ValueError):
+        WalkService(dataclasses.replace(
+            _engine_cfg(), sampler=SamplerConfig(mode="index",
+                                                 node2vec_p=2.0)))
+    # tiled scheduler silently falls back to the (equivalent) grouped path
+    svc = WalkService(dataclasses.replace(
+        _engine_cfg(), scheduler=SchedulerConfig(path="tiled")))
+    assert svc.sched_cfg.path == "grouped"
+    # the engine itself refuses a tiled lane batch
+    g = powerlaw_temporal_graph(50, 500, seed=1)
+    svc2 = WalkService(_engine_cfg(), _serve_cfg())
+    svc2.ingest(g.src, g.dst, g.ts)
+    params, _ = pack_queries([WalkQuery(start_nodes=(1,), max_length=4)],
+                             8, 4)
+    with pytest.raises(ValueError):
+        generate_walk_lanes(
+            svc2.snapshots.current.index, svc2.base_key, params,
+            WalkConfig(num_walks=8, max_length=4, start_mode="nodes"),
+            SamplerConfig(mode="index"), SchedulerConfig(path="tiled"))
+
+
+def test_query_validation():
+    with pytest.raises(ValueError):
+        WalkQuery(start_nodes=(), start_mode="nodes")
+    with pytest.raises(ValueError):
+        WalkQuery(start_nodes=(1,), bias="gaussian")
+    with pytest.raises(ValueError):
+        WalkQuery(start_nodes=(1,), max_length=0)
+    with pytest.raises(ValueError):
+        WalkQuery(start_mode="edges", num_walks=0)
+    with pytest.raises(ValueError):
+        WalkQuery(start_nodes=(1,), seed=1 << 31)        # int32 round-trip
+    with pytest.raises(ValueError):
+        WalkQuery(start_nodes=(1 << 31,))
+    assert WalkQuery(start_nodes=(1, 2)).num_lanes == 2
+    assert WalkQuery(start_mode="edges", num_walks=5).num_lanes == 5

@@ -65,6 +65,31 @@ def test_overflow_keeps_newest():
     assert kept.tolist() == list(range(4, 12))
 
 
+def test_all_late_batch_leaves_window_byte_identical():
+    """Edge case: a batch entirely older than t_now − Δ must (a) leave the
+    window byte-identical — store, dual index, t_now — and (b) be fully
+    counted as late, with no overflow charged."""
+    st_ = init_window(edge_capacity=64, node_capacity=8, window=10)
+    st_ = ingest(st_, make_batch([0, 1, 2], [1, 2, 3], [100, 101, 102],
+                                 capacity=8), 8)
+    before_index = [np.asarray(x).copy()
+                    for x in jax.tree.leaves(st_.index)]
+    t_before = int(st_.t_now)
+    ingested_before = int(st_.ingested)
+    overflow_before = int(st_.overflow_drops)
+    # cutoff is 102 - 10 = 92: every edge below is "too late"
+    st_ = ingest(st_, make_batch([3, 4, 5, 6], [4, 5, 6, 7], [5, 40, 88, 91],
+                                 capacity=8), 8)
+    after_index = jax.tree.leaves(st_.index)
+    assert len(before_index) == len(after_index)
+    for got, want in zip(after_index, before_index):
+        assert np.array_equal(np.asarray(got), want)
+    assert int(st_.t_now) == t_before                 # time does not move
+    assert int(st_.late_drops) == 4                   # fully counted late
+    assert int(st_.ingested) == ingested_before + 4   # still counted seen
+    assert int(st_.overflow_drops) == overflow_before
+
+
 def test_memory_constant_across_stream():
     """Paper Fig. 11b: device bytes flat across batches."""
     from repro.core.edge_store import store_nbytes
