@@ -32,7 +32,8 @@ SUITES = [
     ("fig6_streaming_replay", "streaming_replay", "Fig. 6",
      "streaming replay latency/headroom; 3 drivers old-vs-new throughput"),
     ("fig7_scaling_edges", "scaling_edges", "Fig. 7",
-     "ingest + walk cost vs active edge count"),
+     "ingest + walk cost vs active edge count; node-partitioned-window "
+     "replay throughput vs shard count (DESIGN.md §12)"),
     ("fig8_9_param_sweeps", "param_sweeps", "Figs. 8-9",
      "tile_walks/tile_edges (block-dim analog) + solo_threshold sweeps"),
     ("fig10_window_sensitivity", "window_sensitivity", "Fig. 10",

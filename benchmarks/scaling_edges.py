@@ -2,7 +2,12 @@
 
 (a) ingestion-from-scratch time per edge count;
 (b) per-walk sampling time across edge counts for the three pickers
-    (paper: essentially flat — per-walk time varies <5%).
+    (paper: essentially flat — per-walk time varies <5%);
+(c) beyond-paper: node-partitioned window (DESIGN.md §12) — streaming
+    ingest + walk throughput per shard count, absolute and per device.
+    Shard counts sweep the divisors of the visible device count; fake an
+    8-device host with XLA_FLAGS=--xla_force_host_platform_device_count=8
+    (see benchmarks/README.md) to get the full curve on CPU.
 """
 from __future__ import annotations
 
@@ -12,14 +17,89 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    ShardConfig,
+    WalkConfig,
+    WindowConfig,
+)
 from repro.core.edge_store import make_batch, store_from_arrays
+from repro.core.streaming import StreamingEngine
 from repro.core.temporal_index import build_index
 from repro.core.window import ingest, init_window
 from repro.core.walk_engine import generate_walks
-from repro.data.synthetic import powerlaw_temporal_graph
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.distributed.streaming_shard import DistributedStreamingEngine
 
 EDGE_COUNTS = (1024, 8192, 65536, 262144, 524288)
+
+# sharded-window replay workload (c): modest sizes so the CPU path stays
+# quick; the structural claim is the per-shard scaling, not absolute us
+SHARD_NODES = 4096
+SHARD_EDGES = 200_000
+SHARD_BATCHES = 10
+SHARD_WALKS = 2048
+
+
+def run_sharded():
+    """(c) streaming replay throughput vs shard count."""
+    devs = len(jax.devices())
+    counts = [d for d in (1, 2, 4, 8) if d <= devs]
+    g = powerlaw_temporal_graph(SHARD_NODES, SHARD_EDGES, seed=23)
+    wcfg = WalkConfig(num_walks=SHARD_WALKS, max_length=16,
+                      start_mode="all_nodes")
+    batch_cap = SHARD_EDGES // SHARD_BATCHES + 8
+    cfg = EngineConfig(
+        window=WindowConfig(duration=5000, edge_capacity=1 << 17,
+                            node_capacity=SHARD_NODES),
+        sampler=SamplerConfig(bias="exponential", mode="index"),
+        scheduler=SchedulerConfig(path="grouped", regroup="bucket"),
+        # exchange buckets must cover the worst case of one sender routing
+        # its whole batch slice to one owner (DESIGN.md §12 provisioning):
+        # at D=1 that is the full batch
+        shard=ShardConfig(edge_capacity_per_shard=1 << 17,
+                          exchange_capacity=1 << 15,
+                          walk_slots=1 << 13,
+                          walk_bucket_capacity=1 << 12),
+    )
+
+    def timed_replay(make_engine):
+        # warm-up on a throwaway engine (pays the jit compile), then time a
+        # FRESH engine so the measured replay ingests a fresh stream, not a
+        # re-ingest against an already-advanced window (the
+        # streaming_replay.py convention)
+        make_engine().replay_device(chronological_batches(g, SHARD_BATCHES),
+                                    wcfg)
+        return make_engine().replay_device(
+            chronological_batches(g, SHARD_BATCHES), wcfg)
+
+    # single-device reference: the fused replay_scan driver, its own row —
+    # the shards=1 row below runs the shard_map'd engine, so the 1->D
+    # deltas isolate shard scaling and the ref->1 delta isolates the
+    # collective/migration machinery itself
+    out = timed_replay(
+        lambda: StreamingEngine(cfg, batch_capacity=batch_cap))
+    secs = out[-1]
+    emit("fig7/single_device_ref", secs * 1e6,
+         f"ingest_edges_s={SHARD_EDGES / secs:.0f};"
+         f"walks_s={SHARD_BATCHES * SHARD_WALKS / secs:.0f}")
+
+    rows = []
+    for D in counts:
+        stats, _, secs = timed_replay(
+            lambda: DistributedStreamingEngine(cfg, batch_capacity=batch_cap,
+                                               num_shards=D))
+        drops = int(stats.exchange_drops.sum() + stats.walk_drops.sum())
+        edges_s = SHARD_EDGES / secs
+        walks_s = SHARD_BATCHES * SHARD_WALKS / secs
+        emit(f"fig7/shards={D}", secs * 1e6,
+             f"ingest_edges_s={edges_s:.0f};walks_s={walks_s:.0f};"
+             f"edges_s_per_dev={edges_s / D:.0f};"
+             f"walks_s_per_dev={walks_s / D:.0f};drops={drops}")
+        rows.append((D, edges_s, walks_s))
+    return rows
 
 
 def run():
@@ -57,6 +137,7 @@ def run():
         vals = [r[2][k] for r in rows[1:]]   # skip smallest (fixed costs)
         spread = (max(vals) - min(vals)) / max(np.mean(vals), 1e-9)
         emit(f"fig7/flatness/{k}", 0.0, f"spread={100*spread:.1f}%")
+    rows.append(("sharded", run_sharded()))
     return rows
 
 

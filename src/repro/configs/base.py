@@ -91,10 +91,33 @@ class ServeConfig:
 
 
 @dataclass(frozen=True)
+class ShardConfig:
+    """Node-partitioned sliding window (repro.distributed.streaming_shard,
+    DESIGN.md §12).
+
+    Capacities are per shard and static: overflow at any stage drops rows
+    and counts them, never reshapes. ``exchange_capacity`` bounds how many
+    batch edges one shard may send to one *destination* shard per ingest
+    (provision for owner skew: a hub-owning shard can receive up to
+    ``num_shards * exchange_capacity`` edges per batch);
+    ``walk_bucket_capacity`` is the walk-migration analog (mirrors
+    ``make_distributed_walker``'s bucket knob); ``walk_slots`` bounds the
+    walks resident on one shard between hops.
+    """
+
+    num_shards: int = 0                # 0 = one shard per visible device
+    edge_capacity_per_shard: int = 1 << 16
+    exchange_capacity: int = 1 << 12   # batch edges per (sender, dest) pair
+    walk_slots: int = 1 << 12          # resident walk rows per shard
+    walk_bucket_capacity: int = 1 << 10  # migrating walks per (sender, dest)
+
+
+@dataclass(frozen=True)
 class EngineConfig:
     window: WindowConfig = field(default_factory=WindowConfig)
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+    shard: ShardConfig = field(default_factory=ShardConfig)
     timestamp_dtype: str = "int32"
     seed: int = 0
 

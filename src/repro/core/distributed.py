@@ -20,6 +20,16 @@ Scale-out design (KnightKing-style walk migration, recast as collectives):
 This is a beyond-paper feature: Tempest is single-GPU; pod-scale walk
 generation needs the store sharded (81B-edge windows exceed one chip's
 HBM) and this module supplies the mechanism.
+
+The owner-bucketed exchange (``exchange_by_owner``) and the resident-walk
+hop (``hop_resident``) are shared with the *streaming* side of the same
+partition: repro/distributed/streaming_shard.py keeps a node-partitioned
+sliding window per shard (DESIGN.md §12) and advances walks over the
+freshly ingested shard-local indexes with the exact same migration
+machinery — there the per-(walk, step) RNG is the streaming engine's
+(``uniform(fold_in(walk_key, step), (W,))[walk_id]``), which makes the
+sharded replay bit-identical to the single-device
+``StreamingEngine.replay_device``.
 """
 from __future__ import annotations
 
@@ -109,6 +119,79 @@ def init_sharded_walks(num_shards: int, walks_per_shard: int,
         length=jnp.asarray(ln), dropped=jnp.zeros((D,), jnp.int32))
 
 
+def owner_range_size(num_nodes: int, num_shards: int) -> int:
+    """Node-range width per shard: owner(v) = v // owner_range_size(...)."""
+    return math.ceil(num_nodes / num_shards)
+
+
+def hop_resident(idx: TemporalIndex, scfg: SamplerConfig, node, time, alive,
+                 u):
+    """One local hop for resident rows given per-row uniforms.
+
+    The pure sampling half of a migration step, shared by the static walker
+    (legacy per-(walk, step) fold_in keying) and the distributed streaming
+    engine (engine keying, DESIGN.md §12): Γ_t(v) lives entirely on v's
+    owner, so (cutoff, pick, gather) are all shard-local. Returns
+    (next_node, next_time, has_next); rows without a next hop keep their
+    (node, time).
+    """
+    a, b = node_range(idx, node)
+    c = temporal_cutoff(idx, a, b, time)
+    n = b - c
+    has = alive & (n > 0)
+    k = pick_in_neighborhood(idx, scfg, c, b, u, node)
+    k = jnp.clip(k, 0, idx.edge_capacity - 1)
+    return (jnp.where(has, idx.ns_dst[k], node),
+            jnp.where(has, idx.ns_ts[k], time), has)
+
+
+def exchange_by_owner(axis: str, num_shards: int, capacity: int,
+                      owner, valid, payloads, fills):
+    """Bucket rows by destination shard and move them with one all_to_all.
+
+    ``owner``/``valid`` are [n] (destination shard id / live-row mask);
+    ``payloads`` is a tuple of [n, ...] arrays and ``fills`` their padding
+    values. Each destination bucket holds ``capacity`` rows; a valid row
+    ranked past capacity in its bucket is **not sent** (static shapes make
+    overflow a provisioning event, exactly like the paper's walk-array
+    capacity) and counted in the returned scalar. Returns
+    (received leaves [num_shards * capacity, ...], fits, n_dropped) —
+    ``fits`` marks the rows that were actually sent, so callers can keep
+    or retire the overflow locally.
+
+    Rank within a bucket preserves row order, so receivers see each
+    sender's rows contiguously in sender-position order — the property the
+    sharded window ingest (DESIGN.md §12) relies on for stable timestamp
+    tie-breaking.
+    """
+    n = owner.shape[0]
+    owner = jnp.where(valid, owner, num_shards)
+    # rank within destination bucket: stable sort by owner (distinct keys)
+    sort_key = owner * n + jnp.arange(n, dtype=jnp.int32)
+    order = jnp.argsort(sort_key).astype(jnp.int32)
+    owner_sorted = owner[order]
+    first = jnp.searchsorted(owner_sorted, owner_sorted,
+                             side="left").astype(jnp.int32)
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - first
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    fits = (rank < capacity) & valid
+    n_drop = jnp.sum(valid & ~fits)
+
+    o = jnp.where(fits, owner, num_shards - 1)
+    r = jnp.where(fits, rank, capacity)
+
+    def move(payload, fillv):
+        buf = jnp.full((num_shards, capacity) + payload.shape[1:], fillv,
+                       payload.dtype)
+        buf = buf.at[o, r].set(payload, mode="drop")
+        res = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                                 tiled=True)
+        return res.reshape((num_shards * capacity,) + payload.shape[1:])
+
+    received = tuple(move(p, f) for p, f in zip(payloads, fills))
+    return received, fits, n_drop
+
+
 def make_distributed_walker(mesh: Mesh, axis: str, index_stacked,
                             scfg: SamplerConfig, *, range_size: int,
                             max_length: int, bucket_capacity: int):
@@ -116,19 +199,12 @@ def make_distributed_walker(mesh: Mesh, axis: str, index_stacked,
     D = mesh.devices.size
 
     def local_hop(idx: TemporalIndex, node, time, alive, wid, step):
-        a, b = node_range(idx, node)
-        c = temporal_cutoff(idx, a, b, time)
-        n = b - c
-        has = alive & (n > 0)
         # per-(walk, step) RNG: placement-independent
         base = jax.random.PRNGKey(0)
         sk = jax.vmap(lambda w: jax.random.fold_in(
             jax.random.fold_in(base, step), w))(wid)
         u = jax.vmap(lambda k: jax.random.uniform(k, ()))(sk)
-        k = pick_in_neighborhood(idx, scfg, c, b, u, node)
-        k = jnp.clip(k, 0, idx.edge_capacity - 1)
-        return (jnp.where(has, idx.ns_dst[k], node),
-                jnp.where(has, idx.ns_ts[k], time), has)
+        return hop_resident(idx, scfg, node, time, alive, u)
 
     def step_fn(idx, state_leaf_tuple, step):
         (wid, node, time, alive, tn, tt, ln, dropped) = state_leaf_tuple
@@ -143,52 +219,14 @@ def make_distributed_walker(mesh: Mesh, axis: str, index_stacked,
         occupied = wid >= 0
         alive = has
 
-        # bucket by destination owner
+        # dead-but-occupied walks stay put (their trace lives here); only
+        # ALIVE walks migrate to their destination's owner.
         owner = jnp.clip(nn // range_size, 0, D - 1)
-        owner = jnp.where(occupied, owner, D)     # parked walks: keep local?
-        # dead-but-occupied walks stay put (their trace lives here);
-        # only ALIVE walks migrate.
-        owner = jnp.where(alive, owner, D)
-
-        # rank within destination bucket
-        sort_key = owner * Wd + jnp.arange(Wd)
-        order = jnp.argsort(sort_key).astype(jnp.int32)
-        owner_sorted = owner[order]
-        first = jnp.searchsorted(owner_sorted, owner_sorted,
-                                 side="left").astype(jnp.int32)
-        rank_sorted = jnp.arange(Wd, dtype=jnp.int32) - first
-        rank = jnp.zeros((Wd,), jnp.int32).at[order].set(rank_sorted)
-        fits = (rank < bucket_capacity) & alive
-        n_drop = jnp.sum(alive & ~fits)
-
-        # payload buffers [D, Bk, ...]
-        L1 = tn.shape[1]
-        def scatter(payload, fillv):
-            buf = jnp.full((D, bucket_capacity) + payload.shape[1:], fillv,
-                           payload.dtype)
-            o = jnp.where(fits, owner, D - 1)
-            r = jnp.where(fits, rank, bucket_capacity)
-            return buf.at[o, r].set(payload, mode="drop")
-
-        p_wid = scatter(jnp.where(fits, wid, -1), -1)
-        p_node = scatter(nn, 0)
-        p_time = scatter(nt, 0)
-        p_tn = scatter(tn, NODE_PAD)
-        p_tt = scatter(tt, NODE_PAD)
-        p_ln = scatter(ln, 0)
-
-        # one all_to_all per payload leaf: [D, Bk, ...] -> [D*Bk, ...]
-        def a2a(x):
-            r = jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
-                                   tiled=True)
-            return r.reshape((D * bucket_capacity,) + x.shape[2:])
-
-        r_wid = a2a(p_wid)
-        r_node = a2a(p_node)
-        r_time = a2a(p_time)
-        r_tn = a2a(p_tn)
-        r_tt = a2a(p_tt)
-        r_ln = a2a(p_ln)
+        ((r_wid, r_node, r_time, r_tn, r_tt, r_ln), fits,
+         n_drop) = exchange_by_owner(
+            axis, D, bucket_capacity, owner, alive & occupied,
+            (wid, nn, nt, tn, tt, ln),
+            (-1, 0, 0, NODE_PAD, NODE_PAD, 0))
 
         # keep: dead walks stay resident (their trace is gathered here);
         # bucket-overflow walks also stay but STOP (counted as dropped).

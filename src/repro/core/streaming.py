@@ -43,6 +43,7 @@ from repro.configs.base import (
 from repro.core.edge_store import EdgeBatch, make_batch, stack_batches
 from repro.core.walk_engine import (
     WalkBuffers,
+    WalkResult,
     _generate_walks_impl,
     alloc_walk_buffers,
     generate_walks,
@@ -55,6 +56,11 @@ from repro.core.window import (
     ingest_sort,
     init_window,
 )
+
+
+# sample_walks_sharded replicates the index per device; past this size a
+# one-time warning points at the node-partitioned engine (DESIGN.md §12).
+REPLICATED_INDEX_WARN_BYTES = 256 << 20
 
 
 @dataclass
@@ -144,13 +150,17 @@ def replay_scan(state: WindowState, batches: EdgeBatch, key: jax.Array,
     """Replay K stacked batches fully on device under `jax.lax.scan`.
 
     ``batches`` holds [K, B_cap] arrays (see edge_store.stack_batches).
-    Returns ``(final_state, ReplayStats)`` — both still on device; the
-    caller decides when to synchronize (a single block_until_ready at the
-    end of the replay is the intended pattern).
+    Returns ``(final_state, ReplayStats, final_walks)`` — all still on
+    device; the caller decides when to synchronize (a single
+    block_until_ready at the end of the replay is the intended pattern).
+    ``final_walks`` is the last batch's WalkResult, read straight out of
+    the carried walk buffers — it is what the distributed replay
+    (repro/distributed/streaming_shard.py, DESIGN.md §12) must reproduce
+    bit-for-bit, and costs nothing to expose.
     """
 
     def step(carry, batch):
-        st, k, bufs = carry
+        st, k, bufs, _ = carry
         k, sub = jax.random.split(k)
         st, res = _ingest_and_walk_impl(st, batch, sub, node_capacity,
                                         wcfg, scfg, sched_cfg, bias_scale,
@@ -165,11 +175,14 @@ def replay_scan(state: WindowState, batches: EdgeBatch, key: jax.Array,
         )
         # walk buffers ride the scan carry: batch k+1's walks are written
         # into batch k's storage (DESIGN.md §10)
-        return (st, k, WalkBuffers(res.nodes, res.times)), stats
+        return (st, k, WalkBuffers(res.nodes, res.times), res.lengths), stats
 
-    (state, _, _), stats = jax.lax.scan(
-        step, (state, key, alloc_walk_buffers(wcfg)), batches)
-    return state, stats
+    lengths0 = jnp.zeros((wcfg.num_walks,), jnp.int32)
+    (state, _, bufs, lengths), stats = jax.lax.scan(
+        step, (state, key, alloc_walk_buffers(wcfg), lengths0), batches)
+    walks = WalkResult(nodes=bufs.nodes, times=bufs.times, lengths=lengths,
+                       stats=None)
+    return state, stats, walks
 
 
 class StreamingEngine:
@@ -194,6 +207,7 @@ class StreamingEngine:
         self.stats = StreamStats()
         # walk-buffer pool for sample_walks_donated, keyed by (W, L)
         self._walk_bufs: dict = {}
+        self._warned_replicated_index = False
 
     def ingest_batch(self, src, dst, ts) -> None:
         batch = make_batch(src, dst, ts, capacity=self.batch_capacity)
@@ -239,8 +253,20 @@ class StreamingEngine:
         """Device-parallel sampling: the walk axis sharded over the mesh
         (defaults to all devices) against the replicated window index —
         see repro.distributed.walks (DESIGN.md §10).
+
+        Memory cost: the **full dual index is replicated onto every
+        device** of the mesh — a D-device mesh holds D copies of the
+        store + index arrays (~10 arrays of edge capacity each), so total
+        index memory is D× the single-device footprint and the window must
+        still fit on ONE chip. That is the right trade only while it does;
+        once the index passes ``REPLICATED_INDEX_WARN_BYTES`` a one-time
+        warning points at the node-partitioned alternative
+        (``repro.distributed.streaming_shard.DistributedStreamingEngine``,
+        DESIGN.md §12), which shards the window itself so per-device memory
+        *falls* with device count instead of staying flat.
         """
         from repro.distributed.walks import generate_walks_sharded
+        self._warn_replicated_index()
         self.key, sub = jax.random.split(self.key)
         t0 = time.perf_counter()
         res = generate_walks_sharded(self.state.index, sub, wcfg,
@@ -248,6 +274,26 @@ class StreamingEngine:
                                      mesh=mesh)
         self._finish_sample(res, t0)
         return res
+
+    def _warn_replicated_index(self) -> None:
+        """One-time warning when the replicated-index sharding strategy is
+        used with an index too large to replicate comfortably."""
+        if self._warned_replicated_index:
+            return
+        nbytes = sum(
+            int(np.prod(a.shape)) * a.dtype.itemsize
+            for a in jax.tree_util.tree_leaves(self.state.index))
+        if nbytes > REPLICATED_INDEX_WARN_BYTES:
+            import warnings
+            warnings.warn(
+                f"sample_walks_sharded replicates the full window index "
+                f"(~{nbytes / 2**20:.0f} MiB) onto every device of the "
+                f"mesh; for windows of this size consider the "
+                f"node-partitioned "
+                f"repro.distributed.streaming_shard.DistributedStreaming"
+                f"Engine (DESIGN.md §12), which shards the window itself.",
+                stacklevel=3)
+            self._warned_replicated_index = True
 
     def _finish_sample(self, res, t0: float) -> float:
         """Shared stats tail of every sample_walks* entry point: sync,
@@ -271,14 +317,18 @@ class StreamingEngine:
                 on_batch(self, res)
         return self.stats
 
-    def replay_device(self, batches: Iterable, wcfg: WalkConfig):
+    def replay_device(self, batches: Iterable, wcfg: WalkConfig,
+                      return_walks: bool = False):
         """Device-resident driver: one `lax.scan` over all batches, one
-        host sync at the end. Returns (ReplayStats on host, wall seconds).
+        host sync at the end. Returns (ReplayStats on host, wall seconds),
+        or (stats, final-batch WalkResult, seconds) with ``return_walks``
+        — the reference trajectory the sharded replay
+        (DistributedStreamingEngine) is tested bit-identical against.
         """
         stacked = stack_batches(batches, self.batch_capacity)
         self.key, sub = jax.random.split(self.key)
         t0 = time.perf_counter()
-        self.state, stats = replay_scan(
+        self.state, stats, walks = replay_scan(
             self.state, stacked, sub, self.cfg.window.node_capacity,
             wcfg, self.cfg.sampler, self.cfg.scheduler)
         jax.block_until_ready(stats)           # the single sync point
@@ -286,4 +336,11 @@ class StreamingEngine:
         # NOTE: self.stats is left untouched — StreamStats' lists are
         # parallel per host-loop batch, and this driver has no per-batch
         # host timings to pair with. Everything lives in the return value.
-        return ReplayStats(*(np.asarray(a) for a in stats)), elapsed
+        host_stats = ReplayStats(*(np.asarray(a) for a in stats))
+        if return_walks:
+            host_walks = WalkResult(nodes=np.asarray(walks.nodes),
+                                    times=np.asarray(walks.times),
+                                    lengths=np.asarray(walks.lengths),
+                                    stats=None)
+            return host_stats, host_walks, elapsed
+        return host_stats, elapsed

@@ -36,7 +36,9 @@ Steady-state callers reuse the output buffers via
 ``generate_walks_donated`` (walk arrays donated back into the jit,
 DESIGN.md §10), and ``repro.distributed.walks.generate_walks_sharded``
 shards the walk axis across devices (walks are embarrassingly parallel;
-the index is replicated).
+the index is replicated). When the window itself no longer fits one
+device, ``repro.distributed.streaming_shard`` shards the window and
+migrates walks between owners instead (DESIGN.md §12).
 
 **Per-lane sampler parameters** (``LaneParams`` / ``generate_walk_lanes``,
 DESIGN.md §11): the serving coalescer packs many heterogeneous queries

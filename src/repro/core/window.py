@@ -29,6 +29,12 @@ edge capacity per batch. Callers must treat the passed-in state as consumed
 Everything is static-shape: the store is capacity-padded; on overflow the
 *oldest* edges are dropped (the window semantics make this the only
 reasonable degradation) and the event is counted in ``overflow_drops``.
+
+The unjitted ``ingest_impl`` body is shard-reusable: the node-partitioned
+sliding window (repro/distributed/streaming_shard.py, DESIGN.md §12) runs
+it per shard under ``shard_map`` against each shard's slice of the store,
+passing the globally agreed ``watermark`` so eviction stays causally
+consistent across shards.
 """
 from __future__ import annotations
 
@@ -71,13 +77,21 @@ def init_window(edge_capacity: int, node_capacity: int, window: int,
 # ---------------------------------------------------------------------------
 
 
-def _prepare_runs(state: WindowState, batch: EdgeBatch, node_capacity: int):
+def _prepare_runs(state: WindowState, batch: EdgeBatch, node_capacity: int,
+                  watermark=None):
     """Return the two ts-sorted runs to merge plus bookkeeping scalars.
 
     Run S: the surviving store suffix, compacted to the front of length-E
     arrays (TS_PAD / virtual-node padding beyond ``keep_n``).
     Run B: the kept batch edges, ts-sorted and compacted to the front of
     length-B arrays (TS_PAD padding beyond ``bn``).
+
+    ``watermark`` (optional int32 scalar) is an externally agreed lower
+    bound on the new ``t_now``. A node-partitioned window (DESIGN.md §12)
+    passes the max batch timestamp *across all shards* here so every shard
+    evicts against the same cutoff t − Δ even when the locally received
+    batch slice is older than the global maximum — the eviction watermark
+    protocol that keeps sharded windows causally consistent.
     """
     store = state.index.store
     E = store.capacity
@@ -95,6 +109,8 @@ def _prepare_runs(state: WindowState, batch: EdgeBatch, node_capacity: int):
     last = jnp.where(batch.count > 0,
                      bts[jnp.clip(batch.count - 1, 0, B - 1)], -TS_PAD)
     t_now = jnp.maximum(state.t_now, last)
+    if watermark is not None:
+        t_now = jnp.maximum(t_now, watermark)
     cutoff = t_now - state.window
 
     # (3) late drops in the batch
@@ -156,9 +172,14 @@ def _finalize(state: WindowState, merged, keep_n, bn, t_now, late,
 
 
 def ingest_impl(state: WindowState, batch: EdgeBatch, node_capacity: int,
-                bias_scale: float = 1.0) -> WindowState:
-    """Merge-based window advance (unjitted body; see ``ingest``)."""
-    run_s, run_b, t_now, late = _prepare_runs(state, batch, node_capacity)
+                bias_scale: float = 1.0, watermark=None) -> WindowState:
+    """Merge-based window advance (unjitted body; see ``ingest``).
+
+    ``watermark`` is the sharded-window eviction hook (see
+    ``_prepare_runs``); single-device callers leave it ``None``.
+    """
+    run_s, run_b, t_now, late = _prepare_runs(state, batch, node_capacity,
+                                              watermark=watermark)
     ssrc, sdst, sts, keep_n = run_s
     bsrc, bdst, bts, bn = run_b
     E = sts.shape[0]

@@ -1,0 +1,499 @@
+"""Node-partitioned sliding window: distributed streaming ingest + walks
+(DESIGN.md §12).
+
+``core/distributed.py`` shards the *static* edge store across devices and
+migrates walks between owners; every streaming path so far (`ingest`,
+`replay_scan`, `StreamingEngine`) still lives on one device, and
+``sample_walks_sharded`` shards only the walk axis over a *replicated*
+index. This module makes the **window itself** sharded, so both ingestion
+capacity and walk throughput scale with device count — the regime where an
+81B-edge window exceeds one chip's HBM:
+
+* **Ownership** — nodes are range-partitioned, ``owner(v) = v //
+  range_size`` with ``range_size = ceil(node_capacity / D)`` (the same rule
+  as ``core/distributed.py``); shard d holds the merge-sorted window slice
+  of edges whose *source* it owns, so Γ_t(v) is always served locally.
+* **Sharded ingest** — each shard takes a 1/D slice of the incoming batch,
+  buckets it by edge-source owner, and one ``all_to_all``
+  (``exchange_by_owner``) delivers every edge to its owner. The owner
+  compacts its received edges to a ts-sorted prefix and runs the
+  single-device rank-based two-run merge (``window.ingest_impl``) locally.
+* **Watermark agreement** — eviction must be causally consistent: the new
+  ``t`` is the max batch timestamp across *all* shards (one ``pmax``
+  before the exchange), passed to ``ingest_impl`` through its ``watermark``
+  hook so every shard evicts against the same cutoff t − Δ even when its
+  local batch slice is old.
+* **Sharded walks** — per batch, walks start on their start node's owner
+  and migrate every hop (``hop_resident`` + ``exchange_by_owner``) against
+  the freshly ingested shard-local dual indexes. Hop draws are the
+  streaming engine's own: ``uniform(fold_in(walk_key, step), (W,))``
+  indexed by walk id — a pure function of (walk, step), independent of
+  placement — so for ``SamplerConfig.mode="index"`` the replay is
+  **bit-identical to the single-device ``StreamingEngine.replay_device``**
+  for identical keys at any shard count (tested at 1/2/8 in
+  tests/test_streaming_shard.py). ``mode="weight"`` runs but is only
+  numerically (not bit-) equivalent: its prefix-sum arrays accumulate in a
+  different float order per shard.
+* **Trace handling** — unlike ``core/distributed.py`` (which migrates each
+  walk's full trace every hop), each shard scatters the hops it executes
+  into a resident ``[W, L+1]`` walk-order buffer; one ``psum`` at the end
+  reassembles the global result (every cell is written by at most one
+  shard). Migration payload shrinks from O(L) to 3 ints per walk, at the
+  cost of an O(W·L) buffer per shard.
+
+All capacities are static (``ShardConfig``): exchange buckets, resident
+walk slots, and walk-migration buckets drop on overflow and count the
+event per shard — provisioning knobs exactly like the paper's walk-array
+capacity.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    ShardConfig,
+    WalkConfig,
+)
+from repro.core.distributed import (
+    exchange_by_owner,
+    hop_resident,
+    owner_range_size,
+)
+from repro.core.edge_store import TS_PAD, EdgeBatch, stack_batches
+from repro.core.streaming import ReplayStats
+from repro.core.walk_engine import NODE_PAD, WalkResult
+from repro.core.window import WindowState, ingest_impl, init_window
+
+WINDOW_AXIS = "window_shards"
+
+
+class ShardedWindowState(NamedTuple):
+    """Per-shard window slices, stacked on a leading [D] device axis.
+
+    ``window`` holds one ``WindowState`` per shard (its counters are
+    shard-local: summed over shards, ``late_drops``/``overflow_drops``
+    equal the single-device window's, and ``ingested`` counts edges
+    *delivered* — it lags the global count by ``exchange_drops``).
+    """
+
+    window: WindowState          # leaves [D, ...]
+    exchange_drops: jax.Array    # int32[D] cumulative ingest-exchange drops
+
+
+class DistReplayStats(NamedTuple):
+    """Distributed replay statistics.
+
+    ``replay`` carries the global per-batch trajectory in the same layout
+    as the single-device ``ReplayStats`` — bit-comparable field by field
+    when no shard dropped anything. The drop counters are per-batch,
+    per-shard [K, D] (senders count their own exchange overflow).
+    """
+
+    replay: ReplayStats
+    exchange_drops: jax.Array    # int32[K, D] batch-edge exchange overflow
+    walk_drops: jax.Array        # int32[K, D] walk migration + slot overflow
+
+
+def window_mesh(num_shards: int = 0, devices=None,
+                axis_name: str = WINDOW_AXIS) -> Mesh:
+    """1-D mesh over the first ``num_shards`` (default: all) devices."""
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    if num_shards:
+        if num_shards > devs.size:
+            raise ValueError(f"{num_shards} shards > {devs.size} devices")
+        devs = devs[:num_shards]
+    return Mesh(devs, (axis_name,))
+
+
+def init_sharded_window(num_shards: int, edge_capacity_per_shard: int,
+                        node_capacity: int, window: int,
+                        bias_scale: float = 1.0,
+                        mesh: Optional[Mesh] = None,
+                        axis_name: str = WINDOW_AXIS) -> ShardedWindowState:
+    """D empty per-shard windows; placed onto the mesh when given."""
+    one = init_window(edge_capacity_per_shard, node_capacity, window,
+                      bias_scale)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (num_shards,) + x.shape), one)
+    state = ShardedWindowState(
+        window=stacked,
+        exchange_drops=jnp.zeros((num_shards,), jnp.int32))
+    if mesh is not None:
+        state = jax.device_put(state, NamedSharding(mesh, P(axis_name)))
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Per-shard bodies (run under shard_map; all arrays are local views)
+# ---------------------------------------------------------------------------
+
+
+def _shard_ingest(wstate: WindowState, bsrc, bdst, bts, bvalid, *, axis: str,
+                  num_shards: int, range_size: int, exchange_capacity: int,
+                  node_capacity: int, bias_scale: float):
+    """One shard's window advance for its slice of the incoming batch.
+
+    batch slice → owner buckets → all_to_all → compact → local merge, with
+    the eviction watermark agreed across shards *before* the exchange (so
+    it reflects every arriving edge, even one a full bucket drops).
+    """
+    # (1) watermark agreement: global max batch timestamp
+    local_max = jnp.max(jnp.where(bvalid, bts, -TS_PAD))
+    watermark = jax.lax.pmax(local_max, axis)
+
+    # (2) bucket by edge-source owner, one all_to_all
+    owner = jnp.clip(bsrc // range_size, 0, num_shards - 1)
+    (r_src, r_dst, r_ts), _, x_drop = exchange_by_owner(
+        axis, num_shards, exchange_capacity, owner, bvalid,
+        (bsrc, bdst, bts), (0, 0, TS_PAD))
+
+    # (3) compact received edges to a ts-sorted prefix. Empty exchange
+    # slots carry TS_PAD, so one stable ts-argsort both drops them to the
+    # back and pre-sorts the run; ties keep (sender, sender-position) ==
+    # global batch order, matching the single-device stable batch sort.
+    order = jnp.argsort(r_ts).astype(jnp.int32)
+    cnt = jnp.sum((r_ts != TS_PAD).astype(jnp.int32))
+    local_batch = EdgeBatch(src=r_src[order], dst=r_dst[order],
+                            ts=r_ts[order], count=cnt)
+
+    # (4) the single-device rank-based two-run merge, shard-locally,
+    # evicting against the agreed watermark
+    new = ingest_impl(wstate, local_batch, node_capacity, bias_scale,
+                      watermark=watermark)
+    return new, x_drop
+
+
+def _shard_walks(idx, walk_key: jax.Array, wcfg: WalkConfig,
+                 scfg: SamplerConfig, *, axis: str, num_shards: int,
+                 range_size: int, walk_slots: int,
+                 walk_bucket_capacity: int):
+    """One batch's walks over the sharded window (start_mode="all_nodes").
+
+    Returns this shard's trace contributions (walk-order [W, L+1] arrays,
+    NODE_PAD where this shard executed no hop), its [W] length
+    contributions, and its drop count. ``psum`` across shards reassembles
+    the exact single-device WalkResult.
+    """
+    W, L = wcfg.num_walks, wcfg.max_length
+    nc = idx.node_capacity
+    Ws = walk_slots
+    shard_id = jax.lax.axis_index(axis)
+
+    # global t_floor: min in-window timestamp across shards, minus one
+    # (empty shards report TS_PAD via their padded store)
+    any_edges = jax.lax.pmax(idx.num_edges, axis) > 0
+    global_min = jax.lax.pmin(idx.store.ts[0], axis)
+    t_floor = jnp.where(any_edges, global_min - 1, 0)
+
+    # place walk w (start node w % nc) on its start node's owner
+    w_all = jnp.arange(W, dtype=jnp.int32)
+    v_all = (w_all % nc).astype(jnp.int32)
+    mine = (v_all // range_size) == shard_id
+    rankm = jnp.cumsum(mine.astype(jnp.int32)) - 1
+    wid = jnp.full((Ws,), -1, jnp.int32).at[
+        jnp.where(mine, rankm, Ws)].set(w_all, mode="drop")
+    start_drop = jnp.maximum(jnp.sum(mine.astype(jnp.int32)) - Ws, 0)
+    node = jnp.where(wid >= 0, wid % nc, 0).astype(jnp.int32)
+    vc = jnp.clip(node, 0, nc - 1)
+    deg = idx.node_starts[vc + 1] - idx.node_starts[vc]
+    alive = (wid >= 0) & (deg > 0)
+    cur_time = jnp.full((Ws,), 1, jnp.int32) * t_floor
+
+    # walk-order trace contributions; every cell this shard writes is PAD
+    # on all other shards, so psum(x - PAD) + PAD reassembles the result
+    tn = jnp.full((W, L + 1), NODE_PAD, jnp.int32)
+    tt = jnp.full((W, L + 1), NODE_PAD, jnp.int32)
+    ln = jnp.zeros((W,), jnp.int32)
+    row0 = jnp.where(alive, wid, W)
+    tn = tn.at[row0, 0].set(node, mode="drop")
+    tt = tt.at[row0, 0].set(cur_time, mode="drop")
+    ln = ln.at[row0].add(1, mode="drop")
+
+    def record_hop(wid, node, cur_time, alive, tn, tt, ln, step):
+        # the streaming engine's hop draw: one walk-order [W] vector per
+        # step, indexed by walk id — placement-independent bits
+        u_full = jax.random.uniform(jax.random.fold_in(walk_key, step), (W,))
+        u = u_full[jnp.clip(wid, 0, W - 1)]
+        nn, nt, has = hop_resident(idx, scfg, node, cur_time, alive, u)
+        row = jnp.where(has, wid, W)
+        tn = tn.at[row, step + 1].set(nn, mode="drop")
+        tt = tt.at[row, step + 1].set(nt, mode="drop")
+        ln = ln.at[row].add(1, mode="drop")
+        return nn, nt, has, tn, tt, ln
+
+    def hop(carry, step):
+        wid, node, cur_time, alive, tn, tt, ln, dropped = carry
+        nn, nt, has, tn, tt, ln = record_hop(wid, node, cur_time, alive,
+                                             tn, tt, ln, step)
+
+        # migrate surviving walks to their new owner (dead walks just free
+        # their slot: the trace already lives in the resident buffers)
+        owner = jnp.clip(nn // range_size, 0, num_shards - 1)
+        (r_wid, r_node, r_time), _, n_drop = exchange_by_owner(
+            axis, num_shards, walk_bucket_capacity, owner, has,
+            (wid, nn, nt), (-1, 0, 0))
+
+        inc_valid = r_wid >= 0
+        dest = jnp.where(inc_valid,
+                         jnp.cumsum(inc_valid.astype(jnp.int32)) - 1, Ws)
+        recv_drop = jnp.sum(inc_valid & (dest >= Ws))
+        wid = jnp.full((Ws,), -1, jnp.int32).at[dest].set(r_wid, mode="drop")
+        node = jnp.zeros((Ws,), jnp.int32).at[dest].set(r_node, mode="drop")
+        cur_time = jnp.zeros((Ws,), jnp.int32).at[dest].set(r_time,
+                                                            mode="drop")
+        alive = jnp.zeros((Ws,), bool).at[dest].set(inc_valid, mode="drop")
+        return (wid, node, cur_time, alive, tn, tt, ln,
+                dropped + n_drop + recv_drop), None
+
+    # L-1 migrating hops under the scan, then one record-only final hop:
+    # the last hop's migration would place walks nobody ever advances, so
+    # skipping it saves one all_to_all per batch without touching the
+    # traces (and therefore the bit-identity guarantee)
+    carry0 = (wid, node, cur_time, alive, tn, tt, ln,
+              jnp.asarray(0, jnp.int32))
+    (wid, node, cur_time, alive, tn, tt, ln, dropped), _ = jax.lax.scan(
+        hop, carry0, jnp.arange(max(L - 1, 0), dtype=jnp.int32))
+    if L >= 1:
+        _, _, _, tn, tt, ln = record_hop(
+            wid, node, cur_time, alive, tn, tt, ln,
+            jnp.asarray(L - 1, jnp.int32))
+    return tn, tt, ln, dropped + start_drop
+
+
+# ---------------------------------------------------------------------------
+# Standalone sharded ingest: advance the window by one batch (no walks)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit,
+         static_argnames=("mesh", "axis_name", "node_capacity", "shard_cfg",
+                          "bias_scale"),
+         donate_argnums=(0,))
+def ingest_sharded(state: ShardedWindowState, bsrc, bdst, bts, count, *,
+                   mesh: Mesh, axis_name: str, node_capacity: int,
+                   shard_cfg: ShardConfig, bias_scale: float = 1.0
+                   ) -> ShardedWindowState:
+    """Advance the sharded window by one batch (``bsrc/bdst/bts`` are
+    [D, Bd], the batch axis pre-split per shard; ``count`` the global valid
+    prefix length). The shard_map'd single-batch twin of the replay's
+    ingest stage, donating the old state."""
+    D = mesh.devices.size
+    range_size = owner_range_size(node_capacity, D)
+
+    def shard_fn(state, bsrc, bdst, bts, count):
+        wstate = jax.tree.map(lambda a: a[0], state.window)
+        Bd = bsrc.shape[-1]
+        gpos = jax.lax.axis_index(axis_name) * Bd + jnp.arange(
+            Bd, dtype=jnp.int32)
+        new, x_drop = _shard_ingest(
+            wstate, bsrc[0], bdst[0], bts[0], gpos < count, axis=axis_name,
+            num_shards=D, range_size=range_size,
+            exchange_capacity=shard_cfg.exchange_capacity,
+            node_capacity=node_capacity, bias_scale=bias_scale)
+        return ShardedWindowState(
+            window=jax.tree.map(lambda a: a[None], new),
+            exchange_drops=(state.exchange_drops[0] + x_drop)[None])
+
+    sharded = P(axis_name)
+    state_spec = ShardedWindowState(
+        window=jax.tree.map(lambda _: sharded, state.window),
+        exchange_drops=sharded)
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(state_spec, sharded, sharded, sharded, P()),
+                   out_specs=state_spec, check_rep=False)
+    return fn(state, bsrc, bdst, bts, count)
+
+
+# ---------------------------------------------------------------------------
+# Fused sharded replay: one shard_map'd lax.scan over all batches
+# ---------------------------------------------------------------------------
+
+
+def _check_supported(wcfg: WalkConfig, scfg: SamplerConfig) -> None:
+    if wcfg.start_mode != "all_nodes":
+        raise ValueError(
+            "sharded streaming walks require start_mode='all_nodes' (start "
+            "placement must be owner-computable without global state; got "
+            f"{wcfg.start_mode!r})")
+    if scfg.node2vec_p != 1.0 or scfg.node2vec_q != 1.0:
+        raise ValueError(
+            "sharded streaming walks do not support node2vec second-order "
+            "bias (the β probe needs the previous node's adjacency, which "
+            "lives on a different shard)")
+
+
+@partial(jax.jit,
+         static_argnames=("axis_name", "node_capacity", "wcfg", "scfg",
+                          "shard_cfg", "bias_scale", "mesh"),
+         donate_argnums=(0,))
+def _replay_scan_sharded(state: ShardedWindowState, bsrc, bdst, bts, bcount,
+                         key, *, mesh: Mesh, axis_name: str,
+                         node_capacity: int, wcfg: WalkConfig,
+                         scfg: SamplerConfig, shard_cfg: ShardConfig,
+                         bias_scale: float = 1.0):
+    """Replay K stacked batches over the sharded window, fully on device.
+
+    ``bsrc/bdst/bts`` are [K, D, Bd] (the batch axis pre-split per shard),
+    ``bcount`` [K]. Returns (new state, per-batch stat leaves, final-batch
+    walk leaves); everything carries a leading [D] axis — psum'd leaves are
+    replicated so callers read row 0.
+    """
+    D = mesh.devices.size
+    range_size = owner_range_size(node_capacity, D)
+
+    def shard_fn(state, bsrc, bdst, bts, bcount, key):
+        wstate = jax.tree.map(lambda a: a[0], state.window)
+        xdrops = state.exchange_drops[0]
+        lsrc, ldst, lts = bsrc[:, 0], bdst[:, 0], bts[:, 0]   # [K, Bd]
+        Bd = lsrc.shape[-1]
+        shard_id = jax.lax.axis_index(axis_name)
+        # local slice covers global batch positions [shard_id*Bd, ...+Bd)
+        gpos = shard_id * Bd + jnp.arange(Bd, dtype=jnp.int32)
+
+        def batch_step(carry, xs):
+            wstate, xdrops, k = carry
+            src, dst, ts, cnt = xs
+            k, sub = jax.random.split(k)
+            wstate, x_drop = _shard_ingest(
+                wstate, src, dst, ts, gpos < cnt, axis=axis_name,
+                num_shards=D, range_size=range_size,
+                exchange_capacity=shard_cfg.exchange_capacity,
+                node_capacity=node_capacity, bias_scale=bias_scale)
+
+            # same key chain as the single-device replay_scan
+            _, walk_key = jax.random.split(sub)
+            tn, tt, ln, w_drop = _shard_walks(
+                wstate.index, walk_key, wcfg, scfg, axis=axis_name,
+                num_shards=D, range_size=range_size,
+                walk_slots=shard_cfg.walk_slots,
+                walk_bucket_capacity=shard_cfg.walk_bucket_capacity)
+
+            lengths = jax.lax.psum(ln, axis_name)
+            stats = ReplayStats(
+                edges_active=jax.lax.psum(wstate.index.num_edges, axis_name),
+                t_now=wstate.t_now,      # watermark-agreed: replicated
+                ingested=jax.lax.psum(wstate.ingested, axis_name),
+                late_drops=jax.lax.psum(wstate.late_drops, axis_name),
+                overflow_drops=jax.lax.psum(wstate.overflow_drops,
+                                            axis_name),
+                mean_len=jnp.mean(lengths.astype(jnp.float32)),
+            )
+            return ((wstate, xdrops + x_drop, k),
+                    (stats, x_drop, w_drop, tn, tt, ln))
+
+        (wstate, xdrops, _), (stats, x_drops, w_drops, tns, tts, lns) = \
+            jax.lax.scan(batch_step, (wstate, xdrops, key),
+                         (lsrc, ldst, lts, bcount))
+
+        # reassemble the final batch's walks (each cell written by ≤ 1
+        # shard; contributions are PAD elsewhere)
+        tn, tt, ln = tns[-1], tts[-1], lns[-1]
+        nodes = NODE_PAD + jax.lax.psum(tn - NODE_PAD, axis_name)
+        times = NODE_PAD + jax.lax.psum(tt - NODE_PAD, axis_name)
+        lengths = jax.lax.psum(ln, axis_name)
+
+        new_state = ShardedWindowState(
+            window=jax.tree.map(lambda a: a[None], wstate),
+            exchange_drops=xdrops[None])
+        expand = lambda a: a[None]
+        return (new_state, jax.tree.map(expand, stats), x_drops[None],
+                w_drops[None], expand(nodes), expand(times), expand(lengths))
+
+    sharded = P(axis_name)
+    state_spec = ShardedWindowState(
+        window=jax.tree.map(lambda _: sharded, state.window),
+        exchange_drops=sharded)
+    stats_spec = ReplayStats(*([sharded] * len(ReplayStats._fields)))
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(state_spec, P(None, axis_name), P(None, axis_name),
+                  P(None, axis_name), P(), P()),
+        out_specs=(state_spec, stats_spec, sharded, sharded, sharded,
+                   sharded, sharded),
+        check_rep=False)
+    return fn(state, bsrc, bdst, bts, bcount, key)
+
+
+class DistributedStreamingEngine:
+    """Streaming ingest → rebuild → walk over a node-partitioned window.
+
+    The distributed counterpart of ``StreamingEngine.replay_device``: the
+    window lives sharded across ``mesh`` (per-shard capacity
+    ``cfg.shard.edge_capacity_per_shard``, so total window capacity scales
+    with device count), batches ingest through one all_to_all per batch,
+    and walks migrate between owners per hop. For
+    ``SamplerConfig.mode="index"`` the replay is bit-identical to the
+    single-device engine for identical keys (any shard count, provided no
+    capacity drops — check ``DistReplayStats``); per-hop grouping does not
+    apply (the migration layout is its own schedule), which changes nothing
+    observable since every scheduler path emits identical walks.
+    """
+
+    def __init__(self, cfg: EngineConfig, batch_capacity: int, *,
+                 mesh: Optional[Mesh] = None, num_shards: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh if mesh is not None else window_mesh(
+            num_shards or cfg.shard.num_shards)
+        self.axis_name = self.mesh.axis_names[0]
+        D = self.mesh.devices.size
+        self.num_shards = D
+        # per-shard batch slice: round the capacity up to a D multiple
+        self.batch_slice = -(-batch_capacity // D)
+        self.batch_capacity = self.batch_slice * D
+        self.state = init_sharded_window(
+            D, cfg.shard.edge_capacity_per_shard, cfg.window.node_capacity,
+            int(cfg.window.duration), mesh=self.mesh,
+            axis_name=self.axis_name)
+        self.key = jax.random.PRNGKey(cfg.seed)
+
+    def ingest_batch(self, src, dst, ts) -> None:
+        """Advance the sharded window by one batch (no walks) — the
+        distributed twin of ``StreamingEngine.ingest_batch``."""
+        from repro.core.edge_store import make_batch
+        batch = make_batch(src, dst, ts, capacity=self.batch_capacity)
+        split = lambda a: a.reshape(self.num_shards, self.batch_slice)
+        self.state = ingest_sharded(
+            self.state, split(batch.src), split(batch.dst), split(batch.ts),
+            batch.count, mesh=self.mesh, axis_name=self.axis_name,
+            node_capacity=self.cfg.window.node_capacity,
+            shard_cfg=self.cfg.shard)
+
+    def replay_device(self, batches, wcfg: WalkConfig):
+        """One shard_map'd ``lax.scan`` over all batches; a single host
+        sync at the end. Returns (DistReplayStats, final-batch WalkResult,
+        wall seconds)."""
+        _check_supported(wcfg, self.cfg.sampler)
+        stacked = stack_batches(batches, self.batch_capacity)
+        K = stacked.src.shape[0]
+        split = lambda a: a.reshape(K, self.num_shards, self.batch_slice)
+        self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
+        (self.state, stats, x_drops, w_drops, nodes, times, lengths) = \
+            _replay_scan_sharded(
+                self.state, split(stacked.src), split(stacked.dst),
+                split(stacked.ts), stacked.count, sub, mesh=self.mesh,
+                axis_name=self.axis_name,
+                node_capacity=self.cfg.window.node_capacity, wcfg=wcfg,
+                scfg=self.cfg.sampler, shard_cfg=self.cfg.shard)
+        jax.block_until_ready(lengths)          # the single sync point
+        elapsed = time.perf_counter() - t0
+        replay = ReplayStats(*(np.asarray(a)[0] for a in stats))
+        dstats = DistReplayStats(
+            replay=replay,
+            exchange_drops=np.asarray(x_drops).T,     # [D, K] -> [K, D]
+            walk_drops=np.asarray(w_drops).T,
+        )
+        walks = WalkResult(nodes=np.asarray(nodes)[0],
+                           times=np.asarray(times)[0],
+                           lengths=np.asarray(lengths)[0], stats=None)
+        return dstats, walks, elapsed

@@ -135,12 +135,13 @@ def test_replay_scan_stats_on_device_until_read():
     eng = _engine(num_nodes=64, edge_capacity=2048)
     stacked = stack_batches(chronological_batches(g, 4), 1024)
     wcfg = WalkConfig(num_walks=64, max_length=4, start_mode="nodes")
-    state, stats = replay_scan(
+    state, stats, walks = replay_scan(
         eng.state, stacked, jax.random.PRNGKey(0),
         eng.cfg.window.node_capacity, wcfg, eng.cfg.sampler,
         eng.cfg.scheduler)
-    for leaf in jax.tree_util.tree_leaves((state, stats)):
+    for leaf in jax.tree_util.tree_leaves((state, stats, walks)):
         assert isinstance(leaf, jax.Array)
+    assert walks.nodes.shape == (64, 5)
     jax.block_until_ready(stats)
     assert int(stats.ingested[-1]) == 2000
 

@@ -1,0 +1,224 @@
+"""Node-partitioned sliding window (repro.distributed.streaming_shard,
+DESIGN.md §12).
+
+The multi-shard cases run in a subprocess with 8 forced host devices
+(device count must be set before jax initializes); the single-shard case
+runs in-process and checks the full exchange/merge/migration path plus
+byte-identity against the single-device reference on one real device.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    ShardConfig,
+    WalkConfig,
+    WindowConfig,
+)
+from repro.core import streaming as streaming_mod
+from repro.core.streaming import StreamingEngine
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.distributed.streaming_shard import DistributedStreamingEngine
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs.base import (EngineConfig, SamplerConfig, SchedulerConfig,
+                                ShardConfig, WalkConfig, WindowConfig)
+from repro.core.streaming import StreamingEngine
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.distributed.streaming_shard import DistributedStreamingEngine
+
+N = 128
+g = powerlaw_temporal_graph(N, 3000, seed=7)
+cfg = EngineConfig(
+    window=WindowConfig(duration=3000, edge_capacity=4096, node_capacity=N),
+    sampler=SamplerConfig(bias="exponential", mode="index"),
+    scheduler=SchedulerConfig(path="grouped", regroup="bucket"),
+    shard=ShardConfig(edge_capacity_per_shard=4096, exchange_capacity=1024,
+                      walk_slots=512, walk_bucket_capacity=512),
+)
+wcfg = WalkConfig(num_walks=256, max_length=8, start_mode="all_nodes")
+
+ref = StreamingEngine(cfg, batch_capacity=1024)
+rstats, rwalks, _ = ref.replay_device(chronological_batches(g, 5), wcfg,
+                                      return_walks=True)
+
+# --- byte-identity across shard counts {1, 2, 8} -------------------------
+for D in (1, 2, 8):
+    deng = DistributedStreamingEngine(cfg, batch_capacity=1024, num_shards=D)
+    assert deng.num_shards == D
+    dstats, dwalks, _ = deng.replay_device(chronological_batches(g, 5), wcfg)
+    assert int(dstats.exchange_drops.sum()) == 0, (D, "exchange overflow")
+    assert int(dstats.walk_drops.sum()) == 0, (D, "walk overflow")
+    assert dstats.exchange_drops.shape == (5, D)
+    for f in rstats._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rstats, f)),
+            np.asarray(getattr(dstats.replay, f)), err_msg=f"D={D} {f}")
+    np.testing.assert_array_equal(rwalks.nodes, dwalks.nodes)
+    np.testing.assert_array_equal(rwalks.times, dwalks.times)
+    np.testing.assert_array_equal(rwalks.lengths, dwalks.lengths)
+
+# --- the sharded store partitions the single-device store ----------------
+import math
+D = 8
+rng = math.ceil(N / D)
+deng = DistributedStreamingEngine(cfg, batch_capacity=1024, num_shards=D)
+deng.replay_device(chronological_batches(g, 5), wcfg)
+gstore = ref.state.index.store
+n_glob = int(gstore.num_edges)
+gsrc = np.asarray(gstore.src)[:n_glob]
+gdst = np.asarray(gstore.dst)[:n_glob]
+gts = np.asarray(gstore.ts)[:n_glob]
+for d in range(D):
+    sstore = jax.tree.map(lambda a: np.asarray(a)[d],
+                          deng.state.window.index.store)
+    n_loc = int(sstore.num_edges)
+    sel = (gsrc // rng) == d
+    assert n_loc == int(sel.sum()), (d, n_loc, int(sel.sum()))
+    np.testing.assert_array_equal(sstore.src[:n_loc], gsrc[sel])
+    np.testing.assert_array_equal(sstore.dst[:n_loc], gdst[sel])
+    np.testing.assert_array_equal(sstore.ts[:n_loc], gts[sel])
+
+# --- overflow drops are counted, not crashed -----------------------------
+tiny = EngineConfig(
+    window=cfg.window, sampler=cfg.sampler, scheduler=cfg.scheduler,
+    shard=ShardConfig(edge_capacity_per_shard=4096, exchange_capacity=8,
+                      walk_slots=512, walk_bucket_capacity=512))
+deng = DistributedStreamingEngine(tiny, batch_capacity=1024, num_shards=8)
+dstats, _, _ = deng.replay_device(chronological_batches(g, 5), wcfg)
+assert int(dstats.exchange_drops.sum()) > 0, "expected exchange overflow"
+
+tiny_w = EngineConfig(
+    window=cfg.window, sampler=cfg.sampler, scheduler=cfg.scheduler,
+    shard=ShardConfig(edge_capacity_per_shard=4096, exchange_capacity=1024,
+                      walk_slots=512, walk_bucket_capacity=2))
+deng = DistributedStreamingEngine(tiny_w, batch_capacity=1024, num_shards=8)
+dstats, _, _ = deng.replay_device(chronological_batches(g, 5), wcfg)
+assert int(dstats.walk_drops.sum()) > 0, "expected walk-bucket overflow"
+
+print("SHARDED_WINDOW_OK")
+"""
+
+
+@pytest.mark.slow      # 8-device subprocess
+def test_sharded_window_8_devices():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "SHARDED_WINDOW_OK" in out.stdout, \
+        (out.stdout[-1500:], out.stderr[-3000:])
+
+
+def _cfg(num_nodes=96):
+    return EngineConfig(
+        window=WindowConfig(duration=2500, edge_capacity=2048,
+                            node_capacity=num_nodes),
+        sampler=SamplerConfig(bias="exponential", mode="index"),
+        scheduler=SchedulerConfig(path="grouped", regroup="bucket"),
+        shard=ShardConfig(edge_capacity_per_shard=2048,
+                          exchange_capacity=512, walk_slots=256,
+                          walk_bucket_capacity=256),
+    )
+
+
+def test_single_shard_matches_replay_device():
+    """One-shard sharded replay == single-device replay_device, bit for
+    bit: same per-batch stats, same final-batch walks."""
+    cfg = _cfg()
+    g = powerlaw_temporal_graph(96, 2000, seed=13)
+    wcfg = WalkConfig(num_walks=96, max_length=6, start_mode="all_nodes")
+
+    ref = StreamingEngine(cfg, batch_capacity=512)
+    rstats, rwalks, _ = ref.replay_device(chronological_batches(g, 4), wcfg,
+                                          return_walks=True)
+
+    deng = DistributedStreamingEngine(cfg, batch_capacity=512, num_shards=1)
+    dstats, dwalks, elapsed = deng.replay_device(
+        chronological_batches(g, 4), wcfg)
+    assert elapsed > 0
+    assert int(dstats.exchange_drops.sum()) == 0
+    assert int(dstats.walk_drops.sum()) == 0
+    for f in rstats._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rstats, f)),
+            np.asarray(getattr(dstats.replay, f)), err_msg=f)
+    np.testing.assert_array_equal(rwalks.nodes, dwalks.nodes)
+    np.testing.assert_array_equal(rwalks.times, dwalks.times)
+    np.testing.assert_array_equal(rwalks.lengths, dwalks.lengths)
+
+
+def test_ingest_batch_matches_single_device_window():
+    """The standalone shard_map'd ingest advances the window exactly like
+    the single-device merge ingest (1 shard: counters + store identical)."""
+    cfg = _cfg()
+    g = powerlaw_temporal_graph(96, 1500, seed=3)
+
+    ref = StreamingEngine(cfg, batch_capacity=512)
+    deng = DistributedStreamingEngine(cfg, batch_capacity=512, num_shards=1)
+    for bs, bd, bt in chronological_batches(g, 3):
+        ref.ingest_batch(bs, bd, bt)
+        deng.ingest_batch(bs, bd, bt)
+
+    rs = ref.state
+    ds = jax.tree.map(lambda a: np.asarray(a)[0], deng.state.window)
+    assert int(ds.t_now) == int(rs.t_now)
+    assert int(ds.ingested) == int(rs.ingested)
+    assert int(ds.late_drops) == int(rs.late_drops)
+    assert int(ds.overflow_drops) == int(rs.overflow_drops)
+    n = int(rs.index.store.num_edges)
+    assert int(ds.index.store.num_edges) == n
+    np.testing.assert_array_equal(ds.index.store.src[:n],
+                                  np.asarray(rs.index.store.src)[:n])
+    np.testing.assert_array_equal(ds.index.store.ts[:n],
+                                  np.asarray(rs.index.store.ts)[:n])
+    assert int(np.asarray(deng.state.exchange_drops).sum()) == 0
+
+
+def test_unsupported_modes_raise():
+    cfg = _cfg()
+    deng = DistributedStreamingEngine(cfg, batch_capacity=512, num_shards=1)
+    g = powerlaw_temporal_graph(96, 500, seed=1)
+    with pytest.raises(ValueError, match="all_nodes"):
+        deng.replay_device(chronological_batches(g, 2),
+                           WalkConfig(num_walks=32, max_length=4,
+                                      start_mode="nodes"))
+    n2v = EngineConfig(
+        window=cfg.window, scheduler=cfg.scheduler, shard=cfg.shard,
+        sampler=SamplerConfig(bias="exponential", mode="index",
+                              node2vec_p=0.5, node2vec_q=2.0))
+    deng2 = DistributedStreamingEngine(n2v, batch_capacity=512, num_shards=1)
+    with pytest.raises(ValueError, match="node2vec"):
+        deng2.replay_device(chronological_batches(g, 2),
+                            WalkConfig(num_walks=32, max_length=4,
+                                       start_mode="all_nodes"))
+
+
+def test_replicated_index_warning(monkeypatch):
+    """sample_walks_sharded warns once when the replicated index passes the
+    size threshold, pointing at the node-partitioned engine."""
+    cfg = _cfg()
+    eng = StreamingEngine(cfg, batch_capacity=512)
+    g = powerlaw_temporal_graph(96, 500, seed=2)
+    for bs, bd, bt in chronological_batches(g, 1):
+        eng.ingest_batch(bs, bd, bt)
+    wcfg = WalkConfig(num_walks=64, max_length=4, start_mode="nodes")
+    monkeypatch.setattr(streaming_mod, "REPLICATED_INDEX_WARN_BYTES", 0)
+    with pytest.warns(UserWarning, match="DistributedStreamingEngine"):
+        eng.sample_walks_sharded(wcfg)
+    # one-time: a second call stays silent
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        eng.sample_walks_sharded(wcfg)
