@@ -40,9 +40,12 @@ SUITES = [
      "window duration sweep: active edges, drops, per-batch cost"),
     ("fig11_memory_usage", "memory_usage", "Fig. 11",
      "device bytes across a stream (exactly constant) + accounting"),
-    ("serving_load", "serving_load", "— (§11)",
+    ("serving_load", "serving_load", "— (§11, §13)",
      "open-loop Poisson serving: mixed-bias queries through the "
-     "coalescer; p50/p99 latency + walks/s vs offered load"),
+     "coalescer; p50/p99 latency + walks/s vs offered load; plus the "
+     "sharded-service drain-throughput sweep vs shard count "
+     "(--shards; needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+     "for multi-shard rows on CPU)"),
 ]
 
 

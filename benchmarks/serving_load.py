@@ -12,6 +12,12 @@ Per offered load this reports p50/p99 submit→complete latency, walks/s,
 drop counts (backpressure + oversize), and lane occupancy (coalescing
 efficiency: live lanes over dispatched lanes).
 
+A second sweep (``run_sharded`` / ``--shards``) drives the same mixed
+workload through the node-partitioned service (DESIGN.md §13) at every
+shard count the host exposes — drain throughput, latency, and overflow
+drops per shard count. On a CPU-only host, fake devices first:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 CPU wall-clock caveats of DESIGN.md §9 apply; the relative shape —
 latency flat until the knee, then queueing blow-up and backpressure
 drops — is the claim, not the absolute numbers.
@@ -28,6 +34,7 @@ from repro.configs.base import (
     SamplerConfig,
     SchedulerConfig,
     ServeConfig,
+    ShardConfig,
     WindowConfig,
 )
 from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
@@ -72,6 +79,58 @@ def _drive_open_loop(svc: WalkService, queries, arrivals_s):
         elif i < n:
             time.sleep(min(max(arrivals_s[i] - now, 0.0), 5e-4))
     return time.perf_counter() - t0
+
+
+def run_sharded(shard_counts=None, n_queries=120, num_nodes=1024,
+                num_edges=40_000, seed=29):
+    """Drain throughput of the sharded service vs shard count.
+
+    Closed-loop on purpose (submit everything, then drain): this sweep
+    measures the sharded dispatch path itself — owner-claimed starts,
+    per-hop migration, psum reassembly — not queueing, which the
+    open-loop sweep above already characterizes.
+    """
+    import jax
+    devs = len(jax.devices())
+    counts = shard_counts or [d for d in (1, 2, 4, 8) if d <= devs]
+    g = powerlaw_temporal_graph(num_nodes, num_edges, seed=seed)
+    cfg = EngineConfig(
+        window=WindowConfig(duration=6000, edge_capacity=1 << 16,
+                            node_capacity=num_nodes),
+        sampler=SamplerConfig(mode="index"),
+        scheduler=SchedulerConfig(path="grouped"),
+        # exchange provisioning mirrors fig7 (DESIGN.md §12): at D=1 one
+        # sender may route its whole batch slice to one owner
+        shard=ShardConfig(edge_capacity_per_shard=1 << 16,
+                          exchange_capacity=1 << 14,
+                          walk_slots=1 << 11,
+                          walk_bucket_capacity=1 << 10))
+    serve_cfg = ServeConfig(queue_capacity=n_queries + 8,
+                            lane_buckets=(64, 256),
+                            length_buckets=(4, 8, 16))
+    rng = np.random.default_rng(seed)
+    queries = _mixed_workload(rng, n_queries, num_nodes)
+
+    for D in counts:
+        svc = WalkService(cfg, serve_cfg, batch_capacity=num_edges // 4 + 64,
+                          num_shards=D)
+        for bs, bd, bt in chronological_batches(g, 4):
+            svc.ingest(bs, bd, bt)
+        for q in queries:                    # warm the jit cache per shape
+            svc.submit(q)
+        svc.drain()
+        svc.stats = ServeStats()
+        for q in queries:
+            svc.submit(q)
+        t0 = time.perf_counter()
+        while svc.pending_count:
+            svc.step()
+        wall = time.perf_counter() - t0
+        s = svc.stats
+        emit(f"serving/shards={D}", 1e6 * wall / max(s.batches, 1),
+             f"walks_per_s={s.walks / wall:.0f};served={s.completed};"
+             f"batches={s.batches};occupancy={s.lane_occupancy:.2f};"
+             f"shard_walk_drops={s.shard_walk_drops};wall_s={wall:.2f}")
 
 
 def run(offered_loads_qps=(100, 400, 1600), n_queries=150,
@@ -120,6 +179,18 @@ def run(offered_loads_qps=(100, 400, 1600), n_queries=150,
              f"batches={s.batches};occupancy={s.lane_occupancy:.2f};"
              f"wall_s={wall:.2f}")
 
+    run_sharded()
+
 
 if __name__ == "__main__":
-    run()
+    import sys
+    if "--shards" in sys.argv[1:]:
+        # e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        #        python -m benchmarks.serving_load --shards [1,2,8]
+        i = sys.argv.index("--shards")
+        arg = sys.argv[i + 1] if len(sys.argv) > i + 1 else ""
+        counts = ([int(x) for x in arg.strip("[]").split(",") if x]
+                  if arg and not arg.startswith("-") else None)
+        run_sharded(shard_counts=counts)
+    else:
+        run()

@@ -82,12 +82,18 @@ class ServeConfig:
     compiles at (lane bucket × length bucket × start mode), never at the
     exact query shape. Buckets must be sorted ascending; the largest lane
     bucket is the lane budget of one dispatch.
+
+    ``num_shards`` switches the service onto the node-partitioned window
+    (DESIGN.md §13): 0 serves the single replicated window; N > 0 shards
+    the window over the first N devices (lane batches migrate between
+    owners per hop; per-shard capacities come from ``ShardConfig``).
     """
 
     queue_capacity: int = 1024        # pending-query slots; beyond -> dropped
     lane_buckets: Tuple[int, ...] = (64, 256, 1024, 4096)
     length_buckets: Tuple[int, ...] = (4, 8, 16, 32, 80)
     drop_oversize: bool = True        # drop queries exceeding the largest buckets
+    num_shards: int = 0               # 0 = single replicated window
 
 
 @dataclass(frozen=True)

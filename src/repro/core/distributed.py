@@ -51,7 +51,10 @@ from repro.core.temporal_index import (
     node_range,
     temporal_cutoff,
 )
-from repro.core.samplers import pick_in_neighborhood
+from repro.core.samplers import (
+    pick_in_neighborhood,
+    pick_in_neighborhood_lanes,
+)
 from repro.core.walk_engine import NODE_PAD
 
 
@@ -140,6 +143,25 @@ def hop_resident(idx: TemporalIndex, scfg: SamplerConfig, node, time, alive,
     n = b - c
     has = alive & (n > 0)
     k = pick_in_neighborhood(idx, scfg, c, b, u, node)
+    k = jnp.clip(k, 0, idx.edge_capacity - 1)
+    return (jnp.where(has, idx.ns_dst[k], node),
+            jnp.where(has, idx.ns_ts[k], time), has)
+
+
+def hop_resident_lanes(idx: TemporalIndex, code, node, time, alive, u):
+    """``hop_resident`` with a per-row bias *code* instead of a config bias.
+
+    The migrating half of sharded lane serving (DESIGN.md §13): each
+    resident row is one coalesced-query lane, whose bias dispatches
+    branchlessly over the three closed-form inverse CDFs
+    (``samplers.index_pick_lanes``) exactly as in the single-device lane
+    engine — so the pick is a pure function of (code, u, |Γ_t(v)|) and the
+    migrated walk stays bit-identical to its solo single-device run.
+    """
+    a, b = node_range(idx, node)
+    c = temporal_cutoff(idx, a, b, time)
+    has = alive & (b - c > 0)
+    k = pick_in_neighborhood_lanes(idx, code, c, b, u)
     k = jnp.clip(k, 0, idx.edge_capacity - 1)
     return (jnp.where(has, idx.ns_dst[k], node),
             jnp.where(has, idx.ns_ts[k], time), has)

@@ -49,7 +49,10 @@ branchlessly over the three closed-form inverse CDFs
 lane's own budget is spent, and every lane draws from an RNG stream folded
 by (request seed, walk-within-request, step) — independent of batch shape
 and of which other lanes are present, which makes a coalesced batch
-bit-identical to running each query solo.
+bit-identical to running each query solo. The same lane batches run over
+the node-partitioned window via
+``repro.distributed.streaming_shard.serve_lanes_sharded`` (DESIGN.md §13),
+with the identical bit-identity guarantee.
 """
 from __future__ import annotations
 

@@ -35,6 +35,14 @@ sliding window (repro/distributed/streaming_shard.py, DESIGN.md §12) runs
 it per shard under ``shard_map`` against each shard's slice of the store,
 passing the globally agreed ``watermark`` so eviction stays causally
 consistent across shards.
+
+The pipeline is factored into store-level stages (``_prepare_runs`` →
+``_merge_runs`` → ``_clip_to_capacity``) so the same math can advance a
+**bare store without a dual index**: ``TsView`` / ``advance_view`` keep a
+replicated timestamp-view of the *global* window — just the (src, dst, ts)
+columns, byte-identical to the single-device store — which the sharded
+serving layer (DESIGN.md §13) uses as its start directory for global
+start-edge draws while the dual indexes stay node-partitioned.
 """
 from __future__ import annotations
 
@@ -77,8 +85,8 @@ def init_window(edge_capacity: int, node_capacity: int, window: int,
 # ---------------------------------------------------------------------------
 
 
-def _prepare_runs(state: WindowState, batch: EdgeBatch, node_capacity: int,
-                  watermark=None):
+def _prepare_runs(store: EdgeStore, t_prev, window, batch: EdgeBatch,
+                  node_capacity: int, watermark=None):
     """Return the two ts-sorted runs to merge plus bookkeeping scalars.
 
     Run S: the surviving store suffix, compacted to the front of length-E
@@ -92,8 +100,10 @@ def _prepare_runs(state: WindowState, batch: EdgeBatch, node_capacity: int,
     evicts against the same cutoff t − Δ even when the locally received
     batch slice is older than the global maximum — the eviction watermark
     protocol that keeps sharded windows causally consistent.
+
+    Store-level on purpose (no ``WindowState``): the replicated ts-view
+    advance (``advance_view``) runs the same stages with no dual index.
     """
-    store = state.index.store
     E = store.capacity
     B = batch.src.shape[0]
 
@@ -108,10 +118,10 @@ def _prepare_runs(state: WindowState, batch: EdgeBatch, node_capacity: int,
     # (2) advance time
     last = jnp.where(batch.count > 0,
                      bts[jnp.clip(batch.count - 1, 0, B - 1)], -TS_PAD)
-    t_now = jnp.maximum(state.t_now, last)
+    t_now = jnp.maximum(t_prev, last)
     if watermark is not None:
         t_now = jnp.maximum(t_now, watermark)
-    cutoff = t_now - state.window
+    cutoff = t_now - window
 
     # (3) late drops in the batch
     blate = bvalid & (bts < cutoff)
@@ -136,11 +146,9 @@ def _prepare_runs(state: WindowState, batch: EdgeBatch, node_capacity: int,
     return ((ssrc, sdst, sts, keep_n), (bsrc, bdst, bts, bn), t_now, late)
 
 
-def _finalize(state: WindowState, merged, keep_n, bn, t_now, late,
-              batch_count, node_capacity: int, bias_scale: float):
-    """Overflow-clip the merged run to capacity and rebuild the dual index."""
+def _clip_to_capacity(merged, keep_n, bn, E: int, node_capacity: int):
+    """Overflow-clip the merged run to an E-capacity ts-sorted store."""
     msrc, mdst, mts = merged
-    E = state.index.store.capacity
     EM = msrc.shape[0]
 
     total = keep_n + bn
@@ -155,7 +163,14 @@ def _finalize(state: WindowState, merged, keep_n, bn, t_now, late,
         ts=jnp.where(live2, mts[jnp.clip(idx2, 0, EM - 1)], TS_PAD),
         num_edges=n_after.astype(jnp.int32),
     )
+    return new_store, overflow
 
+
+def _finalize(state: WindowState, merged, keep_n, bn, t_now, late,
+              batch_count, node_capacity: int, bias_scale: float):
+    """Overflow-clip the merged run to capacity and rebuild the dual index."""
+    new_store, overflow = _clip_to_capacity(
+        merged, keep_n, bn, state.index.store.capacity, node_capacity)
     index = build_index(new_store, node_capacity, bias_scale)
     return WindowState(
         index=index, t_now=t_now, window=state.window,
@@ -171,25 +186,18 @@ def _finalize(state: WindowState, merged, keep_n, bn, t_now, late,
 # ---------------------------------------------------------------------------
 
 
-def ingest_impl(state: WindowState, batch: EdgeBatch, node_capacity: int,
-                bias_scale: float = 1.0, watermark=None) -> WindowState:
-    """Merge-based window advance (unjitted body; see ``ingest``).
-
-    ``watermark`` is the sharded-window eviction hook (see
-    ``_prepare_runs``); single-device callers leave it ``None``.
+def _merge_runs(run_s, run_b):
+    """Stable two-run merge by rank: an element's output position is its own
+    run index plus the count of other-run elements that precede it. Ties
+    break store-first (side="left" for store elems, side="right" for batch
+    elems), exactly matching a stable argsort over [store ++ batch] — which
+    is what the reference path computes — so the two paths are bit-equal.
     """
-    run_s, run_b, t_now, late = _prepare_runs(state, batch, node_capacity,
-                                              watermark=watermark)
-    ssrc, sdst, sts, keep_n = run_s
-    bsrc, bdst, bts, bn = run_b
+    ssrc, sdst, sts, _ = run_s
+    bsrc, bdst, bts, _ = run_b
     E = sts.shape[0]
     B = bts.shape[0]
 
-    # Stable two-run merge by rank: an element's output position is its own
-    # run index plus the count of other-run elements that precede it. Ties
-    # break store-first (side="left" for store elems, side="right" for batch
-    # elems), exactly matching a stable argsort over [store ++ batch] — which
-    # is what the reference path computes — so the two paths are bit-equal.
     rank_s = jnp.searchsorted(bts, sts, side="left").astype(jnp.int32)
     rank_b = jnp.searchsorted(sts, bts, side="right").astype(jnp.int32)
     pos_s = jnp.arange(E, dtype=jnp.int32) + rank_s
@@ -199,15 +207,29 @@ def ingest_impl(state: WindowState, batch: EdgeBatch, node_capacity: int,
     msrc = jnp.zeros((EM,), jnp.int32).at[pos_s].set(ssrc).at[pos_b].set(bsrc)
     mdst = jnp.zeros((EM,), jnp.int32).at[pos_s].set(sdst).at[pos_b].set(bdst)
     mts = jnp.full((EM,), TS_PAD, jnp.int32).at[pos_s].set(sts).at[pos_b].set(bts)
+    return msrc, mdst, mts
 
-    return _finalize(state, (msrc, mdst, mts), keep_n, bn, t_now, late,
+
+def ingest_impl(state: WindowState, batch: EdgeBatch, node_capacity: int,
+                bias_scale: float = 1.0, watermark=None) -> WindowState:
+    """Merge-based window advance (unjitted body; see ``ingest``).
+
+    ``watermark`` is the sharded-window eviction hook (see
+    ``_prepare_runs``); single-device callers leave it ``None``.
+    """
+    run_s, run_b, t_now, late = _prepare_runs(
+        state.index.store, state.t_now, state.window, batch, node_capacity,
+        watermark=watermark)
+    merged = _merge_runs(run_s, run_b)
+    return _finalize(state, merged, run_s[3], run_b[3], t_now, late,
                      batch.count, node_capacity, bias_scale)
 
 
 def _ingest_sort_impl(state: WindowState, batch: EdgeBatch, node_capacity: int,
                       bias_scale: float = 1.0) -> WindowState:
     """Seed reference path: concat + global stable argsort (O((m+b) log))."""
-    run_s, run_b, t_now, late = _prepare_runs(state, batch, node_capacity)
+    run_s, run_b, t_now, late = _prepare_runs(
+        state.index.store, state.t_now, state.window, batch, node_capacity)
     ssrc, sdst, sts, keep_n = run_s
     bsrc, bdst, bts, bn = run_b
 
@@ -240,3 +262,53 @@ ingest_sort = partial(jax.jit,
 ingest_nodonate = partial(jax.jit,
                           static_argnames=("node_capacity", "bias_scale"))(
     ingest_impl)
+
+
+# ---------------------------------------------------------------------------
+# Replicated timestamp-view: the global window's (src, dst, ts) columns
+# without a dual index (sharded serving's start directory, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+class TsView(NamedTuple):
+    """A bare timestamp-sorted store plus the window clock — no dual index.
+
+    Advanced through the exact single-device merge stages, so ``store`` is
+    **byte-identical to the single-device window's store** for the same
+    batch stream. The sharded serving layer replicates one of these next to
+    the node-partitioned window: global start-edge draws (positions in the
+    global ts view) resolve locally on every shard, while the ~10-array
+    dual indexes — the expensive part — stay sharded. Memory cost is 3
+    int32 columns of global edge capacity per replica.
+    """
+
+    store: EdgeStore
+    t_now: jax.Array          # int32: max timestamp seen
+    window: jax.Array         # int32: Δ
+
+
+def init_view(edge_capacity: int, node_capacity: int, window: int) -> TsView:
+    from repro.core.edge_store import empty_store
+    return TsView(store=empty_store(edge_capacity, node_capacity),
+                  t_now=jnp.asarray(0, jnp.int32),
+                  window=jnp.asarray(window, jnp.int32))
+
+
+def advance_view_impl(view: TsView, batch: EdgeBatch, node_capacity: int,
+                      watermark=None) -> TsView:
+    """Advance a ts-view by one batch: the window pipeline minus the index
+    build. Bit-identical store/t_now trajectory to ``ingest_impl``."""
+    run_s, run_b, t_now, _ = _prepare_runs(
+        view.store, view.t_now, view.window, batch, node_capacity,
+        watermark=watermark)
+    merged = _merge_runs(run_s, run_b)
+    new_store, _ = _clip_to_capacity(merged, run_s[3], run_b[3],
+                                     view.store.capacity, node_capacity)
+    return TsView(store=new_store, t_now=t_now, window=view.window)
+
+
+# Non-donating on purpose: the serving snapshot double-buffer keeps the old
+# view readable while the next one builds (same reasoning as
+# ``ingest_nodonate``).
+advance_view = partial(jax.jit, static_argnames=("node_capacity",))(
+    advance_view_impl)

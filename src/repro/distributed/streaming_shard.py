@@ -45,6 +45,23 @@ All capacities are static (``ShardConfig``): exchange buckets, resident
 walk slots, and walk-migration buckets drop on overflow and count the
 event per shard — provisioning knobs exactly like the paper's walk-array
 capacity.
+
+**Sharded lane serving** (DESIGN.md §13): ``serve_lanes_sharded`` runs one
+coalesced multi-tenant lane batch (``walk_engine.LaneParams``) over the
+node-partitioned window. Start lanes are claimed by their owner shard
+(nodes mode: owner of the start node; edges mode: owner of the picked
+edge's destination, resolved from a replicated ``window.TsView`` of the
+global store), then migrate per hop exactly like the replay walker — the
+3-int payload carries (lane id, node, time), and the lane's sampler params
+(bias code, max length, per-request RNG identity) ride with it *by lane
+id* through the replicated ``LaneParams`` arrays, so a lane keeps its own
+sampler across owner hops without widening the wire format. Per-lane
+draws are ``walk_engine._lane_uniform`` streams — pure functions of
+(request seed, walk-within-request, step) — so the coalesced sharded
+batch is **bit-identical to each query run solo on the single-device
+engine** at any shard count (tested at 1/2/8 in
+tests/test_serve_sharded.py). ``ingest_sharded_nodonate`` is the
+non-donating ingest twin backing the serving snapshot double-buffer.
 """
 from __future__ import annotations
 
@@ -67,12 +84,20 @@ from repro.configs.base import (
 from repro.core.distributed import (
     exchange_by_owner,
     hop_resident,
+    hop_resident_lanes,
     owner_range_size,
 )
 from repro.core.edge_store import TS_PAD, EdgeBatch, stack_batches
+from repro.core.samplers import index_pick_lanes
 from repro.core.streaming import ReplayStats
-from repro.core.walk_engine import NODE_PAD, WalkResult
-from repro.core.window import WindowState, ingest_impl, init_window
+from repro.core.walk_engine import (
+    NODE_PAD,
+    LaneParams,
+    WalkResult,
+    _lane_keys,
+    _lane_uniform,
+)
+from repro.core.window import TsView, WindowState, ingest_impl, init_window
 
 WINDOW_AXIS = "window_shards"
 
@@ -270,23 +295,151 @@ def _shard_walks(idx, walk_key: jax.Array, wcfg: WalkConfig,
     return tn, tt, ln, dropped + start_drop
 
 
+def _shard_walk_lanes(idx, view: TsView, lanes: LaneParams, lane_keys,
+                      wcfg: WalkConfig, *, axis: str, num_shards: int,
+                      range_size: int, walk_slots: int,
+                      walk_bucket_capacity: int):
+    """One coalesced lane batch's walks over the sharded window.
+
+    The serving twin of ``_shard_walks``: every array-of-lanes input
+    (``lanes``, ``lane_keys``, the ``view`` start directory) is replicated,
+    so any shard can evaluate any lane's next draw — but each lane is
+    *claimed* by exactly one shard per step (its current node's owner), so
+    every trace cell is written by at most one shard and one ``psum``
+    reassembles the exact single-device ``generate_walk_lanes`` result.
+
+    Start claims: nodes mode places lane i on owner(start_node[i]) when the
+    node has in-window out-edges (the owner holds the full degree); edges
+    mode computes the global start-edge pick from the replicated ts-view —
+    bit-identical to the single-device pick because the view's store is —
+    and places the lane on owner(dst). Migration then carries 3 ints
+    (lane id, node, time); bias / max_len / RNG identity are recovered from
+    the replicated ``LaneParams`` by lane id at every hop.
+    """
+    S, L = wcfg.num_walks, wcfg.max_length
+    nc = idx.node_capacity
+    Ws = walk_slots
+    shard_id = jax.lax.axis_index(axis)
+    edges_mode = wcfg.start_mode == "edges"
+    lane_ids = jnp.arange(S, dtype=jnp.int32)
+    gstore = view.store
+
+    # lane-order trace contributions (see _shard_walks: psum(x - PAD) + PAD)
+    tn = jnp.full((S, L + 1), NODE_PAD, jnp.int32)
+    tt = jnp.full((S, L + 1), NODE_PAD, jnp.int32)
+    ln = jnp.zeros((S,), jnp.int32)
+
+    if edges_mode:
+        # global start-edge draw over the replicated ts-view: same formula,
+        # same arrays (bitwise) as the single-device start_walks lane path
+        u0 = _lane_uniform(lane_keys, 0)
+        n_glob = jnp.broadcast_to(gstore.num_edges, (S,)).astype(jnp.int32)
+        e = index_pick_lanes(lanes.start_bias, u0, n_glob)
+        e = jnp.clip(e, 0, gstore.capacity - 1)
+        s_src = gstore.src[e]
+        s_cur = gstore.dst[e]
+        s_ts = gstore.ts[e]
+        alive0 = lanes.active & (gstore.num_edges > 0)
+        owner = jnp.clip(s_cur // range_size, 0, num_shards - 1)
+        mine = alive0 & (owner == shard_id)
+        row0 = jnp.where(mine, lane_ids, S)
+        tn = tn.at[row0, 0].set(s_src, mode="drop")
+        tt = tt.at[row0, 0].set(s_ts, mode="drop")
+        tn = tn.at[row0, 1].set(s_cur, mode="drop")
+        tt = tt.at[row0, 1].set(s_ts, mode="drop")
+        ln = ln.at[row0].add(2, mode="drop")
+        start_node, start_time = s_cur, s_ts
+        hops, offset = max(L - 1, 0), 1
+    else:
+        # explicit per-lane start nodes; the owner holds all of v's
+        # out-edges, so its degree test equals the single-device one
+        v = lanes.start_node
+        vc = jnp.clip(v, 0, nc - 1)
+        deg = idx.node_starts[vc + 1] - idx.node_starts[vc]
+        owner = jnp.clip(vc // range_size, 0, num_shards - 1)
+        t_floor = jnp.where(gstore.num_edges > 0, gstore.ts[0] - 1, 0)
+        mine = (lanes.active & (v >= 0) & (v < nc) & (deg > 0)
+                & (owner == shard_id))
+        row0 = jnp.where(mine, lane_ids, S)
+        start_node = vc
+        start_time = jnp.full((S,), 1, jnp.int32) * t_floor
+        tn = tn.at[row0, 0].set(start_node, mode="drop")
+        tt = tt.at[row0, 0].set(start_time, mode="drop")
+        ln = ln.at[row0].add(1, mode="drop")
+        hops, offset = L, 0
+
+    # place claimed lanes into resident slots
+    rankm = jnp.cumsum(mine.astype(jnp.int32)) - 1
+    wid = jnp.full((Ws,), -1, jnp.int32).at[
+        jnp.where(mine, rankm, Ws)].set(lane_ids, mode="drop")
+    start_drop = jnp.maximum(jnp.sum(mine.astype(jnp.int32)) - Ws, 0)
+    wc0 = jnp.clip(wid, 0, S - 1)
+    node = jnp.where(wid >= 0, start_node[wc0], 0).astype(jnp.int32)
+    cur_time = jnp.where(wid >= 0, start_time[wc0], 0).astype(jnp.int32)
+    alive = wid >= 0
+
+    def record_hop(wid, node, cur_time, alive, tn, tt, ln, step):
+        # per-lane draw stream (tag step+1; tag 0 was the start draw) and
+        # per-lane bias/budget, recovered from the replicated arrays by the
+        # slot's lane id — placement-independent bits, like the replay's
+        u_full = _lane_uniform(lane_keys, step + 1)
+        wc = jnp.clip(wid, 0, S - 1)
+        nn, nt, has = hop_resident_lanes(idx, lanes.bias[wc], node, cur_time,
+                                         alive, u_full[wc])
+        write_pos = step + offset
+        has = has & ((write_pos + 1) <= lanes.max_len[wc])
+        row = jnp.where(has, wid, S)
+        tn = tn.at[row, write_pos + 1].set(nn, mode="drop")
+        tt = tt.at[row, write_pos + 1].set(nt, mode="drop")
+        ln = ln.at[row].add(1, mode="drop")
+        return nn, nt, has, tn, tt, ln
+
+    def hop(carry, step):
+        wid, node, cur_time, alive, tn, tt, ln, dropped = carry
+        nn, nt, has, tn, tt, ln = record_hop(wid, node, cur_time, alive,
+                                             tn, tt, ln, step)
+        owner = jnp.clip(nn // range_size, 0, num_shards - 1)
+        (r_wid, r_node, r_time), _, n_drop = exchange_by_owner(
+            axis, num_shards, walk_bucket_capacity, owner, has,
+            (wid, nn, nt), (-1, 0, 0))
+
+        inc_valid = r_wid >= 0
+        dest = jnp.where(inc_valid,
+                         jnp.cumsum(inc_valid.astype(jnp.int32)) - 1, Ws)
+        recv_drop = jnp.sum(inc_valid & (dest >= Ws))
+        wid = jnp.full((Ws,), -1, jnp.int32).at[dest].set(r_wid, mode="drop")
+        node = jnp.zeros((Ws,), jnp.int32).at[dest].set(r_node, mode="drop")
+        cur_time = jnp.zeros((Ws,), jnp.int32).at[dest].set(r_time,
+                                                            mode="drop")
+        alive = jnp.zeros((Ws,), bool).at[dest].set(inc_valid, mode="drop")
+        return (wid, node, cur_time, alive, tn, tt, ln,
+                dropped + n_drop + recv_drop), None
+
+    # L-1 migrating hops + one record-only final hop, as in _shard_walks
+    carry0 = (wid, node, cur_time, alive, tn, tt, ln,
+              jnp.asarray(0, jnp.int32))
+    (wid, node, cur_time, alive, tn, tt, ln, dropped), _ = jax.lax.scan(
+        hop, carry0, jnp.arange(max(hops - 1, 0), dtype=jnp.int32))
+    if hops >= 1:
+        _, _, _, tn, tt, ln = record_hop(
+            wid, node, cur_time, alive, tn, tt, ln,
+            jnp.asarray(hops - 1, jnp.int32))
+    return tn, tt, ln, dropped + start_drop
+
+
 # ---------------------------------------------------------------------------
 # Standalone sharded ingest: advance the window by one batch (no walks)
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit,
-         static_argnames=("mesh", "axis_name", "node_capacity", "shard_cfg",
-                          "bias_scale"),
-         donate_argnums=(0,))
-def ingest_sharded(state: ShardedWindowState, bsrc, bdst, bts, count, *,
-                   mesh: Mesh, axis_name: str, node_capacity: int,
-                   shard_cfg: ShardConfig, bias_scale: float = 1.0
-                   ) -> ShardedWindowState:
+def _ingest_sharded_impl(state: ShardedWindowState, bsrc, bdst, bts, count, *,
+                         mesh: Mesh, axis_name: str, node_capacity: int,
+                         shard_cfg: ShardConfig, bias_scale: float = 1.0
+                         ) -> ShardedWindowState:
     """Advance the sharded window by one batch (``bsrc/bdst/bts`` are
     [D, Bd], the batch axis pre-split per shard; ``count`` the global valid
     prefix length). The shard_map'd single-batch twin of the replay's
-    ingest stage, donating the old state."""
+    ingest stage; see ``ingest_sharded`` / ``ingest_sharded_nodonate``."""
     D = mesh.devices.size
     range_size = owner_range_size(node_capacity, D)
 
@@ -314,13 +467,49 @@ def ingest_sharded(state: ShardedWindowState, bsrc, bdst, bts, count, *,
     return fn(state, bsrc, bdst, bts, count)
 
 
+# Donating entry point: the replay-style in-place window advance.
+ingest_sharded = partial(
+    jax.jit,
+    static_argnames=("mesh", "axis_name", "node_capacity", "shard_cfg",
+                     "bias_scale"),
+    donate_argnums=(0,))(_ingest_sharded_impl)
+
+# Non-donating twin for the sharded serving snapshot double-buffer
+# (serve/snapshot.py, DESIGN.md §13): the old ShardedWindowState must stay
+# serveable while the next one builds, so the input cannot be donated —
+# exactly the ``window.ingest_nodonate`` trade, one sharded window level
+# up. Same shard_map'd body, pmax-agreed watermark included.
+ingest_sharded_nodonate = partial(
+    jax.jit,
+    static_argnames=("mesh", "axis_name", "node_capacity", "shard_cfg",
+                     "bias_scale"))(_ingest_sharded_impl)
+
+
 # ---------------------------------------------------------------------------
 # Fused sharded replay: one shard_map'd lax.scan over all batches
 # ---------------------------------------------------------------------------
 
 
-def _check_supported(wcfg: WalkConfig, scfg: SamplerConfig) -> None:
-    if wcfg.start_mode != "all_nodes":
+def _check_supported(wcfg: WalkConfig, scfg: SamplerConfig, *,
+                     lanes: bool = False) -> None:
+    """Static validation of a sharded walk dispatch.
+
+    ``lanes=False`` is the replay walker (all_nodes placement only);
+    ``lanes=True`` is the serving lane walker, where start placement is
+    owner-computable per lane: explicit start nodes, or start edges
+    resolved from the replicated ts-view (DESIGN.md §13).
+    """
+    if lanes:
+        if wcfg.start_mode not in ("nodes", "edges"):
+            raise ValueError(
+                "sharded lane serving supports start_mode 'nodes'|'edges' "
+                f"(got {wcfg.start_mode!r})")
+        if scfg.mode != "index":
+            raise ValueError(
+                "sharded lane serving requires SamplerConfig.mode='index' "
+                "(per-lane dispatch over the closed-form inverse CDFs; got "
+                f"mode={scfg.mode!r})")
+    elif wcfg.start_mode != "all_nodes":
         raise ValueError(
             "sharded streaming walks require start_mode='all_nodes' (start "
             "placement must be owner-computable without global state; got "
@@ -330,6 +519,58 @@ def _check_supported(wcfg: WalkConfig, scfg: SamplerConfig) -> None:
             "sharded streaming walks do not support node2vec second-order "
             "bias (the β probe needs the previous node's adjacency, which "
             "lives on a different shard)")
+
+
+@partial(jax.jit,
+         static_argnames=("mesh", "axis_name", "node_capacity", "wcfg",
+                          "scfg", "shard_cfg"))
+def serve_lanes_sharded(state: ShardedWindowState, view: TsView,
+                        key: jax.Array, lanes: LaneParams, *, mesh: Mesh,
+                        axis_name: str, node_capacity: int,
+                        wcfg: WalkConfig, scfg: SamplerConfig,
+                        shard_cfg: ShardConfig):
+    """One coalesced lane batch over the node-partitioned window.
+
+    ``state`` is the sharded window (NOT donated: the serving snapshot
+    keeps it readable across dispatches), ``view`` the replicated ts-view
+    of the same window version, ``key`` the service's stable base key and
+    ``lanes`` the packed per-lane params. Returns (nodes, times, lengths,
+    drops): walk leaves with a leading [D] replicated axis (callers read
+    row 0) shaped like the single-device ``generate_walk_lanes`` result,
+    plus the per-shard [D] drop counter (start-slot + migration overflow —
+    0 under healthy provisioning, and required for the bit-identity
+    guarantee).
+    """
+    _check_supported(wcfg, scfg, lanes=True)
+    D = mesh.devices.size
+    range_size = owner_range_size(node_capacity, D)
+
+    def shard_fn(state, view, key, lanes):
+        wstate = jax.tree.map(lambda a: a[0], state.window)
+        # lane RNG identity: fold (request seed, walk-within-request) into
+        # the base key — replicated math, identical on every shard
+        lane_keys = _lane_keys(key, lanes)
+        tn, tt, ln, drop = _shard_walk_lanes(
+            wstate.index, view, lanes, lane_keys, wcfg, axis=axis_name,
+            num_shards=D, range_size=range_size,
+            walk_slots=shard_cfg.walk_slots,
+            walk_bucket_capacity=shard_cfg.walk_bucket_capacity)
+        nodes = NODE_PAD + jax.lax.psum(tn - NODE_PAD, axis_name)
+        times = NODE_PAD + jax.lax.psum(tt - NODE_PAD, axis_name)
+        lengths = jax.lax.psum(ln, axis_name)
+        return nodes[None], times[None], lengths[None], drop[None]
+
+    sharded = P(axis_name)
+    state_spec = ShardedWindowState(
+        window=jax.tree.map(lambda _: sharded, state.window),
+        exchange_drops=sharded)
+    view_spec = jax.tree.map(lambda _: P(), view)
+    lane_spec = LaneParams(*([P()] * len(LaneParams._fields)))
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(state_spec, view_spec, P(), lane_spec),
+                   out_specs=(sharded, sharded, sharded, sharded),
+                   check_rep=False)
+    return fn(state, view, key, lanes)
 
 
 @partial(jax.jit,

@@ -7,22 +7,26 @@ coalescing over the streaming engine.
   fixed-shape ``generate_walk_lanes`` dispatch, plus result slicing.
 * ``SnapshotManager`` — window double-buffer: serve against a consistent
   snapshot while the next ingest builds.
+* ``ShardedSnapshotManager`` — the same protocol over a node-partitioned
+  window + replicated ts-view (sharded serving, DESIGN.md §13).
 * ``WalkService`` — the service loop: fixed-capacity queue with
   backpressure + drop accounting, FIFO coalescing, p50/p99 latency and
-  walks/s stats.
+  walks/s stats; single-device by default, node-partitioned with
+  ``num_shards``/``mesh`` (or ``ServeConfig.num_shards``).
 """
 from repro.serve.coalescer import (
     LaneSlice,
     bucketize,
+    lane_owners,
     pack_queries,
     slice_result,
 )
 from repro.serve.query import QueryResult, WalkQuery
 from repro.serve.service import QueueFull, ServeStats, WalkService
-from repro.serve.snapshot import SnapshotManager
+from repro.serve.snapshot import ShardedSnapshotManager, SnapshotManager
 
 __all__ = [
-    "LaneSlice", "bucketize", "pack_queries", "slice_result",
+    "LaneSlice", "bucketize", "lane_owners", "pack_queries", "slice_result",
     "QueryResult", "WalkQuery", "QueueFull", "ServeStats", "WalkService",
-    "SnapshotManager",
+    "SnapshotManager", "ShardedSnapshotManager",
 ]

@@ -77,7 +77,12 @@ class WalkQuery:
 @dataclass(frozen=True)
 class QueryResult:
     """A completed query: per-walk arrays sliced back out of the coalesced
-    batch, trimmed to the query's own ``max_length + 1`` columns."""
+    batch, trimmed to the query's own ``max_length + 1`` columns.
+
+    ``snapshot_version`` is the ``SnapshotManager.version`` the batch ran
+    against — the snapshot-consistency handle: every edge in this result
+    came from that one window version, never a mix across ``publish()``.
+    """
 
     ticket: int
     query: WalkQuery
@@ -85,3 +90,4 @@ class QueryResult:
     times: np.ndarray        # int32[num_lanes, max_length+1]
     lengths: np.ndarray      # int32[num_lanes]
     latency_s: float         # submit -> completion wall time
+    snapshot_version: int = -1

@@ -18,6 +18,14 @@ Determinism: results are bit-identical to running each query solo
 (``run_query_solo``) because lane RNG folds by (query seed, walk id,
 step) and the per-lane bias/length dispatch is pure per lane — the
 coalescer only decides *where* a lane sits, never *what* it computes.
+
+**Sharded serving** (DESIGN.md §13): with ``ServeConfig.num_shards > 0``
+(or an explicit ``mesh``/``num_shards``), the same service runs against a
+node-partitioned window: snapshots double-buffer a
+``ShardedWindowState`` + replicated ts-view pair, and each coalesced
+batch dispatches through ``serve_lanes_sharded`` — start lanes claimed by
+their owner shards, per-hop owner migration, one psum trace reassembly —
+with the *same* bit-identity guarantee against single-device solo runs.
 """
 from __future__ import annotations
 
@@ -32,16 +40,17 @@ import numpy as np
 
 from repro.configs.base import EngineConfig, ServeConfig, WalkConfig
 from repro.core.edge_store import make_batch
-from repro.core.walk_engine import generate_walk_lanes
+from repro.core.walk_engine import LaneParams, generate_walk_lanes
 from repro.core.window import WindowState, init_window
 from repro.serve.coalescer import (
     bucketize,
+    lane_owners,
     pack_queries,
     result_arrays,
     slice_result,
 )
 from repro.serve.query import QueryResult, WalkQuery
-from repro.serve.snapshot import SnapshotManager
+from repro.serve.snapshot import ShardedSnapshotManager, SnapshotManager
 
 
 class QueueFull(RuntimeError):
@@ -68,6 +77,14 @@ class ServeStats:
     walks: int = 0                  # walks returned to callers
     hops: int = 0                   # edges traversed in returned walks
     busy_s: float = 0.0             # total wall time inside dispatches
+    shard_walk_drops: int = 0       # sharded serving: capacity-overflow lanes
+    exchange_drops: int = 0         # sharded serving: ingest-exchange drops
+    # ^ cumulative over the service lifetime, refreshed at publish(). The
+    #   §13 bit-identity guarantee needs BOTH drop counters at zero: walk
+    #   drops lose lanes, exchange drops lose window edges.
+    lanes_by_shard: Dict[int, int] = field(default_factory=dict)
+    # ^ sharded nodes-mode batches: start lanes per owner shard (the
+    #   walk_slots provisioning signal; edges-mode owners resolve on device)
     latencies_s: Deque[float] = field(
         default_factory=lambda: deque(maxlen=STATS_WINDOW))
     sample_s: Deque[float] = field(
@@ -118,7 +135,8 @@ class WalkService:
     def __init__(self, cfg: EngineConfig,
                  serve_cfg: ServeConfig = ServeConfig(),
                  state: Optional[WindowState] = None,
-                 batch_capacity: int = 8192):
+                 batch_capacity: int = 8192, *,
+                 mesh=None, num_shards: int = 0):
         if cfg.sampler.mode != "index":
             raise ValueError(
                 "serving requires SamplerConfig.mode='index' (per-lane "
@@ -135,12 +153,25 @@ class WalkService:
         # grouped path instead (same walks — tested path equivalence)
         self.sched_cfg = (dataclasses.replace(cfg.scheduler, path="grouped")
                          if cfg.scheduler.path == "tiled" else cfg.scheduler)
-        self.batch_capacity = batch_capacity
-        self.snapshots = SnapshotManager(
-            state if state is not None else init_window(
-                cfg.window.edge_capacity, cfg.window.node_capacity,
-                int(cfg.window.duration)),
-            cfg.window.node_capacity)
+        ns = num_shards or serve_cfg.num_shards
+        self.sharded = mesh is not None or ns > 0
+        if self.sharded:
+            if state is not None:
+                raise ValueError(
+                    "sharded serving builds its own node-partitioned "
+                    "window; the state= override is single-device only")
+            self.snapshots = ShardedSnapshotManager(
+                cfg, batch_capacity, mesh=mesh, num_shards=ns)
+            self.batch_capacity = self.snapshots.batch_capacity
+            self.num_shards = self.snapshots.num_shards
+        else:
+            self.batch_capacity = batch_capacity
+            self.num_shards = 0
+            self.snapshots = SnapshotManager(
+                state if state is not None else init_window(
+                    cfg.window.edge_capacity, cfg.window.node_capacity,
+                    int(cfg.window.duration)),
+                cfg.window.node_capacity)
         # NOT split per call: lane RNG identity lives in (seed, walk, step)
         # folds, and solo/coalesced bit-equality needs a stable base.
         self.base_key = jax.random.PRNGKey(cfg.seed)
@@ -166,6 +197,11 @@ class WalkService:
 
     def publish(self) -> None:
         self.snapshots.publish()
+        if self.sharded:
+            # sharded ingest drops edges (not lanes) on exchange overflow;
+            # they break bit-identity just like walk drops, so surface them
+            self.stats.exchange_drops = int(
+                np.asarray(self.snapshots.state.exchange_drops).sum())
 
     # ------------------------------------------------------------------
     # Query side
@@ -234,6 +270,30 @@ class WalkService:
         self._pending = kept
         return head_key, taken, lanes
 
+    def _dispatch_lanes(self, params: LaneParams, wcfg: WalkConfig):
+        """Run one packed lane batch to completion; host (nodes, times,
+        lengths). Single-device: ``generate_walk_lanes`` against the
+        current snapshot. Sharded: ``serve_lanes_sharded`` against the
+        (sharded window, ts-view) pair — psum-reassembled leaves are
+        replicated, so row 0 is the batch result (DESIGN.md §13)."""
+        if self.sharded:
+            from repro.distributed.streaming_shard import serve_lanes_sharded
+            snap = self.snapshots
+            nodes, times, lengths, drops = serve_lanes_sharded(
+                snap.state, snap.view, self.base_key, params,
+                mesh=snap.mesh, axis_name=snap.axis_name,
+                node_capacity=self.cfg.window.node_capacity, wcfg=wcfg,
+                scfg=self.cfg.sampler, shard_cfg=self.cfg.shard)
+            jax.block_until_ready(lengths)
+            self.stats.shard_walk_drops += int(np.asarray(drops).sum())
+            return (np.asarray(nodes)[0], np.asarray(times)[0],
+                    np.asarray(lengths)[0])
+        res = generate_walk_lanes(self.snapshots.current.index,
+                                  self.base_key, params, wcfg,
+                                  self.cfg.sampler, self.sched_cfg)
+        jax.block_until_ready(res.nodes)
+        return result_arrays(res)
+
     def step(self) -> int:
         """Serve one coalesced batch; returns the number of queries served."""
         if not self._pending:
@@ -244,24 +304,28 @@ class WalkService:
         params, slices = pack_queries(queries, lane_bucket, len_bucket)
         wcfg = WalkConfig(num_walks=lane_bucket, max_length=len_bucket,
                           start_mode=start_mode)
+        version = self.snapshots.version
         t0 = time.perf_counter()
-        res = generate_walk_lanes(self.snapshots.current.index,
-                                  self.base_key, params, wcfg,
-                                  self.cfg.sampler, self.sched_cfg)
-        jax.block_until_ready(res.nodes)
+        nodes, times, lengths = self._dispatch_lanes(params, wcfg)
         elapsed = time.perf_counter() - t0
         self.stats.sample_s.append(elapsed)
         self.stats.busy_s += elapsed
-        nodes, times, lengths = result_arrays(res)
         done_t = time.perf_counter()
         self.stats.batches += 1
         self.stats.lanes_dispatched += lane_bucket
         self.stats.lanes_live += lanes
+        if self.sharded and start_mode == "nodes":
+            owners = lane_owners(params, self.cfg.window.node_capacity,
+                                 self.num_shards)
+            for d, n in zip(*np.unique(owners[owners >= 0],
+                                       return_counts=True)):
+                self.stats.lanes_by_shard[int(d)] = \
+                    self.stats.lanes_by_shard.get(int(d), 0) + int(n)
         for (ticket, arrival, q), sl in zip(taken, slices):
             qn, qt, ql = slice_result(nodes, times, lengths, sl, q)
             self._results[ticket] = QueryResult(
                 ticket=ticket, query=q, nodes=qn, times=qt, lengths=ql,
-                latency_s=done_t - arrival)
+                latency_s=done_t - arrival, snapshot_version=version)
             self.stats.completed += 1
             self.stats.walks += q.num_lanes
             self.stats.hops += int(np.sum(np.clip(ql - 1, 0, None)))
@@ -284,14 +348,12 @@ class WalkService:
         """Run one query alone at its exact shape (no coalescing, no
         bucketing) against the current snapshot. The per-lane RNG makes
         this bit-identical to the same query served coalesced — the
-        equivalence the tests pin down.
+        equivalence the tests pin down (and, for a sharded service, also
+        bit-identical to the single-device service's solo run).
         """
         params, (sl,) = pack_queries([query], query.num_lanes,
                                      query.max_length)
         wcfg = WalkConfig(num_walks=query.num_lanes,
                           max_length=query.max_length,
                           start_mode=query.start_mode)
-        res = generate_walk_lanes(self.snapshots.current.index,
-                                  self.base_key, params, wcfg,
-                                  self.cfg.sampler, self.sched_cfg)
-        return slice_result(*result_arrays(res), sl, query)
+        return slice_result(*self._dispatch_lanes(params, wcfg), sl, query)

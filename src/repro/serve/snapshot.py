@@ -21,15 +21,32 @@ byte-identical output):
 Two windows are alive at the swap point — the double-buffer's memory
 cost — and the old one is released to the allocator as soon as the last
 reference drops.
+
+``ShardedSnapshotManager`` is the same protocol one level up (DESIGN.md
+§13): the front buffer is a node-partitioned ``ShardedWindowState`` plus
+the replicated ``TsView`` start directory, advanced together through the
+non-donating sharded ingest (one all_to_all, pmax-agreed eviction
+watermark) and the view merge. ``publish()`` swaps both atomically, so a
+coalesced sharded batch never sees the per-shard windows and the start
+directory at different versions — the cross-shard consistency the
+watermark protocol guarantees within one version. Two sharded windows
+(plus two 3-column views) are alive at the swap point.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 
+from repro.configs.base import EngineConfig
 from repro.core.edge_store import EdgeBatch
-from repro.core.window import WindowState, ingest_nodonate
+from repro.core.window import (
+    TsView,
+    WindowState,
+    advance_view,
+    ingest_nodonate,
+    init_view,
+)
 
 
 class SnapshotManager:
@@ -66,6 +83,87 @@ class SnapshotManager:
         self._next = None
 
     def ingest(self, batch: EdgeBatch) -> WindowState:
+        """Synchronous convenience: begin + publish in one call."""
+        self.begin_ingest(batch)
+        return self.publish()
+
+
+class ShardedSnapshotManager:
+    """Double-buffered node-partitioned window + replicated ts-view.
+
+    The serving front end for ``DistributedStreamingEngine``-style state:
+    ``state`` (sharded window slices) and ``view`` (replicated global
+    start directory) always belong to the same published version. Batches
+    are split D-ways on the batch axis exactly like the engine's ingest;
+    the next version builds through ``ingest_sharded_nodonate`` (per-shard
+    merge against the pmax-agreed watermark) while the current one keeps
+    serving coalesced lane batches.
+    """
+
+    def __init__(self, cfg: EngineConfig, batch_capacity: int = 8192, *,
+                 mesh=None, num_shards: int = 0):
+        from repro.distributed.streaming_shard import (
+            init_sharded_window,
+            window_mesh,
+        )
+        self.cfg = cfg
+        self.mesh = mesh if mesh is not None else window_mesh(
+            num_shards or cfg.shard.num_shards)
+        self.axis_name = self.mesh.axis_names[0]
+        D = self.mesh.devices.size
+        self.num_shards = D
+        # per-shard batch slice: round the capacity up to a D multiple
+        self.batch_slice = -(-batch_capacity // D)
+        self.batch_capacity = self.batch_slice * D
+        self.node_capacity = cfg.window.node_capacity
+        self.state = init_sharded_window(
+            D, cfg.shard.edge_capacity_per_shard, self.node_capacity,
+            int(cfg.window.duration), mesh=self.mesh,
+            axis_name=self.axis_name)
+        self.view = init_view(cfg.window.edge_capacity, self.node_capacity,
+                              int(cfg.window.duration))
+        self.version = 0          # bumped at every publish
+        self._next: Optional[Tuple[object, TsView]] = None
+
+    @property
+    def ingest_in_flight(self) -> bool:
+        return self._next is not None
+
+    def begin_ingest(self, batch: EdgeBatch) -> None:
+        """Start building the next (sharded window, view) pair; the
+        current pair stays serveable until ``publish``."""
+        from repro.distributed.streaming_shard import ingest_sharded_nodonate
+        if self._next is not None:
+            raise RuntimeError("an ingest is already in flight; publish() "
+                               "or discard() it first")
+        if batch.src.shape[0] != self.batch_capacity:
+            raise ValueError(
+                f"batch capacity {batch.src.shape[0]} != manager capacity "
+                f"{self.batch_capacity} (must be the D-rounded capacity)")
+        split = lambda a: a.reshape(self.num_shards, self.batch_slice)
+        nstate = ingest_sharded_nodonate(
+            self.state, split(batch.src), split(batch.dst), split(batch.ts),
+            batch.count, mesh=self.mesh, axis_name=self.axis_name,
+            node_capacity=self.node_capacity, shard_cfg=self.cfg.shard)
+        nview = advance_view(self.view, batch, self.node_capacity)
+        self._next = (nstate, nview)
+
+    def publish(self):
+        """Wait for the in-flight ingest and swap both buffers in."""
+        if self._next is None:
+            raise RuntimeError("no ingest in flight; call begin_ingest first")
+        jax.block_until_ready(self._next[0].window.index.ns_order)
+        jax.block_until_ready(self._next[1].store.ts)
+        self.state, self.view = self._next
+        self._next = None
+        self.version += 1
+        return self.state
+
+    def discard(self) -> None:
+        """Drop an in-flight ingest without publishing it."""
+        self._next = None
+
+    def ingest(self, batch: EdgeBatch):
         """Synchronous convenience: begin + publish in one call."""
         self.begin_ingest(batch)
         return self.publish()

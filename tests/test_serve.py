@@ -21,7 +21,13 @@ from repro.core.validation import validate_walks_np
 from repro.core.walk_engine import NODE_PAD, generate_walk_lanes
 from repro.core.window import ingest, init_window
 from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
-from repro.serve import WalkQuery, WalkService, bucketize, pack_queries
+from repro.serve import (
+    WalkQuery,
+    WalkService,
+    bucketize,
+    pack_queries,
+    slice_result,
+)
 
 NC = 128
 
@@ -173,6 +179,40 @@ def test_queue_backpressure_and_drop_accounting():
     assert svc.submit(qs[3]) is not None
 
 
+def test_queue_full_strict_raises_queuefull():
+    """strict=True backpressure raises the typed QueueFull, and the queue
+    recovers exactly: drop accounting never double-counts strict raises."""
+    from repro.serve import QueueFull
+    svc = WalkService(_engine_cfg(), _serve_cfg(queue_capacity=2))
+    g = powerlaw_temporal_graph(100, 400, seed=4)
+    svc.ingest(g.src, g.dst, g.ts)
+    q = WalkQuery(start_nodes=(1,), max_length=4, seed=0)
+    assert svc.submit(q) is not None and svc.submit(q) is not None
+    with pytest.raises(QueueFull, match="capacity 2"):
+        svc.submit(q, strict=True)
+    # a strict raise is not a drop; a non-strict overflow is
+    assert svc.stats.dropped_backpressure == 0
+    assert svc.submit(q) is None
+    assert svc.stats.dropped_backpressure == 1
+    svc.drain()
+    assert svc.submit(q, strict=True) is not None
+
+
+def test_latency_percentile_degenerate_histories():
+    """Empty history -> NaN (not a crash); one sample -> that sample at
+    every percentile; counters stay zero-safe."""
+    import math
+    from repro.serve import ServeStats
+    s = ServeStats()
+    assert math.isnan(s.latency_percentile(50))
+    assert math.isnan(s.p50_ms) and math.isnan(s.p99_ms)
+    assert s.walks_per_s == 0.0 and s.lane_occupancy == 0.0
+    s.latencies_s.append(0.25)
+    for q in (0, 50, 99, 100):
+        assert s.latency_percentile(q) == pytest.approx(0.25)
+    assert s.p99_ms == pytest.approx(250.0)
+
+
 def test_oversize_query_dropped_or_rejected():
     svc = WalkService(_engine_cfg(), _serve_cfg())
     big = WalkQuery(start_nodes=tuple(range(65)), max_length=4)   # > 64 lanes
@@ -181,6 +221,100 @@ def test_oversize_query_dropped_or_rejected():
     assert svc.stats.dropped_oversize == 2
     with pytest.raises(ValueError):
         svc.submit(big, strict=True)
+
+
+PACK_BUCKETS = (8, 16, 64)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.booleans(),
+       st.lists(st.tuples(st.integers(1, 24), st.integers(1, 8),
+                          st.integers(0, 10_000)),
+                min_size=0, max_size=6))
+def test_pack_queries_roundtrip_property(edges_mode, descs):
+    """Property: any same-mode query mix either exceeds every lane bucket
+    (refused) or packs back-to-back with exact per-lane params — and every
+    admitted query's result slice round-trips losslessly."""
+    queries = []
+    for lanes, length, seed in descs:
+        if edges_mode:
+            queries.append(WalkQuery(num_walks=lanes, start_mode="edges",
+                                     max_length=length, seed=seed))
+        else:
+            queries.append(WalkQuery(start_nodes=tuple(range(lanes)),
+                                     max_length=length, seed=seed))
+    total = sum(q.num_lanes for q in queries)
+    len_bucket = bucketize(max((q.max_length for q in queries), default=1),
+                           (4, 8))
+    bucket = bucketize(total, PACK_BUCKETS)
+    if bucket is None:
+        assert total > PACK_BUCKETS[-1]
+        with pytest.raises(ValueError, match="exceed"):
+            pack_queries(queries, PACK_BUCKETS[-1], len_bucket)
+        return
+    # smallest-bucket property, incl. the exact-boundary case
+    assert total <= bucket
+    assert all(b < total for b in PACK_BUCKETS if b < bucket)
+    params, slices = pack_queries(queries, bucket, len_bucket)
+
+    off = 0
+    rid = np.asarray(params.rid)
+    wid = np.asarray(params.wid)
+    ml = np.asarray(params.max_len)
+    active = np.asarray(params.active)
+    for q, sl in zip(queries, slices):
+        assert sl.offset == off and sl.count == q.num_lanes
+        rows = slice(sl.offset, sl.offset + sl.count)
+        assert (rid[rows] == np.int32(q.seed)).all()
+        assert (wid[rows] == np.arange(q.num_lanes)).all()
+        assert (ml[rows] == q.max_length).all()
+        if not edges_mode:
+            assert tuple(np.asarray(params.start_node)[rows]) == q.start_nodes
+        off += q.num_lanes
+    assert off == total
+    assert active[:total].all() and not active[total:].any()
+
+    # lossless slice round-trip: every batch cell is unique, so equality
+    # proves each query got exactly its own rows/columns back
+    L1 = len_bucket + 1
+    nodes = np.arange(bucket * L1, dtype=np.int32).reshape(bucket, L1)
+    times = nodes + 1_000_000
+    lengths = np.arange(bucket, dtype=np.int32)
+    for q, sl in zip(queries, slices):
+        qn, qt, ql = slice_result(nodes, times, lengths, sl, q)
+        rows = slice(sl.offset, sl.offset + sl.count)
+        assert qn.shape == (q.num_lanes, q.max_length + 1)
+        np.testing.assert_array_equal(qn, nodes[rows, :q.max_length + 1])
+        np.testing.assert_array_equal(qt, times[rows, :q.max_length + 1])
+        np.testing.assert_array_equal(ql, lengths[rows])
+
+
+def test_pack_queries_edge_cases():
+    """Zero-walk batches, exact-boundary full-capacity packs, one-over
+    refusals, and over-length refusals."""
+    params, slices = pack_queries([], 8, 4)
+    assert slices == []
+    assert not np.asarray(params.active).any()
+    qs = [WalkQuery(start_nodes=tuple(range(5)), max_length=4),
+          WalkQuery(start_nodes=tuple(range(3)), max_length=4)]
+    params, slices = pack_queries(qs, 8, 4)       # full capacity: 5 + 3 == 8
+    assert np.asarray(params.active).all()
+    assert [(s.offset, s.count) for s in slices] == [(0, 5), (5, 3)]
+    with pytest.raises(ValueError, match="exceed"):
+        pack_queries(qs + [WalkQuery(start_nodes=(1,), max_length=4)], 8, 4)
+    with pytest.raises(ValueError, match="length"):
+        pack_queries([WalkQuery(start_nodes=(1,), max_length=5)], 8, 4)
+
+
+def test_lane_owners_routing():
+    """Host-side owner routing matches the device claim rule; padding
+    lanes map to -1."""
+    from repro.serve import lane_owners
+    params, _ = pack_queries(
+        [WalkQuery(start_nodes=(0, 63, 64, 127), max_length=4)], 8, 4)
+    own = lane_owners(params, node_capacity=128, num_shards=2)
+    assert own.tolist() == [0, 0, 1, 1, -1, -1, -1, -1]
+    assert lane_owners(params, 128, 1).tolist() == [0, 0, 0, 0] + [-1] * 4
 
 
 def test_shape_buckets():

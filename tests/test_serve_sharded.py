@@ -1,0 +1,397 @@
+"""Sharded serving (DESIGN.md §13): coalesced multi-tenant lane batches
+over the node-partitioned window.
+
+The acceptance invariant extends PR 3's: a coalesced batch served against
+the **sharded** window is bit-identical to each query run **solo on the
+single-device engine** — at any shard count. The multi-shard cases run in
+a subprocess with 8 forced host devices (device count must be set before
+jax initializes, mirroring test_streaming_shard.py); the fast lane covers
+1-shard identity, the sharded snapshot double-buffer, and the
+unsupported-config refusals in-process.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    ServeConfig,
+    ShardConfig,
+    WalkConfig,
+    WindowConfig,
+)
+from repro.core.edge_store import make_batch
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.serve import ShardedSnapshotManager, WalkQuery, WalkService
+
+NC = 128
+BIASES = ("uniform", "linear", "exponential")
+
+
+def _cfg():
+    return EngineConfig(
+        window=WindowConfig(duration=4000, edge_capacity=4096,
+                            node_capacity=NC),
+        sampler=SamplerConfig(mode="index"),
+        scheduler=SchedulerConfig(path="grouped"),
+        shard=ShardConfig(edge_capacity_per_shard=4096,
+                          exchange_capacity=4096, walk_slots=256,
+                          walk_bucket_capacity=256))
+
+
+def _serve_cfg():
+    return ServeConfig(lane_buckets=(8, 16, 64), length_buckets=(4, 8, 16))
+
+
+def _query_grid():
+    """3 bias codes × 2 start modes, varied lengths/fan-outs/seeds."""
+    queries = []
+    for i, b in enumerate(BIASES):
+        queries.append(WalkQuery(start_nodes=(1 + i, 30 + i, 60 + i, 99 - i),
+                                 bias=b, max_length=5 + i, seed=100 + i))
+        queries.append(WalkQuery(num_walks=3 + i, start_mode="edges", bias=b,
+                                 start_bias=BIASES[(i + 1) % 3],
+                                 max_length=4 + i, seed=200 + i))
+    return queries
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+from repro.configs.base import (EngineConfig, SamplerConfig, SchedulerConfig,
+                                ServeConfig, ShardConfig, WindowConfig)
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.serve import WalkQuery, WalkService
+
+NC = 128
+BIASES = ("uniform", "linear", "exponential")
+g = powerlaw_temporal_graph(100, 3000, seed=11)
+cfg = EngineConfig(
+    window=WindowConfig(duration=4000, edge_capacity=4096, node_capacity=NC),
+    sampler=SamplerConfig(mode="index"),
+    scheduler=SchedulerConfig(path="grouped"),
+    shard=ShardConfig(edge_capacity_per_shard=4096, exchange_capacity=4096,
+                      walk_slots=256, walk_bucket_capacity=256))
+scfg = ServeConfig(lane_buckets=(8, 16, 64), length_buckets=(4, 8, 16))
+
+# solo reference: the single-device service over the replicated window
+ref = WalkService(cfg, scfg)
+for bs, bd, bt in chronological_batches(g, 3):
+    ref.ingest(bs, bd, bt)
+
+queries = []
+for i, b in enumerate(BIASES):
+    queries.append(WalkQuery(start_nodes=(1 + i, 30 + i, 60 + i, 99 - i),
+                             bias=b, max_length=5 + i, seed=100 + i))
+    queries.append(WalkQuery(num_walks=3 + i, start_mode="edges", bias=b,
+                             start_bias=BIASES[(i + 1) % 3],
+                             max_length=4 + i, seed=200 + i))
+
+# --- coalesced-sharded == solo-single-device at shard counts {1, 2, 8} ---
+for D in (1, 2, 8):
+    svc = WalkService(cfg, scfg, num_shards=D)
+    assert svc.num_shards == D
+    for bs, bd, bt in chronological_batches(g, 3):
+        svc.ingest(bs, bd, bt)
+    # the replicated ts-view is byte-identical to the single-device store
+    rs = ref.snapshots.current.index.store
+    vs = svc.snapshots.view.store
+    assert int(rs.num_edges) == int(vs.num_edges)
+    for f in ("src", "dst", "ts"):
+        np.testing.assert_array_equal(np.asarray(getattr(rs, f)),
+                                      np.asarray(getattr(vs, f)),
+                                      err_msg=f"D={D} view.{f}")
+    tickets = [svc.submit(q, strict=True) for q in queries]
+    while svc.pending_count:
+        svc.step()
+    for t, q in zip(tickets, queries):
+        r = svc.poll(t)
+        assert r is not None
+        sn, st_, sl = ref.run_query_solo(q)
+        np.testing.assert_array_equal(r.nodes, sn, err_msg=f"D={D} {q}")
+        np.testing.assert_array_equal(r.times, st_, err_msg=f"D={D} {q}")
+        np.testing.assert_array_equal(r.lengths, sl, err_msg=f"D={D} {q}")
+    assert svc.stats.shard_walk_drops == 0, (D, "walk overflow")
+    assert svc.stats.exchange_drops == 0, (D, "ingest exchange overflow")
+    assert svc.stats.completed == len(queries)
+
+# --- nodes-mode start lanes spread across owner shards at D=8 ------------
+svc = WalkService(cfg, scfg, num_shards=8)
+for bs, bd, bt in chronological_batches(g, 3):
+    svc.ingest(bs, bd, bt)
+starts = tuple(range(0, 96, 2))
+t = svc.submit(WalkQuery(start_nodes=starts, max_length=4, seed=5),
+               strict=True)
+svc.step()
+assert svc.poll(t) is not None
+assert len(svc.stats.lanes_by_shard) > 1, svc.stats.lanes_by_shard
+
+# --- walk-slot overflow is counted, not crashed --------------------------
+tiny = EngineConfig(
+    window=cfg.window, sampler=cfg.sampler, scheduler=cfg.scheduler,
+    shard=ShardConfig(edge_capacity_per_shard=4096, exchange_capacity=1024,
+                      walk_slots=2, walk_bucket_capacity=256))
+svc = WalkService(tiny, scfg, num_shards=8)
+for bs, bd, bt in chronological_batches(g, 3):
+    svc.ingest(bs, bd, bt)
+t = svc.submit(WalkQuery(start_nodes=tuple(range(32)), max_length=4,
+                         seed=1), strict=True)
+svc.step()
+assert svc.poll(t) is not None
+assert svc.stats.shard_walk_drops > 0, "expected walk-slot overflow"
+
+print("SHARDED_SERVE_OK")
+"""
+
+
+@pytest.mark.slow      # 8-device subprocess
+def test_sharded_serving_8_devices():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "SHARDED_SERVE_OK" in out.stdout, \
+        (out.stdout[-1500:], out.stderr[-3000:])
+
+
+# ---------------------------------------------------------------------------
+# Fast lane: 1-shard identity + snapshot protocol + refusals (in-process)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def services():
+    """(graph, single-device reference service, 1-shard sharded service),
+    both fed the same batch stream."""
+    g = powerlaw_temporal_graph(100, 3000, seed=11)
+    ref = WalkService(_cfg(), _serve_cfg())
+    svc = WalkService(_cfg(), _serve_cfg(), num_shards=1)
+    for bs, bd, bt in chronological_batches(g, 3):
+        ref.ingest(bs, bd, bt)
+        svc.ingest(bs, bd, bt)
+    return g, ref, svc
+
+
+def test_single_shard_coalesced_matches_single_device_solo(services):
+    """Acceptance (fast lane): coalesced batches on the 1-shard
+    node-partitioned window == per-query solo runs on the single-device
+    engine, all three biases × both start modes."""
+    _, ref, svc = services
+    queries = _query_grid()
+    tickets = [svc.submit(q, strict=True) for q in queries]
+    while svc.pending_count:
+        svc.step()
+    for t, q in zip(tickets, queries):
+        r = svc.poll(t)
+        assert r is not None
+        sn, st_, sl = ref.run_query_solo(q)
+        assert np.array_equal(r.nodes, sn), q
+        assert np.array_equal(r.times, st_), q
+        assert np.array_equal(r.lengths, sl), q
+    assert svc.stats.shard_walk_drops == 0
+
+
+def test_sharded_solo_matches_single_device_solo(services):
+    """The sharded service's own solo path agrees with the single-device
+    solo path bit for bit (same exact-shape dispatch, different engine)."""
+    _, ref, svc = services
+    for q in (_query_grid()[0], _query_grid()[-1]):
+        for a, b in zip(svc.run_query_solo(q), ref.run_query_solo(q)):
+            assert np.array_equal(a, b), q
+
+
+def test_sharded_view_matches_single_device_store(services):
+    """The replicated ts-view (start directory) is byte-identical to the
+    single-device window store after the same batch stream."""
+    _, ref, svc = services
+    rs = ref.snapshots.current.index.store
+    vs = svc.snapshots.view.store
+    assert int(rs.num_edges) == int(vs.num_edges)
+    for f in ("src", "dst", "ts"):
+        np.testing.assert_array_equal(np.asarray(getattr(rs, f)),
+                                      np.asarray(getattr(vs, f)), err_msg=f)
+
+
+def test_sharded_snapshot_double_buffer():
+    """begin_ingest keeps the current (state, view) pair serveable;
+    publish swaps both and bumps the version; protocol errors raise."""
+    g = powerlaw_temporal_graph(100, 1500, seed=3)
+    batches = list(chronological_batches(g, 3))
+    svc = WalkService(_cfg(), _serve_cfg(), num_shards=1)
+    for bs, bd, bt in batches[:-1]:
+        svc.ingest(bs, bd, bt)
+    bs, bd, bt = batches[-1]
+    v0 = svc.snapshots.version
+    old_n = int(svc.snapshots.view.store.num_edges)
+    svc.begin_ingest(bs, bd, bt)
+    assert svc.snapshots.ingest_in_flight
+    with pytest.raises(RuntimeError, match="already in flight"):
+        svc.begin_ingest(bs, bd, bt)
+    # the front buffer still serves while the back buffer builds
+    t = svc.submit(WalkQuery(start_nodes=(1, 2, 3), max_length=4, seed=1),
+                   strict=True)
+    svc.step()
+    r = svc.poll(t)
+    assert r is not None and r.snapshot_version == v0
+    assert int(svc.snapshots.view.store.num_edges) == old_n
+    svc.publish()
+    assert svc.snapshots.version == v0 + 1
+    assert not svc.snapshots.ingest_in_flight
+    assert int(svc.snapshots.view.store.num_edges) != old_n
+    with pytest.raises(RuntimeError, match="no ingest in flight"):
+        svc.publish()
+    svc.begin_ingest(bs, bd, bt)
+    svc.snapshots.discard()
+    assert not svc.snapshots.ingest_in_flight
+
+
+def test_sharded_serving_refusals():
+    """Unsupported configs are refused up front, not mid-batch."""
+    import dataclasses
+    with pytest.raises(ValueError, match="index"):
+        WalkService(dataclasses.replace(
+            _cfg(), sampler=SamplerConfig(mode="weight")), num_shards=1)
+    with pytest.raises(ValueError, match="node2vec"):
+        WalkService(dataclasses.replace(
+            _cfg(), sampler=SamplerConfig(mode="index", node2vec_p=2.0)),
+            num_shards=1)
+    # the state= override belongs to the single-device path
+    from repro.core.window import init_window
+    with pytest.raises(ValueError, match="single-device"):
+        WalkService(_cfg(), _serve_cfg(),
+                    state=init_window(4096, NC, 4000), num_shards=1)
+    # more shards than devices
+    import jax
+    with pytest.raises(ValueError, match="devices"):
+        WalkService(_cfg(), _serve_cfg(),
+                    num_shards=len(jax.devices()) + 1)
+    # the engine-level check refuses non-lane start modes for lane batches
+    from repro.distributed.streaming_shard import _check_supported
+    with pytest.raises(ValueError, match="nodes"):
+        _check_supported(WalkConfig(start_mode="all_nodes"),
+                         SamplerConfig(mode="index"), lanes=True)
+    with pytest.raises(ValueError, match="index"):
+        _check_supported(WalkConfig(start_mode="nodes"),
+                         SamplerConfig(mode="weight"), lanes=True)
+    # sharded snapshot manager rejects a wrong-capacity batch
+    snaps = ShardedSnapshotManager(_cfg(), batch_capacity=1024, num_shards=1)
+    with pytest.raises(ValueError, match="capacity"):
+        snaps.begin_ingest(make_batch([1], [2], [3], capacity=16))
+
+
+def test_ingest_exchange_drops_surface_in_stats():
+    """Under-provisioned ingest exchange buckets lose window edges; the
+    service surfaces them (bit-identity needs BOTH drop counters zero)."""
+    import dataclasses
+    tiny = dataclasses.replace(
+        _cfg(), shard=ShardConfig(edge_capacity_per_shard=4096,
+                                  exchange_capacity=8, walk_slots=256,
+                                  walk_bucket_capacity=256))
+    g = powerlaw_temporal_graph(100, 1500, seed=7)
+    svc = WalkService(tiny, _serve_cfg(), num_shards=1)
+    svc.ingest(g.src, g.dst, g.ts)
+    assert svc.stats.exchange_drops > 0
+    # a healthy service stays at zero
+    svc2 = WalkService(_cfg(), _serve_cfg(), num_shards=1)
+    svc2.ingest(g.src, g.dst, g.ts)
+    assert svc2.stats.exchange_drops == 0
+
+
+def test_serve_config_num_shards_switch():
+    """ServeConfig.num_shards flips the service into sharded mode."""
+    scfg = ServeConfig(lane_buckets=(8, 16), length_buckets=(4, 8),
+                       num_shards=1)
+    svc = WalkService(_cfg(), scfg)
+    assert svc.sharded and svc.num_shards == 1
+    g = powerlaw_temporal_graph(100, 800, seed=9)
+    svc.ingest(g.src, g.dst, g.ts)
+    t = svc.submit(WalkQuery(start_nodes=(3, 4), max_length=4, seed=7),
+                   strict=True)
+    svc.step()
+    assert svc.poll(t) is not None
+
+
+# ---------------------------------------------------------------------------
+# Snapshot-consistency soak: no result mixes two window versions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_snapshot_consistency_soak():
+    """Interleave begin_ingest/publish with live queries and verify every
+    QueryResult against the window bounds of the version it reports: all
+    hop timestamps within [t_now - Δ, t_now] of that version, nodes-mode
+    start rows pinned to that version's t_floor. An edge from a later
+    publish would exceed the pinned version's t_now; an evicted one would
+    fall below its cutoff — either way, version mixing is caught.
+    """
+    g = powerlaw_temporal_graph(100, 6000, seed=21)
+    svc = WalkService(_cfg(), _serve_cfg(), num_shards=1)
+    batches = list(chronological_batches(g, 12))
+    rng = np.random.default_rng(5)
+
+    # bounds[v] = (t_floor, cutoff, t_now) of published version v
+    def bounds():
+        view = svc.snapshots.view
+        n = int(view.store.num_edges)
+        ts0 = int(np.asarray(view.store.ts[0])) if n else 0
+        t_now = int(np.asarray(view.t_now))
+        return (ts0 - 1 if n else 0, t_now - int(np.asarray(view.window)),
+                t_now)
+
+    version_bounds = {}
+    results = []
+    pending_ingest = False
+    bi = 0
+    svc.ingest(*batches[bi]); bi += 1
+    version_bounds[svc.snapshots.version] = bounds()
+    for step in range(60):
+        op = rng.integers(4)
+        if op == 0 and not pending_ingest and bi < len(batches):
+            svc.begin_ingest(*batches[bi]); bi += 1
+            pending_ingest = True
+        elif op == 1 and pending_ingest:
+            svc.publish()
+            pending_ingest = False
+            version_bounds[svc.snapshots.version] = bounds()
+        elif op == 2:
+            n = int(rng.integers(1, 5))
+            starts = tuple(int(s) for s in rng.integers(0, NC, n))
+            if rng.random() < 0.5:
+                q = WalkQuery(start_nodes=starts,
+                              bias=BIASES[int(rng.integers(3))],
+                              max_length=int(rng.integers(2, 9)),
+                              seed=int(rng.integers(1 << 16)))
+            else:
+                q = WalkQuery(num_walks=n, start_mode="edges",
+                              bias=BIASES[int(rng.integers(3))],
+                              max_length=int(rng.integers(2, 9)),
+                              seed=int(rng.integers(1 << 16)))
+            svc.submit(q)
+        elif svc.pending_count:
+            svc.step()
+    results = svc.drain()
+
+    assert results
+    checked_hops = 0
+    for r in results:
+        t_floor, cutoff, t_now = version_bounds[r.snapshot_version]
+        first_hop = 1 if r.query.start_mode == "nodes" else 0
+        for w in range(r.nodes.shape[0]):
+            L = int(r.lengths[w])
+            if L == 0:
+                continue
+            if r.query.start_mode == "nodes":
+                assert int(r.times[w, 0]) == t_floor, r.snapshot_version
+            hop_ts = r.times[w, first_hop:L]
+            assert np.all(hop_ts >= cutoff), (r.snapshot_version, hop_ts)
+            assert np.all(hop_ts <= t_now), (r.snapshot_version, hop_ts)
+            checked_hops += len(hop_ts)
+    assert checked_hops > 0
