@@ -2,6 +2,8 @@
 claims only; TPU projections come from the roofline model — DESIGN.md §9)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -18,6 +20,25 @@ from repro.configs.base import (
 from repro.core.edge_store import store_from_arrays
 from repro.core.temporal_index import build_index
 from repro.data.synthetic import powerlaw_temporal_graph
+
+
+# Toggled by ``benchmarks.run`` flags: --emit-json persists machine-readable
+# BENCH_*.json artifacts next to the CSV stream; --small shrinks suite
+# configs to nightly-CI scale.
+EMIT_JSON = False
+SMALL = False
+
+
+def write_json(name: str, payload: dict) -> str | None:
+    """Write ``BENCH_<name>.json`` in the cwd when --emit-json is active."""
+    if not EMIT_JSON:
+        return None
+    path = os.path.join(os.getcwd(), f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+    return path
 
 
 def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 1,

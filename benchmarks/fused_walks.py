@@ -1,0 +1,98 @@
+"""Fused-path walk throughput (paper Tables 2-3, DESIGN.md §14).
+
+Times ``generate_walks`` over all five walk paths — fullwalk,
+grouped-lexsort, grouped-bucket, tiled, fused — on one skewed graph and
+reports walks/s and M-steps/s per path, plus the fused kernel's
+per-tier launch counts (tier-S lanes, tier-L lanes, swept edge blocks)
+alongside the classic dispatch tiers. With ``--emit-json`` the full
+record is persisted as ``BENCH_fused.json`` for trend tracking.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import (
+    emit,
+    make_bench_index,
+    steps_per_sec,
+    timeit,
+    write_json,
+)
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core import scheduler as sched
+from repro.core.walk_engine import generate_walks
+
+PATHS = [
+    ("fullwalk", dict(path="fullwalk")),
+    ("grouped-lexsort", dict(path="grouped", regroup="lexsort")),
+    ("grouped-bucket", dict(path="grouped", regroup="bucket")),
+    ("tiled", dict(path="tiled")),
+    ("fused", dict(path="fused", regroup="bucket")),
+]
+
+TIER_STATS = {
+    "solo": "STAT_SOLO",
+    "group_smem": "STAT_GROUP_SMEM",
+    "group_global": "STAT_GROUP_GLOBAL",
+    "mega": "STAT_MEGA",
+    "fused_small": "STAT_FUSED_SMALL",
+    "fused_big": "STAT_FUSED_BIG",
+    "fused_blocks": "STAT_FUSED_BLOCKS",
+}
+
+
+def run():
+    small = common.SMALL
+    num_walks = 512 if small else 2048
+    max_length = 6 if small else 10
+    num_edges = 6000 if small else 14000
+    edge_capacity = 8192 if small else 16384
+    repeats = 1 if small else 3
+    wcfg = WalkConfig(num_walks=num_walks, max_length=max_length,
+                      start_mode="nodes")
+    scfg = SamplerConfig(bias="exponential", mode="weight")
+    tiles = dict(tile_walks=128 if small else 256, tile_edges=1024)
+    _, idx = make_bench_index(num_nodes=256 if small else 1024,
+                              num_edges=num_edges,
+                              skew=2.0 if small else 1.4,
+                              edge_capacity=edge_capacity)
+    key = jax.random.PRNGKey(0)
+
+    payload = {
+        "suite": "fused_walk_paths",
+        "config": dict(num_walks=num_walks, max_length=max_length,
+                       num_edges=num_edges, edge_capacity=edge_capacity,
+                       small=small, **tiles),
+        "paths": {},
+        "tiers": {},
+    }
+    for name, kw in PATHS:
+        cfg = SchedulerConfig(**kw, **tiles)
+        mean_s, std_s, res = timeit(generate_walks, idx, key, wcfg, scfg,
+                                    cfg, repeats=repeats)
+        walks_s = num_walks / mean_s
+        msteps = steps_per_sec(res, mean_s)
+        emit(f"fused_walks/{name}", mean_s * 1e6,
+             f"walks/s={walks_s:.0f};Msteps/s={msteps:.3f}")
+        payload["paths"][name] = dict(mean_s=float(mean_s),
+                                      std_s=float(std_s),
+                                      walks_per_s=float(walks_s),
+                                      msteps_per_s=float(msteps))
+
+    # per-tier dispatch counts for the fused run (paper Table 3 analog)
+    res = generate_walks(idx, key, wcfg, scfg,
+                         SchedulerConfig(path="fused", regroup="bucket",
+                                         **tiles), collect_stats=True)
+    st = np.asarray(res.stats)
+    for tier, const in TIER_STATS.items():
+        payload["tiers"][tier] = int(st[:, getattr(sched, const)].sum())
+    emit("fused_walks/tiers", 0.0,
+         ";".join(f"{k}={v}" for k, v in payload["tiers"].items()))
+    write_json("fused", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

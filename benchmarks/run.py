@@ -5,11 +5,14 @@ relative claims only (DESIGN.md §9); the TPU performance story lives in
 EXPERIMENTS.md §Roofline/§Perf (from the compiled dry-run).
 
 Usage:
-    python -m benchmarks.run [--help] [filter]
+    python -m benchmarks.run [--help] [--emit-json] [--small] [filter]
 
 With a ``filter`` argument, only suites whose name contains the substring
-run. ``--help`` lists every suite with its paper counterpart (the same set
-documented in benchmarks/README.md).
+run. ``--emit-json`` additionally persists machine-readable
+``BENCH_*.json`` artifacts (suites that support it, e.g. fused_walks
+-> BENCH_fused.json). ``--small`` shrinks suite configs to nightly-CI
+scale. ``--help`` lists every suite with its paper counterpart (the same
+set documented in benchmarks/README.md).
 """
 from __future__ import annotations
 
@@ -40,6 +43,10 @@ SUITES = [
      "window duration sweep: active edges, drops, per-batch cost"),
     ("fig11_memory_usage", "memory_usage", "Fig. 11",
      "device bytes across a stream (exactly constant) + accounting"),
+    ("fused_walk_paths", "fused_walks", "Tables 2-3 (§14)",
+     "walks/s across all five walk paths (fullwalk / grouped-lexsort / "
+     "grouped-bucket / tiled / fused) + fused per-tier launch counts; "
+     "--emit-json writes BENCH_fused.json"),
     ("serving_load", "serving_load", "— (§11, §13)",
      "open-loop Poisson serving: mixed-bias queries through the "
      "coalescer; p50/p99 latency + walks/s vs offered load; plus the "
@@ -64,7 +71,17 @@ def main() -> None:
 
     import importlib
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks import common
+
+    argv = sys.argv[1:]
+    if "--emit-json" in argv:
+        common.EMIT_JSON = True
+        argv = [a for a in argv if a != "--emit-json"]
+    if "--small" in argv:
+        common.SMALL = True
+        argv = [a for a in argv if a != "--small"]
+
+    only = argv[0] if argv else None
     failed = []
     for name, mod_name, _paper, _desc in SUITES:
         if only and only not in name:

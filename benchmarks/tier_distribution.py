@@ -1,4 +1,10 @@
-"""Paper Table 3: dispatch-plane tier distribution (% of tasks per tier)."""
+"""Paper Table 3: dispatch-plane tier distribution (% of tasks per tier).
+
+Also exposes ``tier_counts``/``golden_counts`` so the fast-lane golden
+test (tests/test_tier_golden.py) can assert exact tier counts on a fixed
+seeded graph — any change to ``dispatch_stats``'s tier rules shows up as
+an integer diff there rather than a silent drift in this table.
+"""
 from __future__ import annotations
 
 import jax
@@ -16,6 +22,37 @@ DATASETS = {
                     ts_groups=64),
 }
 
+TIER_STATS = {
+    "solo": sched.STAT_SOLO,
+    "group_smem": sched.STAT_GROUP_SMEM,
+    "group_global": sched.STAT_GROUP_GLOBAL,
+    "mega": sched.STAT_MEGA,
+    "fused_small": sched.STAT_FUSED_SMALL,
+    "fused_big": sched.STAT_FUSED_BIG,
+    "fused_blocks": sched.STAT_FUSED_BLOCKS,
+}
+
+# Fixed seeded config for the golden test: small enough for the fast
+# lane, skewed enough that every tier (incl. fused tier-L) is populated.
+GOLDEN_DATASET = dict(num_nodes=256, num_edges=6000, skew=1.6, seed=0,
+                      edge_capacity=8192)
+GOLDEN_WALKS = WalkConfig(num_walks=1024, max_length=8, start_mode="nodes")
+GOLDEN_SCHED = SchedulerConfig(solo_threshold=4, max_task_walks=512,
+                               tile_edges=1024)
+
+
+def tier_counts(idx, wcfg, cfg) -> dict:
+    """Summed dispatch_stats tier counts over a full walk generation."""
+    res = generate_walks(idx, jax.random.PRNGKey(0), wcfg,
+                         SamplerConfig(), cfg, collect_stats=True)
+    st = np.asarray(res.stats)
+    return {k: int(st[:, col].sum()) for k, col in TIER_STATS.items()}
+
+
+def golden_counts() -> dict:
+    _, idx = make_bench_index(**GOLDEN_DATASET)
+    return tier_counts(idx, GOLDEN_WALKS, GOLDEN_SCHED)
+
 
 def run():
     wcfg = WalkConfig(num_walks=8192, max_length=20, start_mode="nodes")
@@ -23,20 +60,18 @@ def run():
                           tile_edges=1024)
     rows = []
     for dname, kw in DATASETS.items():
-        g, idx = make_bench_index(**kw)
-        res = generate_walks(idx, jax.random.PRNGKey(0), wcfg,
-                             SamplerConfig(), cfg, collect_stats=True)
-        st = np.asarray(res.stats)
-        tiers = {
-            "solo": st[:, sched.STAT_SOLO].sum(),
-            "group_smem": st[:, sched.STAT_GROUP_SMEM].sum(),
-            "group_global": st[:, sched.STAT_GROUP_GLOBAL].sum(),
-            "mega": st[:, sched.STAT_MEGA].sum(),
-        }
-        total = max(sum(tiers.values()), 1)
-        pct = {k: 100.0 * v / total for k, v in tiers.items()}
+        _, idx = make_bench_index(**kw)
+        tiers = tier_counts(idx, wcfg, cfg)
+        classic = {k: tiers[k] for k in ("solo", "group_smem",
+                                         "group_global", "mega")}
+        total = max(sum(classic.values()), 1)
+        pct = {k: 100.0 * v / total for k, v in classic.items()}
         emit(f"table3/{dname}", 0.0,
              ";".join(f"{k}={v:.1f}%" for k, v in pct.items()))
+        emit(f"table3/{dname}/fused", 0.0,
+             ";".join(f"{k}={tiers[k]}" for k in ("fused_small",
+                                                  "fused_big",
+                                                  "fused_blocks")))
         rows.append((dname, pct))
     return rows
 

@@ -45,13 +45,18 @@ class SamplerConfig:
 class SchedulerConfig:
     """Hierarchical cooperative scheduling adaptation (paper §2.4).
 
-    The GPU dispatch plane (W x G -> 5 terminal kernels) maps to a 3-path
+    The GPU dispatch plane (W x G -> 5 terminal kernels) maps to a 4-path
     plane on TPU; thresholds play the same structural role as the paper's
     W_warp / block-dim hyperparameters and are swept in EXPERIMENTS.md.
+
+    Paths: ``fullwalk`` (per-walk baseline), ``grouped`` (regrouped jnp
+    hops), ``tiled`` (Pallas search+sample kernel + jnp gather/fallback),
+    ``fused`` (single convergence-tiered Pallas kernel per hop:
+    prefix lookup + per-lane branchless draw + gather, DESIGN.md §14).
     """
 
-    path: str = "grouped"             # fullwalk | grouped | tiled (pallas)
-    # per-hop regrouping algorithm for the grouped/tiled paths:
+    path: str = "grouped"             # fullwalk | grouped | tiled | fused
+    # per-hop regrouping algorithm for the grouped/tiled/fused paths:
     #   bucket  — O(W) counting regroup with carried permutation (DESIGN.md §10)
     #   lexsort — the seed's per-hop O(W log W) sort + inverse scatter
     #             (kept as the equivalence/benchmark reference)

@@ -34,7 +34,10 @@ STAT_GROUP_GLOBAL = 4     # grouped tasks needing global fallback
 STAT_MEGA = 5             # mega-hub sub-tasks (ceil(W / max_task_walks))
 STAT_BYTES_FULLWALK = 6   # modeled HBM bytes, per-walk layout
 STAT_BYTES_GROUPED = 7    # modeled HBM bytes, grouped layout
-NUM_STATS = 8
+STAT_FUSED_SMALL = 8      # fused tier-S lanes (span fits the staged window)
+STAT_FUSED_BIG = 9        # fused tier-L lanes (edge-window sweep)
+STAT_FUSED_BLOCKS = 10    # modeled tier-L swept edge blocks
+NUM_STATS = 11
 
 _BYTES_PER_EDGE_ROW = 8   # (dst, ts) int32 pair
 _BYTES_PER_OFFSET = 4
@@ -71,6 +74,17 @@ def dispatch_stats(index: TemporalIndex, cur_node: jax.Array,
     bytes_grp = jnp.sum(jnp.where(occupied, per_lookup, 0.0)
                         + wf * _BYTES_PER_EDGE_ROW)
 
+    # fused-kernel tier split (kernels/fused_step.py): a lane whose whole
+    # region span fits the staged 2·tile_edges window is tier S, else tier
+    # L. This is the idealized per-lane rule — the kernel's split is
+    # tile-anchored and can only demote additional lanes — and the block
+    # count models one sweep block per tile_edges of span plus the
+    # alignment slop, per tier-L lane (per-tile dedup not modeled).
+    fused_small = alive & (deg[node] <= 2 * cfg.tile_edges)
+    fused_big = alive & (deg[node] > 2 * cfg.tile_edges)
+    fused_blocks = jnp.where(fused_big,
+                             -(-deg[node] // cfg.tile_edges) + 1, 0)
+
     return jnp.stack([
         jnp.sum(alive.astype(jnp.float32)),
         jnp.sum(occupied.astype(jnp.float32)),
@@ -80,6 +94,9 @@ def dispatch_stats(index: TemporalIndex, cur_node: jax.Array,
         jnp.sum(mega_tasks.astype(jnp.float32)),
         bytes_full,
         bytes_grp,
+        jnp.sum(fused_small.astype(jnp.float32)),
+        jnp.sum(fused_big.astype(jnp.float32)),
+        jnp.sum(fused_blocks.astype(jnp.float32)),
     ])
 
 

@@ -18,6 +18,14 @@ Execution paths (the TPU mapping of the paper's dispatch plane):
   Pallas kernel (kernels/walk_step.py), which stages each task's edge slice
   in VMEM (the smem-panel analog). Selected via SchedulerConfig.path.
 
+* ``fused`` — the grouped path with the whole hop (prefix-weight lookup,
+  branchless per-lane inverse-CDF draw, and the dst/ts gather) executed by
+  the fused convergence-tiered kernel (kernels/fused_step.py, DESIGN.md
+  §14): small-degree lanes resolve in one staged tile pass, oversize lanes
+  sweep the edge window in-kernel — no jnp fallback. Because the bias
+  dispatches by int32 code per lane, ``fused`` also serves heterogeneous
+  ``LaneParams`` batches (unlike ``tiled``, which compiles one bias).
+
 The per-hop regrouping itself comes in two flavors
 (``SchedulerConfig.regroup``, DESIGN.md §10): ``bucket`` (default) is an
 O(W) counting regroup (core/scheduler.py::bucket_regroup) whose permutation
@@ -509,6 +517,64 @@ def _hop_tiled_bucket(index, scfg, sched_cfg, carry: _Carry, step,
                           index.ns_dst[k], index.ns_ts[k], has_next_s)
 
 
+def _fused_draws(index, scfg, hop_key, order, lane_bias, lane_u):
+    """Per-lane (bias code, uniform) for the fused kernel, in lane order.
+
+    Draws are generated in walk order and indexed through ``order`` —
+    the same layout-independence rule as ``_draw_pick``.
+    """
+    from repro.core.samplers import bias_code
+    W = order.shape[0]
+    if lane_u is not None:
+        return lane_bias[order], lane_u[order]
+    code = jnp.full((W,), bias_code(scfg.bias), jnp.int32)
+    return code, jax.random.uniform(hop_key, (W,))[order]
+
+
+def _hop_fused(index, scfg, sched_cfg, carry: _Carry, step, hop_key,
+               lane_bias=None, lane_u=None, lane_limit=None) -> _Carry:
+    """Lexsort layout feeding the fused convergence-tiered kernel."""
+    from repro.kernels import fused_step as kfused
+    W = carry.cur_node.shape[0]
+    node_key = jnp.where(carry.alive, carry.cur_node, index.node_capacity + 1)
+    perm = jnp.lexsort((carry.cur_time, node_key)).astype(jnp.int32)
+    s_node = carry.cur_node[perm]
+    s_time = carry.cur_time[perm]
+    s_alive = carry.alive[perm]
+    code, u = _fused_draws(index, scfg, hop_key, perm, lane_bias, lane_u)
+
+    out = kfused.fused_walk_step(index, s_node, s_time, code, u,
+                                 scfg.mode, sched_cfg)
+    has_next_s = s_alive & (out.n > 0)
+    if lane_limit is not None:
+        has_next_s = has_next_s & lane_limit[perm]
+    inv = jnp.zeros((W,), jnp.int32).at[perm].set(
+        jnp.arange(W, dtype=jnp.int32))
+    return _advance(carry, step, out.dst[inv], out.ts[inv], has_next_s[inv])
+
+
+def _hop_fused_bucket(index, scfg, sched_cfg, carry: _Carry, step, hop_key,
+                      lane_bias=None, lane_u=None,
+                      lane_limit=None) -> _Carry:
+    """Bucket-regrouped layout feeding the fused kernel (DESIGN.md §14).
+
+    The kernel returns the gathered dst/ts directly — the hop issues no
+    edge-array gathers at all, unlike ``_hop_tiled_bucket``.
+    """
+    from repro.kernels import fused_step as kfused
+    lane, s_node, s_time, s_prev, s_alive = _bucket_prologue(
+        index, sched_cfg, carry)
+    code, u = _fused_draws(index, scfg, hop_key, lane, lane_bias, lane_u)
+
+    out = kfused.fused_walk_step(index, s_node, s_time, code, u,
+                                 scfg.mode, sched_cfg)
+    has_next_s = s_alive & (out.n > 0)
+    if lane_limit is not None:
+        has_next_s = has_next_s & lane_limit[lane]
+    return _advance_lanes(carry, lane, step, s_node, s_time, s_prev,
+                          out.dst, out.ts, has_next_s)
+
+
 def _advance(carry: _Carry, step, next_node, next_time, has_next) -> _Carry:
     """Advance with lanes in walk order (fullwalk / lexsort paths)."""
     nodes = carry.nodes.at[:, step + 1].set(
@@ -582,6 +648,12 @@ def _generate_walks_impl(index: TemporalIndex, key: jax.Array,
     bucket = sched_cfg.regroup == "bucket"
     if sched_cfg.regroup not in ("bucket", "lexsort"):
         raise ValueError(f"unknown regroup {sched_cfg.regroup!r}")
+    if path == "fused" and (scfg.node2vec_p != 1.0
+                            or scfg.node2vec_q != 1.0):
+        raise ValueError(
+            "path='fused' does not support node2vec second-order bias "
+            "(the rejection loop re-draws outside the kernel); use "
+            "'fullwalk'|'grouped'|'tiled'")
 
     def body(carry, step):
         hop_key = jax.random.fold_in(walk_key, step)
@@ -619,6 +691,13 @@ def _generate_walks_impl(index: TemporalIndex, key: jax.Array,
             else:
                 carry = _hop_tiled(index, scfg, sched_cfg, carry, write_pos,
                                    hop_key)
+        elif path == "fused":
+            if bucket:
+                carry = _hop_fused_bucket(index, scfg, sched_cfg, carry,
+                                          write_pos, hop_key, **lane_kw)
+            else:
+                carry = _hop_fused(index, scfg, sched_cfg, carry, write_pos,
+                                   hop_key, **lane_kw)
         else:
             raise ValueError(f"unknown scheduler path {path!r}")
         return carry, st
@@ -645,8 +724,9 @@ def _check_lane_support(wcfg: WalkConfig, scfg: SamplerConfig,
             "(set node2vec_p=node2vec_q=1.0)")
     if sched_cfg.path == "tiled":
         raise ValueError(
-            "per-lane batches support paths 'fullwalk'|'grouped'; the "
-            "tiled Pallas kernel compiles a single bias per dispatch")
+            "per-lane batches support paths 'fullwalk'|'grouped'|'fused'; "
+            "the tiled Pallas kernel compiles a single bias per dispatch "
+            "(the fused kernel dispatches per-lane bias codes)")
     if lanes.start_node.shape[0] != wcfg.num_walks:
         raise ValueError(
             f"lane arrays have {lanes.start_node.shape[0]} lanes but "

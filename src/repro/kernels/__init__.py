@@ -1,7 +1,10 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
 walk_step.py     — cooperative walk step (smem-panel analog, §2.4.3)
+fused_step.py    — fused convergence-tiered hop: prefix lookup + draw +
+                   gather in one dispatch, degree-tiered lanes (§2.4.3-4)
 weight_prefix.py — fused exp + blocked scan (ingestion "weight" stage)
 ops.py           — jit'd dispatch wrappers (kernel vs fallback)
 ref.py           — pure-jnp oracles
+runtime.py       — shared interpret/backend auto-detect
 """

@@ -19,19 +19,15 @@ from repro.core.temporal_index import (
     node_range,
     temporal_cutoff,
 )
+from repro.kernels.runtime import on_tpu, resolve_interpret  # noqa: F401
 from repro.kernels.walk_step import walk_step_tiled
-
-
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def walk_step(index: TemporalIndex, s_node: jax.Array, s_time: jax.Array,
               u: jax.Array, scfg: SamplerConfig, cfg: SchedulerConfig,
               *, interpret: bool | None = None):
     """Hop search+sample for walks sorted by node. Returns (k_global, n)."""
-    if interpret is None:
-        interpret = not on_tpu()
+    interpret = resolve_interpret(interpret)
     W = s_node.shape[0]
     E = index.edge_capacity
     TW, TE = cfg.tile_walks, cfg.tile_edges

@@ -10,7 +10,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.samplers import index_exponential, index_linear, index_uniform
+from repro.core.samplers import (
+    BIAS_LINEAR,
+    BIAS_UNIFORM,
+    index_exponential,
+    index_linear,
+    index_pick_lanes,
+    index_uniform,
+)
 
 
 def walk_step_ref(ns_ts, ns_dst, pfx, pfx_shift,
@@ -76,6 +83,62 @@ def walk_step_ref(ns_ts, ns_dst, pfx, pfx_shift,
     dst_pick = jnp.where(has, ns_dst[k], 0)
     ts_pick = jnp.where(has, ns_ts[k], 0)
     return k_local, n, dst_pick, ts_pick
+
+
+def fused_step_ref(ns_ts, ns_dst, pexp, plin, a, b, time, code, u, tbase,
+                   *, mode: str):
+    """Oracle for kernels/fused_step.py — tier-free global semantics.
+
+    ``pexp``/``plin`` are the full exclusive prefix arrays (length E+1);
+    ``a``/``b`` are global region bounds; ``code`` carries per-lane bias
+    codes (samplers.BIAS_CODES). Returns (k_global, n, dst, ts) with the
+    same dead-lane zeroing as the fused kernel, so equality is bitwise.
+    O(W·E) dense counting — fine as an oracle.
+    """
+    E = ns_ts.shape[0]
+    pos = jnp.arange(E, dtype=jnp.int32)
+    in_region = (pos[None, :] >= a[:, None]) & (pos[None, :] < b[:, None])
+    cnt = jnp.sum(in_region & (ns_ts[None, :] <= time[:, None]), axis=1)
+    c = a + cnt.astype(jnp.int32)
+    n = b - c
+
+    if mode == "index":
+        k = c + index_pick_lanes(code, u, n)
+    elif mode == "weight":
+        fb = c + index_uniform(u, n)
+        pes = pexp[1:E + 1]
+        pick_region = (pos[None, :] >= c[:, None]) \
+            & (pos[None, :] < b[:, None])
+        # exponential (samplers.weighted_pick_exp expression order)
+        total_e = pexp[b] - pexp[c]
+        target_e = pexp[c] + u * total_e
+        k_exp = c + jnp.sum(
+            pick_region & (pes[None, :] < target_e[:, None]),
+            axis=1).astype(jnp.int32)
+        k_exp = jnp.where(total_e > 0, k_exp, fb)
+        # linear (samplers.weighted_pick_linear dual-prefix form)
+        ts_c = ns_ts[jnp.clip(c, 0, E - 1)]
+        delta = (ts_c - tbase).astype(jnp.float32)
+        pls = plin[1:E + 1]
+        s = (pls[None, :] - plin[c][:, None]) \
+            - (pos[None, :] + 1 - c[:, None]).astype(jnp.float32) \
+            * delta[:, None]
+        total_l = (plin[b] - plin[c]) - n.astype(jnp.float32) * delta
+        k_lin = c + jnp.sum(
+            pick_region & (s < (u * total_l)[:, None]),
+            axis=1).astype(jnp.int32)
+        k_lin = jnp.where(total_l > 0, k_lin, fb)
+        k = jnp.where(code == BIAS_UNIFORM, fb,
+                      jnp.where(code == BIAS_LINEAR, k_lin, k_exp))
+        k = jnp.clip(k, c, jnp.maximum(b - 1, c))
+    else:
+        raise ValueError(mode)
+
+    k = jnp.clip(k, 0, E - 1)
+    has = n > 0
+    k = jnp.where(has, k, 0)
+    return (k, n, jnp.where(has, ns_dst[k], 0),
+            jnp.where(has, ns_ts[k], 0))
 
 
 def weight_prefix_ref(dt: jax.Array, valid: jax.Array,

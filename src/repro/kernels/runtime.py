@@ -1,0 +1,23 @@
+"""Shared backend detection for the Pallas kernel entry points.
+
+Every kernel wrapper takes ``interpret: bool | None = None`` and resolves
+it here: ``None`` auto-detects (compiled on a TPU backend, interpret mode
+everywhere else), an explicit bool always wins. Keeping the resolver in
+one leaf module lets ``ops``, ``walk_step``, ``weight_prefix``, and
+``fused_step`` share it without import cycles.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve an ``interpret`` kwarg: None → auto-detect by backend."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)

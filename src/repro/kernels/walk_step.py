@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.samplers import index_exponential, index_linear, index_uniform
+from repro.kernels.runtime import resolve_interpret
 
 
 def _count_true(mask: jax.Array) -> jax.Array:
@@ -133,7 +134,7 @@ def _kernel(mode: str, bias: str,
 def walk_step_tiled(ns_ts, ns_dst, pfx, pfx_shift,
                     base_blocks, time, lo, hi, u, tbase,
                     *, mode: str, bias: str, tile_walks: int,
-                    tile_edges: int, interpret: bool = True):
+                    tile_edges: int, interpret: bool | None = None):
     """Run the cooperative walk-step kernel over all tiles.
 
     Args:
@@ -146,8 +147,11 @@ def walk_step_tiled(ns_ts, ns_dst, pfx, pfx_shift,
         sorted by node; lo/hi are tile-local row offsets; tbase is the
         per-walk node t_base gather (used by the linear bias only).
 
+    ``interpret=None`` auto-detects (compiled on TPU, interpret elsewhere).
+
     Returns (k_local, n, dst_pick, ts_pick) — k_local is tile-local.
     """
+    interpret = resolve_interpret(interpret)
     W = time.shape[0]
     E = ns_ts.shape[0]
     TW, TE = tile_walks, tile_edges

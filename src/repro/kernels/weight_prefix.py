@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(scale, dt_ref, valid_ref, out_ref, carry_ref):
     i = pl.program_id(0)
@@ -36,9 +38,15 @@ def _kernel(scale, dt_ref, valid_ref, out_ref, carry_ref):
 @functools.partial(jax.jit,
                    static_argnames=("scale", "tile", "interpret"))
 def weight_prefix(dt: jax.Array, valid: jax.Array, *, scale: float = 1.0,
-                  tile: int = 1024, interpret: bool = True) -> jax.Array:
-    """Fused exp+scan. Returns exclusive prefix P of length E+1, P[0]=0."""
+                  tile: int = 1024,
+                  interpret: bool | None = None) -> jax.Array:
+    """Fused exp+scan. Returns exclusive prefix P of length E+1, P[0]=0.
+
+    ``interpret=None`` auto-detects (compiled on TPU, interpret elsewhere).
+    """
     from jax.experimental.pallas import tpu as pltpu
+
+    interpret = resolve_interpret(interpret)
 
     E = dt.shape[0]
     assert E % tile == 0, (E, tile)

@@ -150,7 +150,9 @@ class WalkService:
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         # the tiled kernel compiles one bias per dispatch; serve on the
-        # grouped path instead (same walks — tested path equivalence)
+        # grouped path instead (same walks — tested path equivalence).
+        # The fused kernel dispatches per-lane bias codes, so path="fused"
+        # passes through and serves heterogeneous batches in-kernel.
         self.sched_cfg = (dataclasses.replace(cfg.scheduler, path="grouped")
                          if cfg.scheduler.path == "tiled" else cfg.scheduler)
         ns = num_shards or serve_cfg.num_shards

@@ -1,0 +1,285 @@
+"""Differential suite for the fused convergence-tiered walk-step kernel
+(kernels/fused_step.py, DESIGN.md §14).
+
+Three layers of evidence, all bitwise:
+
+* kernel vs the ``kernels/ref.py`` oracle (``fused_step_ref``) — random
+  graphs (hypothesis-driven), mixed per-lane bias codes, all tile shapes,
+  and the crafted tile-boundary lanes from tests/test_tile_boundary.py
+  (exact-fit ``hi == 2·TE`` regions, empty regions at the window edge,
+  oversize tier-L lanes);
+* whole-engine ``path="fused"`` vs the ``grouped``-``bucket`` reference
+  path across {uniform, linear, exponential} × {index, weight} × both
+  start modes (the acceptance criterion), plus lexsort flavor and
+  per-lane heterogeneous-bias batches;
+* degenerate shapes: empty window, single-walk (W == TW == 1),
+  exact-tile-fit and oversize-degree lanes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core.edge_store import store_from_arrays
+from repro.core.temporal_index import build_index, node_range
+from repro.core.walk_engine import LaneParams, generate_walk_lanes, generate_walks
+from repro.data.synthetic import powerlaw_temporal_graph
+from repro.kernels import ref as kref
+from repro.kernels.fused_step import fused_walk_step
+
+# the crafted boundary graph (exact-fit / empty / oversize lanes)
+from test_tile_boundary import _lanes as _boundary_lanes
+from test_tile_boundary import _make_index as _boundary_index
+from test_tile_boundary import TE as BTE
+from test_tile_boundary import TW as BTW
+
+BIASES = ["uniform", "linear", "exponential"]
+
+
+def _setup(E=2048, N=128, W=512, seed=2):
+    g = powerlaw_temporal_graph(N, E - 100, seed=seed)
+    store = store_from_arrays(g.src % N, g.dst % N, g.ts,
+                              edge_capacity=E, node_capacity=N)
+    idx = build_index(store, N)
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    nodes = jnp.sort(jax.random.randint(k1, (W,), 0, N))
+    times = jax.random.randint(k2, (W,), 0, 10_000)
+    u = jax.random.uniform(k3, (W,))
+    code = jax.random.randint(k4, (W,), 0, 3)
+    return idx, nodes, times, u, code
+
+
+def _assert_matches_oracle(idx, nodes, times, u, code, mode, TW, TE):
+    E = idx.edge_capacity
+    a, b = node_range(idx, nodes)
+    tbase = idx.node_tbase[jnp.clip(nodes, 0, idx.node_capacity - 1)]
+    cfg = SchedulerConfig(path="fused", tile_walks=TW, tile_edges=TE)
+    got = fused_walk_step(idx, nodes, times, code, u, mode, cfg,
+                          interpret=True)
+    want = kref.fused_step_ref(idx.ns_ts[:E], idx.ns_dst[:E], idx.pexp,
+                               idx.plin, a, b, times, code, u, tbase,
+                               mode=mode)
+    for name, g_, w_ in zip(("k", "n", "dst", "ts"), got[:4], want):
+        np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_),
+                                      err_msg=f"{mode}/{name}")
+    return got
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["index", "weight"])
+@pytest.mark.parametrize("TW,TE", [(128, 256), (64, 512), (256, 128)])
+def test_fused_matches_oracle(mode, TW, TE):
+    """Bit-identical to fused_step_ref with mixed per-lane bias codes;
+    every tile shape populates both tiers (asserted)."""
+    idx, nodes, times, u, code = _setup()
+    got = _assert_matches_oracle(idx, nodes, times, u, code, mode, TW, TE)
+    tiers = np.asarray(got.tiers)
+    assert tiers[0] > 0 and tiers[1] > 0, tiers
+    assert tiers[0] + tiers[1] == nodes.shape[0]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 160), st.integers(50, 1800), st.integers(0, 999),
+       st.sampled_from([32, 64, 128]),
+       st.sampled_from([128, 256, 1024]),
+       st.sampled_from(["index", "weight"]))
+def test_fused_matches_oracle_random_graphs(N, num_edges, seed, TW, TE,
+                                            mode):
+    """Property test: random power-law graphs, query times, bias codes."""
+    E, W = 2048, 128
+    g = powerlaw_temporal_graph(N, num_edges, seed=seed)
+    store = store_from_arrays(g.src % N, g.dst % N, g.ts,
+                              edge_capacity=E, node_capacity=N)
+    idx = build_index(store, N)
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    nodes = jnp.sort(jax.random.randint(k1, (W,), 0, N))
+    times = jax.random.randint(k2, (W,), -100, 10_000)
+    u = jax.random.uniform(k3, (W,))
+    code = jax.random.randint(k4, (W,), 0, 3)
+    _assert_matches_oracle(idx, nodes, times, u, code, mode, TW, TE)
+
+
+@pytest.mark.parametrize("mode", ["index", "weight"])
+def test_fused_boundary_lanes(mode):
+    """The crafted tile-boundary lanes: exact-fit (hi == 2·TE) head and
+    tail regions, empty regions at the store's end, and the oversize
+    node-3 lane (span 20 > 2·8) which the fused kernel serves in-kernel
+    via the tier-L sweep — the seed path used a jnp fallback for it."""
+    idx = _boundary_index()
+    s_node, s_time, u = _boundary_lanes()
+    code = jnp.asarray([i % 3 for i in range(16)], jnp.int32)
+    got = _assert_matches_oracle(idx, s_node, s_time, u, code, mode,
+                                 BTW, BTE)
+    tiers = np.asarray(got.tiers)
+    assert tiers[1] == 4          # the four node-3 oversize lanes
+    assert tiers[2] >= 2          # their regions span >= 2 swept blocks
+
+
+def test_fused_single_walk():
+    """Degenerate W == TW == 1: one lane, one tile."""
+    idx = _boundary_index()
+    for node, time in ((3, 305), (0, 15), (7, 0)):
+        got = _assert_matches_oracle(
+            idx, jnp.asarray([node], jnp.int32), jnp.asarray([time], jnp.int32),
+            jnp.asarray([0.7], jnp.float32), jnp.asarray([2], jnp.int32),
+            "weight", 1, BTE)
+        assert got.k.shape == (1,)
+
+
+def test_fused_empty_window():
+    """A window with zero live edges: every lane dead, all outputs zero."""
+    store = store_from_arrays([], [], [], edge_capacity=512,
+                              node_capacity=8)
+    idx = build_index(store, 8)
+    W = 8
+    nodes = jnp.arange(W, dtype=jnp.int32) % 8
+    times = jnp.zeros((W,), jnp.int32)
+    u = jnp.full((W,), 0.5, jnp.float32)
+    code = jnp.arange(W, dtype=jnp.int32) % 3
+    for mode in ("index", "weight"):
+        got = _assert_matches_oracle(idx, nodes, times, u, code, mode,
+                                     4, 128)
+        assert int(jnp.sum(got.n)) == 0
+        assert int(jnp.sum(jnp.abs(got.dst))) == 0
+
+
+# ---------------------------------------------------------------------------
+# Whole-engine equivalence (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _assert_same_walks(ref, got):
+    assert jnp.array_equal(ref.nodes, got.nodes)
+    assert jnp.array_equal(ref.times, got.times)
+    assert jnp.array_equal(ref.lengths, got.lengths)
+
+
+@pytest.mark.parametrize("start_mode", ["nodes", "edges"])
+@pytest.mark.parametrize("mode", ["index", "weight"])
+@pytest.mark.parametrize("bias", BIASES)
+def test_fused_path_matches_grouped_bucket(start_mode, mode, bias, key):
+    """path='fused' emits bit-identical walks to the grouped-bucket
+    reference for all three biases and both start modes."""
+    idx, *_ = _setup(seed=7)
+    wcfg = WalkConfig(num_walks=256, max_length=8, start_mode=start_mode)
+    scfg = SamplerConfig(bias=bias, mode=mode)
+    tiles = dict(tile_walks=64, tile_edges=256)
+    ref = generate_walks(idx, key, wcfg, scfg,
+                         SchedulerConfig(path="grouped", regroup="bucket",
+                                         **tiles))
+    got = generate_walks(idx, key, wcfg, scfg,
+                         SchedulerConfig(path="fused", regroup="bucket",
+                                         **tiles))
+    _assert_same_walks(ref, got)
+
+
+@pytest.mark.parametrize("bias", ["exponential", "linear"])
+def test_fused_lexsort_boundary_graph_matches_fullwalk(bias, key):
+    """Whole-engine regression on the boundary graph: fused == fullwalk
+    byte-for-byte with tiny tiles, lexsort flavor, weight biases."""
+    idx = _boundary_index()
+    wcfg = WalkConfig(num_walks=64, max_length=8, start_mode="nodes")
+    scfg = SamplerConfig(bias=bias, mode="weight")
+    ref = generate_walks(idx, key, wcfg, scfg,
+                         SchedulerConfig(path="fullwalk"))
+    got = generate_walks(idx, key, wcfg, scfg,
+                         SchedulerConfig(path="fused", regroup="lexsort",
+                                         tile_walks=8, tile_edges=BTE))
+    _assert_same_walks(ref, got)
+
+
+def test_fused_lane_batch_matches_grouped(key):
+    """Heterogeneous per-lane bias codes through generate_walk_lanes:
+    the fused kernel's in-kernel code dispatch == the grouped path's
+    jnp per-lane dispatch, including per-lane max_len masking."""
+    idx, *_ = _setup(seed=11)
+    W = 128
+    wcfg = WalkConfig(num_walks=W, max_length=6, start_mode="nodes")
+    scfg = SamplerConfig(mode="index")
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    lanes = LaneParams(
+        start_node=jax.random.randint(k1, (W,), 0, idx.node_capacity),
+        bias=jnp.arange(W, dtype=jnp.int32) % 3,
+        start_bias=jnp.zeros((W,), jnp.int32),
+        max_len=2 + jnp.arange(W, dtype=jnp.int32) % 5,
+        rid=jnp.arange(W, dtype=jnp.int32) // 16,
+        wid=jnp.arange(W, dtype=jnp.int32) % 16,
+        active=jnp.arange(W) < W - 8,
+    )
+    tiles = dict(tile_walks=32, tile_edges=256)
+    ref = generate_walk_lanes(idx, key, lanes, wcfg, scfg,
+                              SchedulerConfig(path="grouped", **tiles))
+    got = generate_walk_lanes(idx, key, lanes, wcfg, scfg,
+                              SchedulerConfig(path="fused", **tiles))
+    _assert_same_walks(ref, got)
+
+
+def test_fused_rejects_node2vec(key):
+    idx, *_ = _setup(seed=7)
+    wcfg = WalkConfig(num_walks=64, max_length=4, start_mode="nodes")
+    scfg = SamplerConfig(mode="index", node2vec_p=0.5)
+    with pytest.raises(ValueError, match="fused"):
+        generate_walks(idx, key, wcfg, scfg, SchedulerConfig(path="fused"))
+
+
+# ---------------------------------------------------------------------------
+# interpret-default unification (kernels/runtime.py)
+# ---------------------------------------------------------------------------
+
+
+def test_interpret_defaults_resolve_by_backend(monkeypatch):
+    """All kernel entry points default interpret=None -> auto-detect:
+    compiled when a TPU backend is present, interpret mode elsewhere."""
+    import inspect
+
+    from repro.kernels import runtime
+    from repro.kernels.ops import walk_step
+    from repro.kernels.walk_step import walk_step_tiled
+    from repro.kernels.weight_prefix import weight_prefix
+
+    for fn in (walk_step, walk_step_tiled, weight_prefix, fused_walk_step):
+        sig = inspect.signature(fn)
+        assert sig.parameters["interpret"].default is None, fn
+
+    assert runtime.resolve_interpret(True) is True
+    assert runtime.resolve_interpret(False) is False
+    # default backend in this environment is not TPU -> interpret mode
+    assert runtime.resolve_interpret(None) is True
+    # with a TPU backend present the default resolves to compiled mode
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert runtime.on_tpu()
+    assert runtime.resolve_interpret(None) is False
+    assert runtime.resolve_interpret(True) is True   # explicit override wins
+
+
+# ---------------------------------------------------------------------------
+# dispatch_stats fused tiers
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_stats_reports_fused_tiers(key):
+    """The new tier stats partition alive lanes and count sweep blocks."""
+    from repro.core import scheduler as sched
+
+    idx = _boundary_index()
+    wcfg = WalkConfig(num_walks=64, max_length=4, start_mode="nodes")
+    res = generate_walks(idx, key, wcfg, SamplerConfig(),
+                         SchedulerConfig(path="fused", tile_walks=8,
+                                         tile_edges=BTE),
+                         collect_stats=True)
+    st_ = np.asarray(res.stats)
+    alive = st_[:, sched.STAT_ALIVE]
+    small = st_[:, sched.STAT_FUSED_SMALL]
+    big = st_[:, sched.STAT_FUSED_BIG]
+    blocks = st_[:, sched.STAT_FUSED_BLOCKS]
+    np.testing.assert_array_equal(small + big, alive)
+    # node 3 (degree 20 > 2·TE = 16) carries walks -> tier-L lanes appear
+    assert big.sum() > 0
+    assert (blocks >= 2 * big).all()   # span > 2·TE models >= 3 blocks

@@ -1,0 +1,25 @@
+"""Fast-lane golden test for the dispatch-plane tier distribution.
+
+Promotes benchmarks/tier_distribution.py to a regression gate: on the
+fixed seeded graph in ``GOLDEN_DATASET``, ``dispatch_stats`` must report
+exactly these tier counts. The values are checked in; any change to the
+tier rules (solo/group/mega thresholds, the fused tier-S/tier-L split of
+DESIGN.md §14, or the block-sweep count model) shows up here as an
+integer diff and must be re-baselined deliberately.
+"""
+from benchmarks.tier_distribution import golden_counts
+
+EXPECTED = {
+    "solo": 93,
+    "group_smem": 162,
+    "group_global": 4,
+    "mega": 0,
+    "fused_small": 3064,
+    "fused_big": 600,
+    "fused_blocks": 2400,
+}
+
+
+def test_tier_distribution_golden():
+    got = golden_counts()
+    assert got == EXPECTED, f"tier counts drifted: {got} != {EXPECTED}"
