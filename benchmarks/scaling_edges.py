@@ -8,6 +8,10 @@
     Shard counts sweep the divisors of the visible device count; fake an
     8-device host with XLA_FLAGS=--xla_force_host_platform_device_count=8
     (see benchmarks/README.md) to get the full curve on CPU.
+(d) beyond-paper: placement-policy load balance (DESIGN.md §15) — a Zipf
+    skew sweep comparing per-shard edge loads under range / hash / skew
+    node placement. Pure host math (``owner_np`` over the edge stream),
+    so it needs no devices; ``--emit-json`` writes BENCH_shard.json.
 """
 from __future__ import annotations
 
@@ -16,7 +20,8 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks import common
+from benchmarks.common import emit, timeit, write_json
 from repro.configs.base import (
     EngineConfig,
     SamplerConfig,
@@ -47,13 +52,16 @@ def run_sharded():
     """(c) streaming replay throughput vs shard count."""
     devs = len(jax.devices())
     counts = [d for d in (1, 2, 4, 8) if d <= devs]
-    g = powerlaw_temporal_graph(SHARD_NODES, SHARD_EDGES, seed=23)
-    wcfg = WalkConfig(num_walks=SHARD_WALKS, max_length=16,
+    nodes = 512 if common.SMALL else SHARD_NODES
+    n_edges = 20_000 if common.SMALL else SHARD_EDGES
+    n_walks = 512 if common.SMALL else SHARD_WALKS
+    g = powerlaw_temporal_graph(nodes, n_edges, seed=23)
+    wcfg = WalkConfig(num_walks=n_walks, max_length=16,
                       start_mode="all_nodes")
-    batch_cap = SHARD_EDGES // SHARD_BATCHES + 8
+    batch_cap = n_edges // SHARD_BATCHES + 8
     cfg = EngineConfig(
         window=WindowConfig(duration=5000, edge_capacity=1 << 17,
-                            node_capacity=SHARD_NODES),
+                            node_capacity=nodes),
         sampler=SamplerConfig(bias="exponential", mode="index"),
         scheduler=SchedulerConfig(path="grouped", regroup="bucket"),
         # exchange buckets must cover the worst case of one sender routing
@@ -83,8 +91,8 @@ def run_sharded():
         lambda: StreamingEngine(cfg, batch_capacity=batch_cap))
     secs = out[-1]
     emit("fig7/single_device_ref", secs * 1e6,
-         f"ingest_edges_s={SHARD_EDGES / secs:.0f};"
-         f"walks_s={SHARD_BATCHES * SHARD_WALKS / secs:.0f}")
+         f"ingest_edges_s={n_edges / secs:.0f};"
+         f"walks_s={SHARD_BATCHES * n_walks / secs:.0f}")
 
     rows = []
     for D in counts:
@@ -92,8 +100,8 @@ def run_sharded():
             lambda: DistributedStreamingEngine(cfg, batch_capacity=batch_cap,
                                                num_shards=D))
         drops = int(stats.exchange_drops.sum() + stats.walk_drops.sum())
-        edges_s = SHARD_EDGES / secs
-        walks_s = SHARD_BATCHES * SHARD_WALKS / secs
+        edges_s = n_edges / secs
+        walks_s = SHARD_BATCHES * n_walks / secs
         emit(f"fig7/shards={D}", secs * 1e6,
              f"ingest_edges_s={edges_s:.0f};walks_s={walks_s:.0f};"
              f"edges_s_per_dev={edges_s / D:.0f};"
@@ -102,9 +110,59 @@ def run_sharded():
     return rows
 
 
+def run_placement_sweep():
+    """(d) per-shard edge load under Zipf skew: range vs hash vs skew.
+
+    Host-side placement math only (``owner_np`` over the stream's source
+    nodes — the same rule the sharded ingest applies on device), so the
+    sweep runs at full size regardless of the visible device count. The
+    headline number per (zipf, policy) cell is max/mean per-shard edge
+    load: 1.0 is a perfectly balanced window, range placement melts as
+    hubs concentrate in one node-id range, and the measured-load skew
+    overrides (SkewPlacement.from_loads, DESIGN.md §15) pull it back.
+    """
+    from repro.distributed.placement import (
+        HashPlacement,
+        RangePlacement,
+        SkewPlacement,
+    )
+
+    D = 8
+    nn = 1024 if common.SMALL else 8192
+    ne = 20_000 if common.SMALL else 200_000
+    payload = {"num_shards": D, "num_nodes": nn, "num_edges": ne,
+               "hot_k": 16, "zipf": {}}
+    for zipf in (0.8, 1.2, 1.6):
+        g = powerlaw_temporal_graph(nn, ne, skew=zipf, seed=31)
+        loads = np.bincount(g.src, minlength=nn).astype(np.float64)
+        rp = RangePlacement(num_shards=D, node_capacity=nn)
+        policies = (rp, HashPlacement.make(D, nn),
+                    SkewPlacement.from_loads(rp, loads, k=16))
+        cell = {}
+        for plc in policies:
+            per = np.bincount(plc.owner_np(g.src), minlength=D
+                              ).astype(np.float64)
+            imb = float(per.max() / max(per.mean(), 1e-9))
+            cell[plc.kind] = {"per_shard_edges": per.tolist(),
+                              "max_edges": float(per.max()),
+                              "mean_edges": float(per.mean()),
+                              "max_over_mean": imb}
+            emit(f"fig7/placement/zipf={zipf}/{plc.kind}", 0.0,
+                 f"max_edges={per.max():.0f};mean_edges={per.mean():.1f};"
+                 f"max_over_mean={imb:.3f}")
+        assert cell["skew"]["max_over_mean"] <= \
+            cell["range"]["max_over_mean"] + 1e-9, \
+            "skew overrides must not worsen range imbalance"
+        payload["zipf"][str(zipf)] = cell
+    write_json("shard", payload)
+    return payload
+
+
 def run():
     rows = []
-    for E in EDGE_COUNTS:
+    # --small (nightly CI): cap the edge sweep so the suite stays quick
+    counts = EDGE_COUNTS[:3] if common.SMALL else EDGE_COUNTS
+    for E in counts:
         nn = max(256, E // 64)
         g = powerlaw_temporal_graph(nn, E, seed=11)
         # (a) ingestion from scratch (batch pad + sort + index build)
@@ -138,6 +196,7 @@ def run():
         spread = (max(vals) - min(vals)) / max(np.mean(vals), 1e-9)
         emit(f"fig7/flatness/{k}", 0.0, f"spread={100*spread:.1f}%")
     rows.append(("sharded", run_sharded()))
+    rows.append(("placement", run_placement_sweep()))
     return rows
 
 

@@ -114,6 +114,14 @@ class ShardConfig:
     ``walk_bucket_capacity`` is the walk-migration analog (mirrors
     ``make_distributed_walker``'s bucket knob); ``walk_slots`` bounds the
     walks resident on one shard between hops.
+
+    ``placement`` selects the node-ownership policy
+    (repro.distributed.placement, DESIGN.md §15): ``range`` is the
+    bit-identity baseline ``owner(v) = v // ceil(nc / D)``; ``hash``
+    decorrelates owners from id locality through a multiplicative hash +
+    ``hash_buckets``-entry routing table; ``skew`` starts as range and
+    grows a measured top-``hot_k`` hub override table via
+    ``DistributedStreamingEngine.rebalance``.
     """
 
     num_shards: int = 0                # 0 = one shard per visible device
@@ -121,6 +129,9 @@ class ShardConfig:
     exchange_capacity: int = 1 << 12   # batch edges per (sender, dest) pair
     walk_slots: int = 1 << 12          # resident walk rows per shard
     walk_bucket_capacity: int = 1 << 10  # migrating walks per (sender, dest)
+    placement: str = "range"           # range | hash | skew (DESIGN.md §15)
+    hash_buckets: int = 256            # routing-table entries (power of two)
+    hot_k: int = 8                     # hub overrides built by rebalance()
 
 
 @dataclass(frozen=True)

@@ -3,9 +3,11 @@ walk migration over ``all_to_all`` (shard_map).
 
 Scale-out design (KnightKing-style walk migration, recast as collectives):
 
-* nodes are range-partitioned across devices (`owner(v) = v // range`);
-  each device holds the dual-index of exactly its nodes' out-edges, so a
-  resident walk's Γ_t(v) is always served locally;
+* nodes are partitioned across devices by a pluggable ``Placement``
+  policy (repro/distributed/placement.py, DESIGN.md §15; default: range,
+  ``owner(v) = v // range``); each device holds the dual-index of exactly
+  its nodes' out-edges, so a resident walk's Γ_t(v) is always served
+  locally;
 * each step: (1) local hop via the same sampler stack as the single-device
   engine, (2) walks bucketed by destination owner, (3) one ``all_to_all``
   moves walk payloads (id, node, time + trace) to their new owners,
@@ -70,11 +72,15 @@ class ShardedWalkState(NamedTuple):
 
 
 def partition_edges(src, dst, ts, num_nodes: int, num_shards: int,
-                    edge_capacity_per_shard: int):
-    """Host-side: range-partition edges by source-node owner; build one
-    TemporalIndex per shard, stacked on a leading device axis."""
-    rng_size = math.ceil(num_nodes / num_shards)
-    owners = np.asarray(src) // rng_size
+                    edge_capacity_per_shard: int, placement=None):
+    """Host-side: partition edges by source-node owner (``placement``,
+    default range policy); build one TemporalIndex per shard, stacked on a
+    leading device axis. Returns (stacked index, placement)."""
+    if placement is None:
+        from repro.distributed.placement import RangePlacement
+        placement = RangePlacement(num_shards=num_shards,
+                                   node_capacity=num_nodes)
+    owners = placement.owner_np(np.asarray(src))
     stores = []
     for d in range(num_shards):
         sel = owners == d
@@ -85,12 +91,12 @@ def partition_edges(src, dst, ts, num_nodes: int, num_shards: int,
             node_capacity=num_nodes))
     indexes = [build_index(s, num_nodes) for s in stores]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *indexes)
-    return stacked, rng_size
+    return stacked, placement
 
 
 def init_sharded_walks(num_shards: int, walks_per_shard: int,
                        max_length: int, start_nodes, start_times,
-                       range_size: int) -> ShardedWalkState:
+                       placement) -> ShardedWalkState:
     """Place walks on their start node's owner (host-side)."""
     D, Wd, L = num_shards, walks_per_shard, max_length
     wid = np.full((D, Wd), -1, np.int32)
@@ -101,9 +107,10 @@ def init_sharded_walks(num_shards: int, walks_per_shard: int,
     tt = np.full((D, Wd, L + 1), NODE_PAD, np.int32)
     ln = np.zeros((D, Wd), np.int32)
     fill = np.zeros(D, np.int32)
+    start_owner = placement.owner_np(np.asarray(start_nodes))
     for i, (v, t) in enumerate(zip(np.asarray(start_nodes),
                                    np.asarray(start_times))):
-        d = int(v) // range_size
+        d = int(start_owner[i])
         s = fill[d]
         if s >= Wd:
             raise ValueError(f"shard {d} start overflow")
@@ -215,7 +222,7 @@ def exchange_by_owner(axis: str, num_shards: int, capacity: int,
 
 
 def make_distributed_walker(mesh: Mesh, axis: str, index_stacked,
-                            scfg: SamplerConfig, *, range_size: int,
+                            scfg: SamplerConfig, *, placement,
                             max_length: int, bucket_capacity: int):
     """Returns a jitted function advancing all walks ``max_length`` steps."""
     D = mesh.devices.size
@@ -243,7 +250,7 @@ def make_distributed_walker(mesh: Mesh, axis: str, index_stacked,
 
         # dead-but-occupied walks stay put (their trace lives here); only
         # ALIVE walks migrate to their destination's owner.
-        owner = jnp.clip(nn // range_size, 0, D - 1)
+        owner = placement.owner(nn)
         ((r_wid, r_node, r_time, r_tn, r_tt, r_ln), fits,
          n_drop) = exchange_by_owner(
             axis, D, bucket_capacity, owner, alive & occupied,

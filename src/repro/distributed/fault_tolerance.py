@@ -1,11 +1,18 @@
-"""Fault tolerance for long-running training: checkpoint/restart driver,
-straggler detection, heartbeat bookkeeping.
+"""Fault tolerance for long-running training AND streaming: checkpoint/
+restart drivers, straggler detection, heartbeat bookkeeping.
 
-Design for 1000+ nodes (DESIGN.md §6): the entire training state is
-(params, opt_state, data cursor, rng) — all checkpointable; the walk
-engine's state is (window edges + rng), rebuilt from the stream cursor.
-Restart is therefore a pure function of the last checkpoint, and the
-elastic restore path (train/checkpoint.py) retargets a different mesh.
+Design for 1000+ nodes (DESIGN.md §6, §15): the entire training state is
+(params, opt_state, data cursor, rng) — all checkpointable
+(``TrainSupervisor``); the walk engine's state is (window edges + rng),
+which ``WindowCheckpointer`` persists directly — the sharded window, its
+placement manifest and the walk key — so a restart resumes the replay
+mid-stream instead of re-ingesting from the cursor, and the **elastic**
+restore retargets a different shard count or placement policy by
+re-bucketing the saved window (``checkpoint.restore_sharded_window`` →
+``reshard_host``). ``StreamSupervisor`` drives a
+``DistributedStreamingEngine`` replay with the same checkpoint-every-N +
+straggler-watchdog semantics ``TrainSupervisor`` gives training; its
+``remesh`` verdict is the trigger for exactly that elastic path.
 """
 from __future__ import annotations
 
@@ -97,3 +104,97 @@ class TrainSupervisor:
     def save(self, params, opt_state, step: int):
         ckpt.save(os.path.join(self.ckpt_dir, "params"), params, step)
         ckpt.save(os.path.join(self.ckpt_dir, "opt"), opt_state, step)
+
+
+@dataclass
+class WindowCheckpointer:
+    """Save/restore a ``DistributedStreamingEngine``'s full replay state.
+
+    The streaming counterpart of params checkpoints: (sharded window,
+    placement, walk key) under ``<ckpt_dir>/window``. ``restore_engine``
+    is the elastic restart — pass ``num_shards`` or ``placement`` to come
+    back up on a different topology; the saved window re-buckets through
+    the host reshard mirror and the walk key resumes the exact RNG chain,
+    so a restored replay of the remaining batches is bit-identical to the
+    uninterrupted run (tested in tests/test_reshard_checkpoint.py).
+    """
+
+    ckpt_dir: str
+
+    @property
+    def window_dir(self) -> str:
+        return os.path.join(self.ckpt_dir, "window")
+
+    def save(self, engine, step: int) -> None:
+        ckpt.save_sharded_window(self.window_dir, engine.state,
+                                 engine.placement, step,
+                                 walk_key=engine.key)
+
+    def latest_step(self) -> Optional[int]:
+        return ckpt.latest_step(self.window_dir)
+
+    def restore_engine(self, cfg, batch_capacity: int, *,
+                       num_shards: Optional[int] = None,
+                       placement=None, mesh=None):
+        """Rebuild a ``DistributedStreamingEngine`` from the checkpoint."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed.streaming_shard import (
+            DistributedStreamingEngine,
+        )
+
+        state, plc, walk_key = ckpt.restore_sharded_window(
+            self.window_dir, placement=placement, num_shards=num_shards)
+        eng = DistributedStreamingEngine(
+            cfg, batch_capacity, mesh=mesh, num_shards=plc.num_shards,
+            placement=plc)
+        eng.state = jax.device_put(
+            state, NamedSharding(eng.mesh, P(eng.axis_name)))
+        if walk_key is not None:
+            eng.key = walk_key
+        return eng
+
+
+@dataclass
+class StreamSupervisor:
+    """Checkpoint-every-N driver for a distributed streaming replay.
+
+    Feeds batches through ``engine.replay_device`` one at a time (so the
+    walk-key chain advances exactly as a per-batch caller's would),
+    watches the per-batch wall time with the same ``StragglerPolicy`` as
+    training, and checkpoints the full (window, placement, key) state
+    every ``save_every`` batches. ``on_event(batch_idx, verdict)`` fires
+    on 'straggler'/'remesh' verdicts; a 'remesh' caller typically
+    restores the latest checkpoint at a new shard count via
+    ``WindowCheckpointer.restore_engine``.
+    """
+
+    ckpt_dir: str
+    save_every: int = 8
+    straggler: StragglerPolicy = field(default_factory=StragglerPolicy)
+
+    def __post_init__(self):
+        self.checkpointer = WindowCheckpointer(self.ckpt_dir)
+
+    def resume_batch(self) -> int:
+        s = self.checkpointer.latest_step()
+        return int(s) if s is not None else 0
+
+    def run(self, engine, batches, wcfg, start_batch: int = 0,
+            on_event: Optional[Callable] = None):
+        """Replay ``batches[start_batch:]``; returns (stats list, batches
+        completed). Each entry is the batch's ``DistReplayStats``."""
+        out = []
+        step = start_batch
+        for batch in batches[start_batch:]:
+            t0 = time.perf_counter()
+            stats, _walks, _ = engine.replay_device([batch], wcfg)
+            verdict = self.straggler.observe(time.perf_counter() - t0)
+            if verdict != "ok" and on_event:
+                on_event(step, verdict)
+            out.append(stats)
+            step += 1
+            if step % self.save_every == 0:
+                self.checkpointer.save(engine, step)
+        return out, step

@@ -1,0 +1,314 @@
+"""Pluggable node-placement layer: who owns node v? (DESIGN.md §15)
+
+Every distributed subsystem in this repo — the node-partitioned sliding
+window (DESIGN.md §12), sharded lane serving (§13), and the static walk
+migrator (core/distributed.py) — needs one answer to one question: *which
+shard owns node v's out-edges?* Until this layer existed the answer was a
+constant folded into every call site (``owner(v) = v // range_size``); it
+is now a value: a ``Placement`` object threaded through ingest, walk-start
+claims, per-hop migration, serving, checkpointing, and resharding.
+
+A placement must satisfy exactly one invariant: **every node id in
+[0, node_capacity) maps to exactly one shard in [0, num_shards)** — and
+it must answer identically on device (``owner``, traced jnp) and on host
+(``owner_np``, the coalescer's routing mirror). Everything else (walk
+bit-identity across shard counts, edge locality of Γ_t(v), psum trace
+reassembly) follows, because *all* routing decisions — which shard stores
+an edge (by owner of its source), which shard claims a start lane, where a
+migrating walk lands — consult the same object. The per-(walk, step) RNG
+is placement-independent, so replay and serving stay **bit-identical to
+the single-device engine under any policy** (tested for all three in
+tests/test_reshard_checkpoint.py).
+
+Three policies:
+
+* ``range`` — ``owner(v) = clip(v // ceil(node_capacity / D), 0, D-1)``,
+  today's rule kept as the bit-identity baseline vs the PR 4/5 goldens.
+* ``hash`` — Knuth multiplicative hash into a small routing table
+  (``table[(v * 2654435761) >> (32 - log2(buckets))]``). The table is the
+  indirection that makes the policy *operable*: moving a bucket between
+  shards is a table edit + ``reshard``, not a formula change.
+* ``skew`` — a base policy (range or hash) plus a hot-node override table
+  that pins the top-K hubs to explicitly chosen shards.
+  ``SkewPlacement.from_loads`` builds the overrides from measured
+  per-node load (edge counts from the engine, lane counts from
+  ``ServeStats.lanes_by_shard``): hubs are peeled off the base assignment
+  and greedily placed on the least-loaded shard (LPT). This *splits* hub
+  load off melting shards; replicating a hub onto several shards (read
+  scaling for one node) is deliberately out of scope — it would break the
+  exactly-one-owner invariant everything else leans on.
+
+Placements are **frozen, hashable dataclasses of ints/tuples** on
+purpose: they ride through ``jax.jit`` as static arguments, so the
+routing/override tables are baked into the compiled program as constants
+(device-resident at run time, zero gather indirection for ``range``) and
+a placement change is a recompile — the right cost model, since placement
+changes are control-plane events (``reshard``) that already pay an
+all_to_all.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Knuth's multiplicative constant (2^32 / phi); uint32 wrap on purpose.
+_KNUTH = np.uint32(2654435761)
+
+
+@dataclass(frozen=True)
+class Placement:
+    """Base node-placement policy: ``owner(v)`` on device + host mirror.
+
+    Frozen and hashable so concrete placements can key ``jax.jit`` caches
+    as static arguments. Subclasses implement ``owner`` (traced jnp,
+    int32 in -> int32 shard ids in [0, num_shards)) and ``owner_np`` (the
+    bit-identical numpy mirror used by host-side routing/stats, e.g.
+    ``serve.coalescer.lane_owners``).
+    """
+
+    num_shards: int
+    node_capacity: int
+
+    kind = "base"
+
+    def owner(self, v: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def owner_np(self, v) -> np.ndarray:
+        raise NotImplementedError
+
+    def shard_nodes(self, d: int) -> np.ndarray:
+        """Inverse enumeration: the node ids shard ``d`` owns (host-side,
+        for provisioning / capacity planning). Generic O(node_capacity)
+        scan over the host mirror; subclasses may specialize."""
+        all_v = np.arange(self.node_capacity, dtype=np.int32)
+        return all_v[self.owner_np(all_v) == d]
+
+    def describe(self) -> dict:
+        """JSON-serializable manifest entry (checkpoint placement record).
+        Round-trips through ``placement_from_manifest``."""
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class RangePlacement(Placement):
+    """``owner(v) = clip(v // range_size, 0, D-1)`` — the PR 4/5 rule.
+
+    Kept bit-identical to the formula previously inlined at every call
+    site (``core.distributed.owner_range_size``): with this policy the
+    sharded ingest/walk/serving paths produce byte-identical states and
+    walks to the pre-placement-layer goldens.
+    """
+
+    kind = "range"
+
+    @property
+    def range_size(self) -> int:
+        return math.ceil(self.node_capacity / self.num_shards)
+
+    def owner(self, v: jax.Array) -> jax.Array:
+        r = jnp.asarray(v, jnp.int32) // self.range_size
+        return jnp.clip(r, 0, self.num_shards - 1)
+
+    def owner_np(self, v) -> np.ndarray:
+        r = np.asarray(v).astype(np.int64) // self.range_size
+        return np.clip(r, 0, self.num_shards - 1).astype(np.int32)
+
+    def shard_nodes(self, d: int) -> np.ndarray:
+        lo = d * self.range_size
+        hi = min((d + 1) * self.range_size, self.node_capacity)
+        return np.arange(lo, max(lo, hi), dtype=np.int32)
+
+    def describe(self) -> dict:
+        return {"kind": self.kind, "num_shards": self.num_shards,
+                "node_capacity": self.node_capacity}
+
+
+@dataclass(frozen=True)
+class HashPlacement(Placement):
+    """Multiplicative hash + routing table.
+
+    ``bucket(v) = (uint32(v) * 2654435761) >> (32 - log2(len(table)))``;
+    ``owner(v) = table[bucket(v)]``. The hash decorrelates owners from id
+    locality (hub ids cluster at the low end of Zipf-ranked graphs, which
+    melts range placement); the table adds the operable indirection —
+    rebalancing is "edit table entries, then reshard". The table is a
+    tuple (hashable -> static under jit; small -> baked as constants).
+    """
+
+    table: Tuple[int, ...] = ()
+    kind = "hash"
+
+    def __post_init__(self):
+        b = len(self.table)
+        if b == 0 or (b & (b - 1)) != 0:
+            raise ValueError(f"routing table size must be a power of two "
+                             f"(got {b})")
+        if any(not (0 <= t < self.num_shards) for t in self.table):
+            raise ValueError("routing table entry out of shard range")
+
+    @classmethod
+    def make(cls, num_shards: int, node_capacity: int,
+             num_buckets: int = 256) -> "HashPlacement":
+        """Round-robin table: bucket i -> shard i % D (uniform in
+        expectation over the hashed id space)."""
+        table = tuple(i % num_shards for i in range(num_buckets))
+        return cls(num_shards=num_shards, node_capacity=node_capacity,
+                   table=table)
+
+    @property
+    def _shift(self) -> int:
+        return 32 - int(math.log2(len(self.table)))
+
+    def owner(self, v: jax.Array) -> jax.Array:
+        h = jnp.asarray(v, jnp.int32).astype(jnp.uint32) * _KNUTH
+        bucket = (h >> self._shift).astype(jnp.int32)
+        return jnp.asarray(self.table, jnp.int32)[bucket]
+
+    def owner_np(self, v) -> np.ndarray:
+        h = np.asarray(v).astype(np.uint32) * _KNUTH
+        bucket = (h >> np.uint32(self._shift)).astype(np.int64)
+        return np.asarray(self.table, np.int32)[bucket]
+
+    def describe(self) -> dict:
+        return {"kind": self.kind, "num_shards": self.num_shards,
+                "node_capacity": self.node_capacity,
+                "table": list(self.table)}
+
+
+@dataclass(frozen=True)
+class SkewPlacement(Placement):
+    """A base policy plus a top-K hot-node override table.
+
+    ``owner(v) = hot_owners[i] if v == hot_nodes[i] else base.owner(v)``.
+    K stays small (tens), so the override resolves on device as one
+    [n, K] compare against baked constants — no gather table of
+    node_capacity. Build the overrides from measured load with
+    ``from_loads``; an empty table degrades to the base policy exactly.
+    """
+
+    base: Placement = None          # type: ignore[assignment]
+    hot_nodes: Tuple[int, ...] = ()
+    hot_owners: Tuple[int, ...] = ()
+    kind = "skew"
+
+    def __post_init__(self):
+        if self.base is None:
+            raise ValueError("SkewPlacement needs a base placement")
+        if (self.base.num_shards != self.num_shards
+                or self.base.node_capacity != self.node_capacity):
+            raise ValueError("base placement shape mismatch")
+        if len(self.hot_nodes) != len(self.hot_owners):
+            raise ValueError("hot_nodes / hot_owners length mismatch")
+        if len(set(self.hot_nodes)) != len(self.hot_nodes):
+            raise ValueError("duplicate hot node override")
+        if any(not (0 <= o < self.num_shards) for o in self.hot_owners):
+            raise ValueError("hot owner out of shard range")
+
+    @classmethod
+    def from_loads(cls, base: Placement, node_loads, k: int = 8
+                   ) -> "SkewPlacement":
+        """Build hub overrides from measured per-node load.
+
+        ``node_loads`` is host-side [node_capacity] (edge counts from
+        ``DistributedStreamingEngine.node_loads()``, or lane counts from
+        serving stats). The top-``k`` loaded nodes are peeled off the
+        base assignment and greedily placed, heaviest first, on the
+        currently least-loaded shard (LPT); ties resolve to the lowest
+        shard id so the result is deterministic. A ``SkewPlacement``
+        base is unwrapped first (re-deriving overrides, not stacking).
+        """
+        if isinstance(base, SkewPlacement):
+            base = base.base
+        loads = np.asarray(node_loads, np.float64)
+        if loads.shape[0] != base.node_capacity:
+            raise ValueError(
+                f"node_loads has {loads.shape[0]} entries; placement "
+                f"expects {base.node_capacity}")
+        order = np.argsort(-loads, kind="stable")
+        hot = [int(v) for v in order[:k] if loads[v] > 0]
+        base_owner = base.owner_np(np.arange(base.node_capacity,
+                                             dtype=np.int32))
+        shard_load = np.zeros(base.num_shards, np.float64)
+        np.add.at(shard_load, base_owner, loads)
+        shard_load -= np.bincount(base_owner[hot], weights=loads[hot],
+                                  minlength=base.num_shards)
+        owners = []
+        for v in hot:                      # heaviest first (argsort order)
+            d = int(np.argmin(shard_load))
+            owners.append(d)
+            shard_load[d] += loads[v]
+        return cls(num_shards=base.num_shards,
+                   node_capacity=base.node_capacity, base=base,
+                   hot_nodes=tuple(hot), hot_owners=tuple(owners))
+
+    def owner(self, v: jax.Array) -> jax.Array:
+        base_o = self.base.owner(v)
+        if not self.hot_nodes:
+            return base_o
+        v32 = jnp.asarray(v, jnp.int32)
+        hn = jnp.asarray(self.hot_nodes, jnp.int32)
+        ho = jnp.asarray(self.hot_owners, jnp.int32)
+        m = v32[..., None] == hn
+        return jnp.where(m.any(-1), ho[jnp.argmax(m, -1)], base_o)
+
+    def owner_np(self, v) -> np.ndarray:
+        out = self.base.owner_np(v).copy()
+        va = np.asarray(v)
+        for n, o in zip(self.hot_nodes, self.hot_owners):
+            out[va == n] = o
+        return out.astype(np.int32)
+
+    def describe(self) -> dict:
+        return {"kind": self.kind, "num_shards": self.num_shards,
+                "node_capacity": self.node_capacity,
+                "base": self.base.describe(),
+                "hot_nodes": list(self.hot_nodes),
+                "hot_owners": list(self.hot_owners)}
+
+
+def make_placement(kind: str, num_shards: int, node_capacity: int, *,
+                   hash_buckets: int = 256) -> Placement:
+    """Factory from a ``ShardConfig.placement`` string.
+
+    ``skew`` starts with an empty override table (== its range base);
+    feed it measured loads via ``SkewPlacement.from_loads`` and
+    ``reshard`` to activate the rebalance.
+    """
+    if kind == "range":
+        return RangePlacement(num_shards=num_shards,
+                              node_capacity=node_capacity)
+    if kind == "hash":
+        return HashPlacement.make(num_shards, node_capacity,
+                                  num_buckets=hash_buckets)
+    if kind == "skew":
+        return SkewPlacement(num_shards=num_shards,
+                             node_capacity=node_capacity,
+                             base=RangePlacement(num_shards=num_shards,
+                                                 node_capacity=node_capacity))
+    raise ValueError(f"unknown placement kind {kind!r} "
+                     "(expected range | hash | skew)")
+
+
+def placement_from_manifest(d: dict) -> Placement:
+    """Rebuild a placement from its ``describe()`` manifest entry."""
+    kind = d["kind"]
+    if kind == "range":
+        return RangePlacement(num_shards=d["num_shards"],
+                              node_capacity=d["node_capacity"])
+    if kind == "hash":
+        return HashPlacement(num_shards=d["num_shards"],
+                             node_capacity=d["node_capacity"],
+                             table=tuple(d["table"]))
+    if kind == "skew":
+        return SkewPlacement(num_shards=d["num_shards"],
+                             node_capacity=d["node_capacity"],
+                             base=placement_from_manifest(d["base"]),
+                             hot_nodes=tuple(d["hot_nodes"]),
+                             hot_owners=tuple(d["hot_owners"]))
+    raise ValueError(f"unknown placement manifest kind {kind!r}")

@@ -9,10 +9,17 @@ index. This module makes the **window itself** sharded, so both ingestion
 capacity and walk throughput scale with device count — the regime where an
 81B-edge window exceeds one chip's HBM:
 
-* **Ownership** — nodes are range-partitioned, ``owner(v) = v //
-  range_size`` with ``range_size = ceil(node_capacity / D)`` (the same rule
-  as ``core/distributed.py``); shard d holds the merge-sorted window slice
+* **Ownership** — nodes are partitioned by a pluggable ``Placement``
+  policy (repro/distributed/placement.py, DESIGN.md §15; default
+  ``range``: ``owner(v) = v // ceil(node_capacity / D)``, the same rule as
+  ``core/distributed.py``); shard d holds the merge-sorted window slice
   of edges whose *source* it owns, so Γ_t(v) is always served locally.
+  Every owner decision in this module — ingest bucketing, walk start
+  claims, per-hop migration, serving lane claims — consults the same
+  placement object, so swapping the policy (hash tables, hot-node skew
+  overrides) re-routes all of them coherently; ``reshard`` re-buckets a
+  *resident* window from one placement to another (or to a different
+  shard count) through one all_to_all without dropping edges.
 * **Sharded ingest** — each shard takes a 1/D slice of the incoming batch,
   buckets it by edge-source owner, and one ``all_to_all``
   (``exchange_by_owner``) delivers every edge to its owner. The owner
@@ -85,9 +92,20 @@ from repro.core.distributed import (
     exchange_by_owner,
     hop_resident,
     hop_resident_lanes,
-    owner_range_size,
 )
-from repro.core.edge_store import TS_PAD, EdgeBatch, stack_batches
+from repro.core.edge_store import (
+    TS_PAD,
+    EdgeBatch,
+    EdgeStore,
+    stack_batches,
+)
+from repro.core.temporal_index import build_index
+from repro.distributed.placement import (
+    Placement,
+    RangePlacement,
+    SkewPlacement,
+    make_placement,
+)
 from repro.core.samplers import index_pick_lanes
 from repro.core.streaming import ReplayStats
 from repro.core.walk_engine import (
@@ -164,7 +182,8 @@ def init_sharded_window(num_shards: int, edge_capacity_per_shard: int,
 
 
 def _shard_ingest(wstate: WindowState, bsrc, bdst, bts, bvalid, *, axis: str,
-                  num_shards: int, range_size: int, exchange_capacity: int,
+                  num_shards: int, placement: Placement,
+                  exchange_capacity: int,
                   node_capacity: int, bias_scale: float):
     """One shard's window advance for its slice of the incoming batch.
 
@@ -177,7 +196,7 @@ def _shard_ingest(wstate: WindowState, bsrc, bdst, bts, bvalid, *, axis: str,
     watermark = jax.lax.pmax(local_max, axis)
 
     # (2) bucket by edge-source owner, one all_to_all
-    owner = jnp.clip(bsrc // range_size, 0, num_shards - 1)
+    owner = placement.owner(bsrc)
     (r_src, r_dst, r_ts), _, x_drop = exchange_by_owner(
         axis, num_shards, exchange_capacity, owner, bvalid,
         (bsrc, bdst, bts), (0, 0, TS_PAD))
@@ -200,7 +219,7 @@ def _shard_ingest(wstate: WindowState, bsrc, bdst, bts, bvalid, *, axis: str,
 
 def _shard_walks(idx, walk_key: jax.Array, wcfg: WalkConfig,
                  scfg: SamplerConfig, *, axis: str, num_shards: int,
-                 range_size: int, walk_slots: int,
+                 placement: Placement, walk_slots: int,
                  walk_bucket_capacity: int):
     """One batch's walks over the sharded window (start_mode="all_nodes").
 
@@ -223,7 +242,7 @@ def _shard_walks(idx, walk_key: jax.Array, wcfg: WalkConfig,
     # place walk w (start node w % nc) on its start node's owner
     w_all = jnp.arange(W, dtype=jnp.int32)
     v_all = (w_all % nc).astype(jnp.int32)
-    mine = (v_all // range_size) == shard_id
+    mine = placement.owner(v_all) == shard_id
     rankm = jnp.cumsum(mine.astype(jnp.int32)) - 1
     wid = jnp.full((Ws,), -1, jnp.int32).at[
         jnp.where(mine, rankm, Ws)].set(w_all, mode="drop")
@@ -263,7 +282,7 @@ def _shard_walks(idx, walk_key: jax.Array, wcfg: WalkConfig,
 
         # migrate surviving walks to their new owner (dead walks just free
         # their slot: the trace already lives in the resident buffers)
-        owner = jnp.clip(nn // range_size, 0, num_shards - 1)
+        owner = placement.owner(nn)
         (r_wid, r_node, r_time), _, n_drop = exchange_by_owner(
             axis, num_shards, walk_bucket_capacity, owner, has,
             (wid, nn, nt), (-1, 0, 0))
@@ -297,7 +316,7 @@ def _shard_walks(idx, walk_key: jax.Array, wcfg: WalkConfig,
 
 def _shard_walk_lanes(idx, view: TsView, lanes: LaneParams, lane_keys,
                       wcfg: WalkConfig, *, axis: str, num_shards: int,
-                      range_size: int, walk_slots: int,
+                      placement: Placement, walk_slots: int,
                       walk_bucket_capacity: int):
     """One coalesced lane batch's walks over the sharded window.
 
@@ -340,7 +359,7 @@ def _shard_walk_lanes(idx, view: TsView, lanes: LaneParams, lane_keys,
         s_cur = gstore.dst[e]
         s_ts = gstore.ts[e]
         alive0 = lanes.active & (gstore.num_edges > 0)
-        owner = jnp.clip(s_cur // range_size, 0, num_shards - 1)
+        owner = placement.owner(s_cur)
         mine = alive0 & (owner == shard_id)
         row0 = jnp.where(mine, lane_ids, S)
         tn = tn.at[row0, 0].set(s_src, mode="drop")
@@ -356,7 +375,7 @@ def _shard_walk_lanes(idx, view: TsView, lanes: LaneParams, lane_keys,
         v = lanes.start_node
         vc = jnp.clip(v, 0, nc - 1)
         deg = idx.node_starts[vc + 1] - idx.node_starts[vc]
-        owner = jnp.clip(vc // range_size, 0, num_shards - 1)
+        owner = placement.owner(vc)
         t_floor = jnp.where(gstore.num_edges > 0, gstore.ts[0] - 1, 0)
         mine = (lanes.active & (v >= 0) & (v < nc) & (deg > 0)
                 & (owner == shard_id))
@@ -367,6 +386,11 @@ def _shard_walk_lanes(idx, view: TsView, lanes: LaneParams, lane_keys,
         tt = tt.at[row0, 0].set(start_time, mode="drop")
         ln = ln.at[row0].add(1, mode="drop")
         hops, offset = L, 0
+
+    # per-shard start-claim counter (ServeStats.lanes_by_shard): counted on
+    # device, so edges-mode claims — whose owners are data-dependent — are
+    # observable exactly like nodes-mode ones
+    claims = jnp.sum(mine.astype(jnp.int32))
 
     # place claimed lanes into resident slots
     rankm = jnp.cumsum(mine.astype(jnp.int32)) - 1
@@ -398,7 +422,7 @@ def _shard_walk_lanes(idx, view: TsView, lanes: LaneParams, lane_keys,
         wid, node, cur_time, alive, tn, tt, ln, dropped = carry
         nn, nt, has, tn, tt, ln = record_hop(wid, node, cur_time, alive,
                                              tn, tt, ln, step)
-        owner = jnp.clip(nn // range_size, 0, num_shards - 1)
+        owner = placement.owner(nn)
         (r_wid, r_node, r_time), _, n_drop = exchange_by_owner(
             axis, num_shards, walk_bucket_capacity, owner, has,
             (wid, nn, nt), (-1, 0, 0))
@@ -424,7 +448,7 @@ def _shard_walk_lanes(idx, view: TsView, lanes: LaneParams, lane_keys,
         _, _, _, tn, tt, ln = record_hop(
             wid, node, cur_time, alive, tn, tt, ln,
             jnp.asarray(hops - 1, jnp.int32))
-    return tn, tt, ln, dropped + start_drop
+    return tn, tt, ln, dropped + start_drop, claims
 
 
 # ---------------------------------------------------------------------------
@@ -434,14 +458,16 @@ def _shard_walk_lanes(idx, view: TsView, lanes: LaneParams, lane_keys,
 
 def _ingest_sharded_impl(state: ShardedWindowState, bsrc, bdst, bts, count, *,
                          mesh: Mesh, axis_name: str, node_capacity: int,
-                         shard_cfg: ShardConfig, bias_scale: float = 1.0
+                         shard_cfg: ShardConfig, bias_scale: float = 1.0,
+                         placement: Optional[Placement] = None
                          ) -> ShardedWindowState:
     """Advance the sharded window by one batch (``bsrc/bdst/bts`` are
     [D, Bd], the batch axis pre-split per shard; ``count`` the global valid
     prefix length). The shard_map'd single-batch twin of the replay's
     ingest stage; see ``ingest_sharded`` / ``ingest_sharded_nodonate``."""
     D = mesh.devices.size
-    range_size = owner_range_size(node_capacity, D)
+    if placement is None:
+        placement = RangePlacement(num_shards=D, node_capacity=node_capacity)
 
     def shard_fn(state, bsrc, bdst, bts, count):
         wstate = jax.tree.map(lambda a: a[0], state.window)
@@ -450,7 +476,7 @@ def _ingest_sharded_impl(state: ShardedWindowState, bsrc, bdst, bts, count, *,
             Bd, dtype=jnp.int32)
         new, x_drop = _shard_ingest(
             wstate, bsrc[0], bdst[0], bts[0], gpos < count, axis=axis_name,
-            num_shards=D, range_size=range_size,
+            num_shards=D, placement=placement,
             exchange_capacity=shard_cfg.exchange_capacity,
             node_capacity=node_capacity, bias_scale=bias_scale)
         return ShardedWindowState(
@@ -471,7 +497,7 @@ def _ingest_sharded_impl(state: ShardedWindowState, bsrc, bdst, bts, count, *,
 ingest_sharded = partial(
     jax.jit,
     static_argnames=("mesh", "axis_name", "node_capacity", "shard_cfg",
-                     "bias_scale"),
+                     "bias_scale", "placement"),
     donate_argnums=(0,))(_ingest_sharded_impl)
 
 # Non-donating twin for the sharded serving snapshot double-buffer
@@ -482,7 +508,7 @@ ingest_sharded = partial(
 ingest_sharded_nodonate = partial(
     jax.jit,
     static_argnames=("mesh", "axis_name", "node_capacity", "shard_cfg",
-                     "bias_scale"))(_ingest_sharded_impl)
+                     "bias_scale", "placement"))(_ingest_sharded_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -523,42 +549,47 @@ def _check_supported(wcfg: WalkConfig, scfg: SamplerConfig, *,
 
 @partial(jax.jit,
          static_argnames=("mesh", "axis_name", "node_capacity", "wcfg",
-                          "scfg", "shard_cfg"))
+                          "scfg", "shard_cfg", "placement"))
 def serve_lanes_sharded(state: ShardedWindowState, view: TsView,
                         key: jax.Array, lanes: LaneParams, *, mesh: Mesh,
                         axis_name: str, node_capacity: int,
                         wcfg: WalkConfig, scfg: SamplerConfig,
-                        shard_cfg: ShardConfig):
+                        shard_cfg: ShardConfig,
+                        placement: Optional[Placement] = None):
     """One coalesced lane batch over the node-partitioned window.
 
     ``state`` is the sharded window (NOT donated: the serving snapshot
     keeps it readable across dispatches), ``view`` the replicated ts-view
     of the same window version, ``key`` the service's stable base key and
     ``lanes`` the packed per-lane params. Returns (nodes, times, lengths,
-    drops): walk leaves with a leading [D] replicated axis (callers read
-    row 0) shaped like the single-device ``generate_walk_lanes`` result,
-    plus the per-shard [D] drop counter (start-slot + migration overflow —
-    0 under healthy provisioning, and required for the bit-identity
-    guarantee).
+    drops, claims): walk leaves with a leading [D] replicated axis
+    (callers read row 0) shaped like the single-device
+    ``generate_walk_lanes`` result, plus two per-shard [D] counters —
+    ``drops`` (start-slot + migration overflow — 0 under healthy
+    provisioning, and required for the bit-identity guarantee) and
+    ``claims`` (start lanes claimed by each shard, the device-side source
+    of ``ServeStats.lanes_by_shard`` for both start modes).
     """
     _check_supported(wcfg, scfg, lanes=True)
     D = mesh.devices.size
-    range_size = owner_range_size(node_capacity, D)
+    if placement is None:
+        placement = RangePlacement(num_shards=D, node_capacity=node_capacity)
 
     def shard_fn(state, view, key, lanes):
         wstate = jax.tree.map(lambda a: a[0], state.window)
         # lane RNG identity: fold (request seed, walk-within-request) into
         # the base key — replicated math, identical on every shard
         lane_keys = _lane_keys(key, lanes)
-        tn, tt, ln, drop = _shard_walk_lanes(
+        tn, tt, ln, drop, claims = _shard_walk_lanes(
             wstate.index, view, lanes, lane_keys, wcfg, axis=axis_name,
-            num_shards=D, range_size=range_size,
+            num_shards=D, placement=placement,
             walk_slots=shard_cfg.walk_slots,
             walk_bucket_capacity=shard_cfg.walk_bucket_capacity)
         nodes = NODE_PAD + jax.lax.psum(tn - NODE_PAD, axis_name)
         times = NODE_PAD + jax.lax.psum(tt - NODE_PAD, axis_name)
         lengths = jax.lax.psum(ln, axis_name)
-        return nodes[None], times[None], lengths[None], drop[None]
+        return (nodes[None], times[None], lengths[None], drop[None],
+                claims[None])
 
     sharded = P(axis_name)
     state_spec = ShardedWindowState(
@@ -568,20 +599,21 @@ def serve_lanes_sharded(state: ShardedWindowState, view: TsView,
     lane_spec = LaneParams(*([P()] * len(LaneParams._fields)))
     fn = shard_map(shard_fn, mesh=mesh,
                    in_specs=(state_spec, view_spec, P(), lane_spec),
-                   out_specs=(sharded, sharded, sharded, sharded),
+                   out_specs=(sharded, sharded, sharded, sharded, sharded),
                    check_rep=False)
     return fn(state, view, key, lanes)
 
 
 @partial(jax.jit,
          static_argnames=("axis_name", "node_capacity", "wcfg", "scfg",
-                          "shard_cfg", "bias_scale", "mesh"),
+                          "shard_cfg", "bias_scale", "mesh", "placement"),
          donate_argnums=(0,))
 def _replay_scan_sharded(state: ShardedWindowState, bsrc, bdst, bts, bcount,
                          key, *, mesh: Mesh, axis_name: str,
                          node_capacity: int, wcfg: WalkConfig,
                          scfg: SamplerConfig, shard_cfg: ShardConfig,
-                         bias_scale: float = 1.0):
+                         bias_scale: float = 1.0,
+                         placement: Optional[Placement] = None):
     """Replay K stacked batches over the sharded window, fully on device.
 
     ``bsrc/bdst/bts`` are [K, D, Bd] (the batch axis pre-split per shard),
@@ -590,7 +622,8 @@ def _replay_scan_sharded(state: ShardedWindowState, bsrc, bdst, bts, bcount,
     replicated so callers read row 0.
     """
     D = mesh.devices.size
-    range_size = owner_range_size(node_capacity, D)
+    if placement is None:
+        placement = RangePlacement(num_shards=D, node_capacity=node_capacity)
 
     def shard_fn(state, bsrc, bdst, bts, bcount, key):
         wstate = jax.tree.map(lambda a: a[0], state.window)
@@ -607,7 +640,7 @@ def _replay_scan_sharded(state: ShardedWindowState, bsrc, bdst, bts, bcount,
             k, sub = jax.random.split(k)
             wstate, x_drop = _shard_ingest(
                 wstate, src, dst, ts, gpos < cnt, axis=axis_name,
-                num_shards=D, range_size=range_size,
+                num_shards=D, placement=placement,
                 exchange_capacity=shard_cfg.exchange_capacity,
                 node_capacity=node_capacity, bias_scale=bias_scale)
 
@@ -615,7 +648,7 @@ def _replay_scan_sharded(state: ShardedWindowState, bsrc, bdst, bts, bcount,
             _, walk_key = jax.random.split(sub)
             tn, tt, ln, w_drop = _shard_walks(
                 wstate.index, walk_key, wcfg, scfg, axis=axis_name,
-                num_shards=D, range_size=range_size,
+                num_shards=D, placement=placement,
                 walk_slots=shard_cfg.walk_slots,
                 walk_bucket_capacity=shard_cfg.walk_bucket_capacity)
 
@@ -681,14 +714,29 @@ class DistributedStreamingEngine:
     """
 
     def __init__(self, cfg: EngineConfig, batch_capacity: int, *,
-                 mesh: Optional[Mesh] = None, num_shards: int = 0):
+                 mesh: Optional[Mesh] = None, num_shards: int = 0,
+                 placement: Optional[Placement] = None):
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else window_mesh(
             num_shards or cfg.shard.num_shards)
         self.axis_name = self.mesh.axis_names[0]
         D = self.mesh.devices.size
         self.num_shards = D
+        if placement is None:
+            placement = make_placement(
+                cfg.shard.placement, D, cfg.window.node_capacity,
+                hash_buckets=cfg.shard.hash_buckets)
+        if placement.num_shards != D:
+            raise ValueError(
+                f"placement covers {placement.num_shards} shards; mesh has "
+                f"{D} devices")
+        if placement.node_capacity != cfg.window.node_capacity:
+            raise ValueError(
+                f"placement node_capacity {placement.node_capacity} != "
+                f"window node_capacity {cfg.window.node_capacity}")
+        self.placement = placement
         # per-shard batch slice: round the capacity up to a D multiple
+        self._requested_batch_capacity = batch_capacity
         self.batch_slice = -(-batch_capacity // D)
         self.batch_capacity = self.batch_slice * D
         self.state = init_sharded_window(
@@ -707,7 +755,7 @@ class DistributedStreamingEngine:
             self.state, split(batch.src), split(batch.dst), split(batch.ts),
             batch.count, mesh=self.mesh, axis_name=self.axis_name,
             node_capacity=self.cfg.window.node_capacity,
-            shard_cfg=self.cfg.shard)
+            shard_cfg=self.cfg.shard, placement=self.placement)
 
     def replay_device(self, batches, wcfg: WalkConfig):
         """One shard_map'd ``lax.scan`` over all batches; a single host
@@ -725,7 +773,8 @@ class DistributedStreamingEngine:
                 split(stacked.ts), stacked.count, sub, mesh=self.mesh,
                 axis_name=self.axis_name,
                 node_capacity=self.cfg.window.node_capacity, wcfg=wcfg,
-                scfg=self.cfg.sampler, shard_cfg=self.cfg.shard)
+                scfg=self.cfg.sampler, shard_cfg=self.cfg.shard,
+                placement=self.placement)
         jax.block_until_ready(lengths)          # the single sync point
         elapsed = time.perf_counter() - t0
         replay = ReplayStats(*(np.asarray(a)[0] for a in stats))
@@ -738,3 +787,270 @@ class DistributedStreamingEngine:
                            times=np.asarray(times)[0],
                            lengths=np.asarray(lengths)[0], stats=None)
         return dstats, walks, elapsed
+
+    # ------------------------------------------------------------------
+    # Placement control plane: measured load -> new placement -> reshard
+    # ------------------------------------------------------------------
+
+    def node_loads(self) -> np.ndarray:
+        """Per-node in-window out-degree [node_capacity] (host-side).
+
+        The skew signal: under a power-law stream, range placement piles
+        the hub nodes' edges onto few shards; feeding these loads to
+        ``SkewPlacement.from_loads`` builds the hot-node override table
+        that ``rebalance`` reshards onto.
+        """
+        # node_starts spans nc real nodes + the virtual padding node; the
+        # per-node degree diff is trimmed to the real ids
+        ns = np.asarray(self.state.window.index.node_starts)
+        nc = self.cfg.window.node_capacity
+        return (ns[:, 1:] - ns[:, :-1]).sum(axis=0)[:nc]
+
+    def shard_loads(self) -> np.ndarray:
+        """Resident window edges per shard [D] (the imbalance metric)."""
+        return np.asarray(self.state.window.index.num_edges)
+
+    def reshard_to(self, new_placement: Placement) -> None:
+        """Live reshard: re-bucket the resident window onto
+        ``new_placement`` (different policy and/or shard count) through
+        one all_to_all; ingest/replay continue against the new layout.
+        The walk RNG chain is untouched — replay stays bit-identical to
+        the single-device engine across the reshard (absent drops)."""
+        self.state, self.mesh = reshard(
+            self.state, self.placement, new_placement,
+            axis_name=self.axis_name)
+        self.placement = new_placement
+        D = new_placement.num_shards
+        self.num_shards = D
+        self.batch_slice = -(-self._requested_batch_capacity // D)
+        self.batch_capacity = self.batch_slice * D
+
+    def rebalance(self, k: Optional[int] = None) -> Placement:
+        """Measure per-node load, build a top-K hub override placement on
+        the current base policy, and reshard onto it. Returns the new
+        placement."""
+        base = (self.placement.base
+                if isinstance(self.placement, SkewPlacement)
+                else self.placement)
+        new = SkewPlacement.from_loads(
+            base, self.node_loads(),
+            k=k if k is not None else self.cfg.shard.hot_k)
+        self.reshard_to(new)
+        return new
+
+
+# ---------------------------------------------------------------------------
+# Live resharding: re-bucket a resident window under a new placement
+# ---------------------------------------------------------------------------
+
+
+def _pad_shards(state: ShardedWindowState, num: int) -> ShardedWindowState:
+    """Append ``num`` empty shard slices (same Δ, zeroed clock/counters).
+
+    Host-side prep for a shard-count-increasing reshard: the exchange mesh
+    spans max(D_old, D_new) devices, so a growing window first gains empty
+    slices. Their t_now starts at 0 and is pmax-repaired on device.
+    """
+    w = state.window
+    E = int(w.index.store.src.shape[1])
+    nc = int(w.index.node_starts.shape[1]) - 1
+    delta = int(np.asarray(w.window)[0])
+    empty = init_window(E, nc, delta)
+    pad = jax.tree.map(lambda x: jnp.broadcast_to(x, (num,) + x.shape),
+                       empty)
+    window = jax.tree.map(lambda a, p: jnp.concatenate([a, p]), w, pad)
+    return ShardedWindowState(
+        window=window,
+        exchange_drops=jnp.concatenate(
+            [state.exchange_drops, jnp.zeros((num,), jnp.int32)]))
+
+
+@partial(jax.jit,
+         static_argnames=("mesh", "axis_name", "placement", "bias_scale"))
+def _reshard_impl(state: ShardedWindowState, *, mesh: Mesh, axis_name: str,
+                  placement: Placement, bias_scale: float = 1.0
+                  ) -> ShardedWindowState:
+    """shard_map'd reshard body over a max(D_old, D_new)-device mesh.
+
+    Each shard sends every resident edge to ``placement.owner(src)`` with
+    per-(sender, dest) bucket capacity E — a sender holds at most E edges
+    total, so the exchange itself can NEVER drop. The receiver re-merges
+    by the canonical rule: received runs concatenated in old-shard-id
+    order with sender-position preserved (``exchange_by_owner``'s order
+    guarantee), one stable ts-argsort (ties therefore break by (old
+    shard, position) — for edges of one source node that is their
+    original relative order, which is all walk bit-identity needs), then
+    an overflow clip keeping the NEWEST E edges (``_clip_to_capacity``'s
+    rule) with the loss counted in ``exchange_drops``.
+
+    Counters: per-shard ``ingested``/``late_drops``/``overflow_drops``/
+    ``exchange_drops`` are psum'd onto shard 0 (zeros elsewhere), so their
+    shard-sums — the quantities the identity tests compare against the
+    single-device engine — survive any shard-count change.
+    """
+    Dm = mesh.devices.size
+    nc = placement.node_capacity
+
+    def shard_fn(state):
+        wstate = jax.tree.map(lambda a: a[0], state.window)
+        store = wstate.index.store
+        E = store.capacity
+        valid = jnp.arange(E, dtype=jnp.int32) < store.num_edges
+        owner = placement.owner(store.src)
+        (r_src, r_dst, r_ts), _, x_drop = exchange_by_owner(
+            axis_name, Dm, E, owner, valid,
+            (store.src, store.dst, store.ts), (nc, 0, TS_PAD))
+
+        # canonical merge: stable ts sort over the [Dm*E] receive buffer
+        # (TS_PAD rows sink to the back), then clip keeping the newest E
+        order = jnp.argsort(r_ts).astype(jnp.int32)
+        msrc, mdst, mts = r_src[order], r_dst[order], r_ts[order]
+        cnt = jnp.sum((r_ts != TS_PAD).astype(jnp.int32))
+        overflow = jnp.maximum(cnt - E, 0)
+        idx2 = jnp.arange(E, dtype=jnp.int32) + overflow
+        live2 = jnp.arange(E, dtype=jnp.int32) < jnp.minimum(cnt, E)
+        gidx = jnp.clip(idx2, 0, Dm * E - 1)
+        new_store = EdgeStore(
+            src=jnp.where(live2, msrc[gidx], nc),
+            dst=jnp.where(live2, mdst[gidx], 0),
+            ts=jnp.where(live2, mts[gidx], TS_PAD),
+            num_edges=jnp.minimum(cnt, E).astype(jnp.int32))
+        index = build_index(new_store, nc, bias_scale)
+
+        # clock: pmax repairs padded shards' zero t_now / Δ
+        t_now = jax.lax.pmax(wstate.t_now, axis_name)
+        delta = jax.lax.pmax(wstate.window, axis_name)
+
+        # counters: global sums live on shard 0 after a reshard
+        sid = jax.lax.axis_index(axis_name)
+        on0 = lambda x: jnp.where(sid == 0, jax.lax.psum(x, axis_name), 0)
+        new_w = WindowState(
+            index=index, t_now=t_now, window=delta,
+            ingested=on0(wstate.ingested),
+            late_drops=on0(wstate.late_drops),
+            overflow_drops=on0(wstate.overflow_drops))
+        xd = on0(state.exchange_drops[0] + x_drop) + overflow
+        return ShardedWindowState(
+            window=jax.tree.map(lambda a: a[None], new_w),
+            exchange_drops=xd[None])
+
+    sharded = P(axis_name)
+    state_spec = ShardedWindowState(
+        window=jax.tree.map(lambda _: sharded, state.window),
+        exchange_drops=sharded)
+    fn = shard_map(shard_fn, mesh=mesh, in_specs=(state_spec,),
+                   out_specs=state_spec, check_rep=False)
+    return fn(state)
+
+
+def reshard(state: ShardedWindowState, old_placement: Placement,
+            new_placement: Placement, *, mesh: Optional[Mesh] = None,
+            axis_name: str = WINDOW_AXIS, bias_scale: float = 1.0):
+    """Re-bucket a resident sharded window from one placement to another.
+
+    One all_to_all + per-shard canonical re-merge (see ``_reshard_impl``);
+    handles shard-count changes in both directions by running the
+    exchange over max(D_old, D_new) devices (growing windows are padded
+    with empty slices first; shrinking ones are truncated after — shards
+    ≥ D_new receive nothing by construction since owners are < D_new).
+    Edge-preserving except for the counted per-shard capacity clip (a
+    shard asked to own more than its E-capacity drops the oldest).
+
+    Returns ``(new_state, new_mesh)`` with the state placed on a
+    D_new-device mesh. This is the control-plane path behind
+    ``DistributedStreamingEngine.reshard_to`` and the elastic checkpoint
+    restore; a placement change recompiles downstream programs — the
+    expected cost of a topology event.
+    """
+    D_old = int(state.exchange_drops.shape[0])
+    D_new = new_placement.num_shards
+    if old_placement.num_shards != D_old:
+        raise ValueError(
+            f"old placement covers {old_placement.num_shards} shards; "
+            f"state has {D_old}")
+    if old_placement.node_capacity != new_placement.node_capacity:
+        raise ValueError("placements disagree on node_capacity")
+    Dm = max(D_old, D_new)
+    if mesh is None:
+        mesh = window_mesh(Dm, axis_name=axis_name)
+    elif mesh.devices.size != Dm:
+        raise ValueError(
+            f"reshard mesh must span max(D_old, D_new) = {Dm} devices "
+            f"(got {mesh.devices.size})")
+    if D_old < Dm:
+        state = _pad_shards(state, Dm - D_old)
+    state = jax.device_put(
+        state, NamedSharding(mesh, P(axis_name)))
+    new_state = _reshard_impl(state, mesh=mesh, axis_name=axis_name,
+                              placement=new_placement,
+                              bias_scale=bias_scale)
+    if D_new < Dm:
+        new_state = jax.device_get(new_state)
+        new_state = jax.tree.map(lambda a: jnp.asarray(a[:D_new]), new_state)
+    new_mesh = mesh if Dm == D_new else window_mesh(D_new,
+                                                    axis_name=axis_name)
+    new_state = jax.device_put(
+        new_state, NamedSharding(new_mesh, P(axis_name)))
+    return new_state, new_mesh
+
+
+def reshard_host(state: ShardedWindowState, new_placement: Placement,
+                 bias_scale: float = 1.0) -> ShardedWindowState:
+    """Numpy mirror of ``reshard``'s canonical merge (no device mesh).
+
+    The elastic checkpoint restore path (train/checkpoint.py): a window
+    saved at 8 shards must restore on a 2-device host, where the
+    max(D_old, D_new)-device exchange cannot run. Per new shard: old
+    shards' owned edges concatenated in old-shard-id order (position
+    preserved), one stable ts sort, clip keeping the newest E — the exact
+    receiver rule of ``_reshard_impl``, so device and host reshards agree
+    bitwise (tested in tests/test_reshard_checkpoint.py).
+    """
+    w = state.window
+    src = np.asarray(w.index.store.src)      # [D_old, E]
+    dst = np.asarray(w.index.store.dst)
+    ts = np.asarray(w.index.store.ts)
+    n = np.asarray(w.index.store.num_edges)  # [D_old]
+    D_old, E = src.shape
+    D_new = new_placement.num_shards
+    nc = new_placement.node_capacity
+
+    owners = [new_placement.owner_np(src[s][:n[s]]) for s in range(D_old)]
+    windows, xdrops = [], np.zeros(D_new, np.int64)
+    for d in range(D_new):
+        parts = [(src[s][:n[s]][owners[s] == d],
+                  dst[s][:n[s]][owners[s] == d],
+                  ts[s][:n[s]][owners[s] == d]) for s in range(D_old)]
+        csrc = np.concatenate([p[0] for p in parts])
+        cdst = np.concatenate([p[1] for p in parts])
+        cts = np.concatenate([p[2] for p in parts])
+        order = np.argsort(cts, kind="stable")
+        csrc, cdst, cts = csrc[order], cdst[order], cts[order]
+        overflow = max(len(cts) - E, 0)
+        xdrops[d] = overflow
+        csrc, cdst, cts = csrc[overflow:], cdst[overflow:], cts[overflow:]
+        cnt = len(cts)
+        store = EdgeStore(
+            src=jnp.asarray(np.pad(csrc, (0, E - cnt),
+                                   constant_values=nc), jnp.int32),
+            dst=jnp.asarray(np.pad(cdst, (0, E - cnt)), jnp.int32),
+            ts=jnp.asarray(np.pad(cts, (0, E - cnt),
+                                  constant_values=TS_PAD), jnp.int32),
+            num_edges=jnp.asarray(cnt, jnp.int32))
+        index = build_index(store, nc, bias_scale)
+        t_now = jnp.asarray(int(np.asarray(w.t_now).max()), jnp.int32)
+        delta = jnp.asarray(int(np.asarray(w.window).max()), jnp.int32)
+        z = lambda v: jnp.asarray(v, jnp.int32)
+        windows.append(WindowState(
+            index=index, t_now=t_now, window=delta,
+            ingested=z(int(np.asarray(w.ingested).sum()) if d == 0 else 0),
+            late_drops=z(int(np.asarray(w.late_drops).sum())
+                         if d == 0 else 0),
+            overflow_drops=z(int(np.asarray(w.overflow_drops).sum())
+                             if d == 0 else 0)))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *windows)
+    old_x = int(np.asarray(state.exchange_drops).sum())
+    xd = xdrops.astype(np.int64)
+    xd[0] += old_x
+    return ShardedWindowState(window=stacked,
+                              exchange_drops=jnp.asarray(xd, jnp.int32))

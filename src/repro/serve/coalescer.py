@@ -15,13 +15,17 @@ requests. The coalescer bridges the two:
 * **result slicing** — each query's rows are sliced back out and trimmed
   to its own ``max_length + 1`` columns (everything beyond is PAD by the
   per-lane termination in the engine);
-* **owner routing** (sharded serving, DESIGN.md §13) — over a
+* **owner routing** (sharded serving, DESIGN.md §13/§15) — over a
   node-partitioned window each start lane belongs to exactly one shard;
-  ``lane_owners`` computes that routing host-side for nodes-mode batches,
-  giving the service its per-shard lane-balance accounting (the
-  provisioning signal for ``ShardConfig.walk_slots``). Edges-mode start
-  owners are data-dependent (the picked edge's destination) and resolve
-  on device.
+  ``lane_owners`` resolves that routing host-side for nodes-mode batches
+  through the placement policy's host mirror (``Placement.owner_np`` —
+  the same object the device claim rule consults, so host and device
+  owners agree bitwise for every policy; property-tested in
+  tests/test_placement.py). Edges-mode start owners are data-dependent
+  (the picked edge's destination) and resolve on device; both modes'
+  per-shard claim counts come back from ``serve_lanes_sharded`` and feed
+  ``ServeStats.lanes_by_shard`` (the provisioning signal for
+  ``ShardConfig.walk_slots``).
 """
 from __future__ import annotations
 
@@ -31,7 +35,6 @@ from typing import List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import owner_range_size
 from repro.core.samplers import bias_code
 from repro.core.walk_engine import LaneParams, WalkResult
 from repro.serve.query import WalkQuery
@@ -111,19 +114,18 @@ def slice_result(nodes: np.ndarray, times: np.ndarray, lengths: np.ndarray,
             lengths[rows].copy())
 
 
-def lane_owners(params: LaneParams, node_capacity: int,
-                num_shards: int) -> np.ndarray:
+def lane_owners(params: LaneParams, placement) -> np.ndarray:
     """Owner shard of each start lane in a packed nodes-mode batch.
 
-    The device-side claim rule itself (``owner(v) = clip(v // range, 0,
-    D-1)`` over the clipped start node, with ``range`` from
-    ``core.distributed.owner_range_size``); padding / inactive lanes map
-    to -1. Host-side on purpose: the service uses it for per-shard
-    lane-balance stats without touching device state.
+    The device-side claim rule's host mirror: ``placement.owner_np`` over
+    the clipped start node (repro.distributed.placement, DESIGN.md §15) —
+    one rule, two residencies, bit-equal by construction for every
+    policy. Padding / inactive lanes map to -1. Host-side on purpose:
+    callers get per-shard routing without touching device state.
     """
-    rng = owner_range_size(node_capacity, num_shards)
-    v = np.clip(np.asarray(params.start_node), 0, node_capacity - 1)
-    own = np.clip(v // rng, 0, num_shards - 1).astype(np.int32)
+    v = np.clip(np.asarray(params.start_node), 0,
+                placement.node_capacity - 1)
+    own = placement.owner_np(v)
     return np.where(np.asarray(params.active), own, -1)
 
 

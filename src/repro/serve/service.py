@@ -44,7 +44,6 @@ from repro.core.walk_engine import LaneParams, generate_walk_lanes
 from repro.core.window import WindowState, init_window
 from repro.serve.coalescer import (
     bucketize,
-    lane_owners,
     pack_queries,
     result_arrays,
     slice_result,
@@ -83,8 +82,10 @@ class ServeStats:
     #   §13 bit-identity guarantee needs BOTH drop counters at zero: walk
     #   drops lose lanes, exchange drops lose window edges.
     lanes_by_shard: Dict[int, int] = field(default_factory=dict)
-    # ^ sharded nodes-mode batches: start lanes per owner shard (the
-    #   walk_slots provisioning signal; edges-mode owners resolve on device)
+    # ^ sharded batches, BOTH start modes: start lanes claimed per owner
+    #   shard, counted on device inside ``serve_lanes_sharded`` (the
+    #   walk_slots provisioning signal and the placement-imbalance gauge
+    #   that ``SkewPlacement.from_loads`` consumes, DESIGN.md §15)
     latencies_s: Deque[float] = field(
         default_factory=lambda: deque(maxlen=STATS_WINDOW))
     sample_s: Deque[float] = field(
@@ -136,7 +137,7 @@ class WalkService:
                  serve_cfg: ServeConfig = ServeConfig(),
                  state: Optional[WindowState] = None,
                  batch_capacity: int = 8192, *,
-                 mesh=None, num_shards: int = 0):
+                 mesh=None, num_shards: int = 0, placement=None):
         if cfg.sampler.mode != "index":
             raise ValueError(
                 "serving requires SamplerConfig.mode='index' (per-lane "
@@ -163,10 +164,14 @@ class WalkService:
                     "sharded serving builds its own node-partitioned "
                     "window; the state= override is single-device only")
             self.snapshots = ShardedSnapshotManager(
-                cfg, batch_capacity, mesh=mesh, num_shards=ns)
+                cfg, batch_capacity, mesh=mesh, num_shards=ns,
+                placement=placement)
             self.batch_capacity = self.snapshots.batch_capacity
             self.num_shards = self.snapshots.num_shards
         else:
+            if placement is not None:
+                raise ValueError("placement= requires sharded serving "
+                                 "(num_shards > 0 or mesh=)")
             self.batch_capacity = batch_capacity
             self.num_shards = 0
             self.snapshots = SnapshotManager(
@@ -178,6 +183,9 @@ class WalkService:
         # folds, and solo/coalesced bit-equality needs a stable base.
         self.base_key = jax.random.PRNGKey(cfg.seed)
         self.stats = ServeStats()
+        self._last_shard_claims: Optional[np.ndarray] = None
+        self.placement = (self.snapshots.placement if self.sharded
+                          else None)
         self._pending: Deque[Tuple[int, float, WalkQuery]] = deque()
         self._results: Dict[int, QueryResult] = {}
         self._next_ticket = 0
@@ -281,13 +289,15 @@ class WalkService:
         if self.sharded:
             from repro.distributed.streaming_shard import serve_lanes_sharded
             snap = self.snapshots
-            nodes, times, lengths, drops = serve_lanes_sharded(
+            nodes, times, lengths, drops, claims = serve_lanes_sharded(
                 snap.state, snap.view, self.base_key, params,
                 mesh=snap.mesh, axis_name=snap.axis_name,
                 node_capacity=self.cfg.window.node_capacity, wcfg=wcfg,
-                scfg=self.cfg.sampler, shard_cfg=self.cfg.shard)
+                scfg=self.cfg.sampler, shard_cfg=self.cfg.shard,
+                placement=snap.placement)
             jax.block_until_ready(lengths)
             self.stats.shard_walk_drops += int(np.asarray(drops).sum())
+            self._last_shard_claims = np.asarray(claims)
             return (np.asarray(nodes)[0], np.asarray(times)[0],
                     np.asarray(lengths)[0])
         res = generate_walk_lanes(self.snapshots.current.index,
@@ -316,13 +326,14 @@ class WalkService:
         self.stats.batches += 1
         self.stats.lanes_dispatched += lane_bucket
         self.stats.lanes_live += lanes
-        if self.sharded and start_mode == "nodes":
-            owners = lane_owners(params, self.cfg.window.node_capacity,
-                                 self.num_shards)
-            for d, n in zip(*np.unique(owners[owners >= 0],
-                                       return_counts=True)):
-                self.stats.lanes_by_shard[int(d)] = \
-                    self.stats.lanes_by_shard.get(int(d), 0) + int(n)
+        if self.sharded and self._last_shard_claims is not None:
+            # device-side per-shard claim counters (serve_lanes_sharded):
+            # unlike the old host-side owner fold this covers edges-mode
+            # batches too, whose owners are data-dependent
+            for d, n in enumerate(self._last_shard_claims):
+                if n:
+                    self.stats.lanes_by_shard[int(d)] = \
+                        self.stats.lanes_by_shard.get(int(d), 0) + int(n)
         for (ticket, arrival, q), sl in zip(taken, slices):
             qn, qt, ql = slice_result(nodes, times, lengths, sl, q)
             self._results[ticket] = QueryResult(

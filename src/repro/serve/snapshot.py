@@ -101,7 +101,8 @@ class ShardedSnapshotManager:
     """
 
     def __init__(self, cfg: EngineConfig, batch_capacity: int = 8192, *,
-                 mesh=None, num_shards: int = 0):
+                 mesh=None, num_shards: int = 0, placement=None):
+        from repro.distributed.placement import make_placement
         from repro.distributed.streaming_shard import (
             init_sharded_window,
             window_mesh,
@@ -112,6 +113,11 @@ class ShardedSnapshotManager:
         self.axis_name = self.mesh.axis_names[0]
         D = self.mesh.devices.size
         self.num_shards = D
+        # one placement object routes ingest bucketing AND lane claims, so
+        # the window layout and the serving claim rule can never diverge
+        self.placement = placement if placement is not None else \
+            make_placement(cfg.shard.placement, D, cfg.window.node_capacity,
+                           hash_buckets=cfg.shard.hash_buckets)
         # per-shard batch slice: round the capacity up to a D multiple
         self.batch_slice = -(-batch_capacity // D)
         self.batch_capacity = self.batch_slice * D
@@ -144,7 +150,8 @@ class ShardedSnapshotManager:
         nstate = ingest_sharded_nodonate(
             self.state, split(batch.src), split(batch.dst), split(batch.ts),
             batch.count, mesh=self.mesh, axis_name=self.axis_name,
-            node_capacity=self.node_capacity, shard_cfg=self.cfg.shard)
+            node_capacity=self.node_capacity, shard_cfg=self.cfg.shard,
+            placement=self.placement)
         nview = advance_view(self.view, batch, self.node_capacity)
         self._next = (nstate, nview)
 

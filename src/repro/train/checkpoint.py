@@ -14,6 +14,18 @@ Fault-tolerance design (1000+ node operation):
   path exercised in tests;
 * writes are atomic (tmp file + rename) so a preempted host never
   corrupts the previous checkpoint.
+
+Beyond params/opt trees, this module checkpoints the **sharded sliding
+window itself** (``save_sharded_window`` / ``restore_sharded_window``,
+DESIGN.md §15): the per-leaf writer persists the full
+``ShardedWindowState`` plus the walk RNG key, and a ``placement.json``
+manifest records the node-placement policy (its ``describe()`` descriptor
+round-trips through ``placement_from_manifest``) and the window geometry.
+Restore is **elastic over shard count and policy**: a window saved at 8
+shards under range placement restores at 2 shards under a hash table by
+re-bucketing through the host reshard mirror
+(``streaming_shard.reshard_host`` — the same canonical merge as the
+device reshard), preserving the resident edge multiset.
 """
 from __future__ import annotations
 
@@ -95,3 +107,106 @@ def restore(ckpt_dir: str, target_tree, shardings=None):
             out = jnp.asarray(arr, dtype=ref_leaf.dtype)
         leaves.append(out)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-window checkpoints: ShardedWindowState + placement manifest,
+# with elastic (shard-count / policy-changing) restore (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+_PLACEMENT = "placement.json"
+
+
+def save_sharded_window(ckpt_dir: str, state, placement, step: int,
+                        walk_key=None) -> None:
+    """Persist a ``ShardedWindowState`` + its placement + the walk key.
+
+    ``state`` is the engine's sharded window (leaves [D, ...]);
+    ``placement`` the ``Placement`` that produced its layout (saved as its
+    ``describe()`` descriptor so the exact routing/override tables ride
+    along); ``walk_key`` the engine's PRNG key — without it a restored
+    replay could not continue the bit-exact walk stream
+    (``DistributedStreamingEngine.replay_device`` splits the key per
+    call). Leaf arrays go through the same atomic per-leaf writer as
+    params checkpoints.
+    """
+    tree = {"state": state}
+    if walk_key is not None:
+        tree["walk_key"] = walk_key
+    save(ckpt_dir, tree, step)
+    w = state.window
+    meta = {
+        "placement": placement.describe(),
+        "num_shards": int(state.exchange_drops.shape[0]),
+        "edge_capacity_per_shard": int(w.index.store.src.shape[1]),
+        # node_starts spans nc real nodes + the virtual padding node, with
+        # one extra boundary entry: [D, nc + 2]
+        "node_capacity": int(w.index.node_starts.shape[1]) - 2,
+        "window": int(np.asarray(w.window).max()),
+        "step": step,
+        "has_walk_key": walk_key is not None,
+    }
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir)
+    with os.fdopen(fd, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, os.path.join(ckpt_dir, _PLACEMENT))
+
+
+def load_placement_manifest(ckpt_dir: str) -> Dict[str, Any]:
+    with open(os.path.join(ckpt_dir, _PLACEMENT)) as f:
+        return json.load(f)
+
+
+def restore_sharded_window(ckpt_dir: str, *, placement=None,
+                           num_shards: Optional[int] = None,
+                           bias_scale: float = 1.0):
+    """Restore a sharded window; optionally onto a DIFFERENT layout.
+
+    With no target arguments the window comes back exactly as saved
+    (same shard count, same placement — byte-identical leaves). Passing
+    ``placement`` (a ``Placement``) or ``num_shards`` (re-derives the
+    saved policy kind at the new count; skew hub overrides are dropped
+    since they index the old shard space) re-buckets the restored edges
+    through ``reshard_host`` — the elastic path: an 8-shard checkpoint
+    restores on a 2-device host and vice versa, window edge multiset
+    preserved (up to the counted per-shard capacity clip).
+
+    Returns ``(state, placement, walk_key)`` with host-resident leaves;
+    callers place them onto their mesh (``NamedSharding``) — see
+    ``fault_tolerance.WindowCheckpointer.restore_engine``.
+    """
+    from repro.distributed.placement import (
+        make_placement,
+        placement_from_manifest,
+    )
+    from repro.distributed.streaming_shard import (
+        init_sharded_window,
+        reshard_host,
+    )
+
+    meta = load_placement_manifest(ckpt_dir)
+    old_placement = placement_from_manifest(meta["placement"])
+    D_old = meta["num_shards"]
+    target = {"state": init_sharded_window(
+        D_old, meta["edge_capacity_per_shard"], meta["node_capacity"],
+        meta["window"])}
+    if meta["has_walk_key"]:
+        target["walk_key"] = jax.random.PRNGKey(0)
+    tree = restore(ckpt_dir, target)
+    state = tree["state"]
+    walk_key = tree.get("walk_key")
+
+    if placement is None:
+        if num_shards is None or num_shards == D_old:
+            return state, old_placement, walk_key
+        kind = meta["placement"]["kind"]
+        placement = make_placement(
+            kind if kind in ("range", "hash") else "range",
+            num_shards, meta["node_capacity"])
+    if placement.node_capacity != meta["node_capacity"]:
+        raise ValueError(
+            f"target placement node_capacity {placement.node_capacity} != "
+            f"checkpoint {meta['node_capacity']}")
+    if placement != old_placement:
+        state = reshard_host(state, placement, bias_scale=bias_scale)
+    return state, placement, walk_key

@@ -71,12 +71,12 @@ ref_n, ref_t, ref_l = ref_walks()
 
 # ---- distributed --------------------------------------------------------
 mesh = jax.make_mesh((D,), ("data",))
-idx_stacked, range_size = partition_edges(g.src, g.dst, g.ts, N, D,
-                                          edge_capacity_per_shard=4096)
+idx_stacked, placement = partition_edges(g.src, g.dst, g.ts, N, D,
+                                         edge_capacity_per_shard=4096)
 # provision for the worst case: every walk converging on one shard
-state = init_sharded_walks(D, 160, L, start_nodes, start_times, range_size)
+state = init_sharded_walks(D, 160, L, start_nodes, start_times, placement)
 runner = make_distributed_walker(mesh, "data", idx_stacked, scfg,
-                                 range_size=range_size, max_length=L,
+                                 placement=placement, max_length=L,
                                  bucket_capacity=128)
 out = runner(state)
 got_n, got_t, got_l = gather_walks(out, W)

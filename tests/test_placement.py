@@ -1,0 +1,307 @@
+"""Placement layer invariants + 1-shard reshard/checkpoint fast lane.
+
+Every policy must (a) map every node in [0, node_capacity) to exactly one
+shard, (b) answer identically on host and device, (c) round-trip through
+its checkpoint manifest. The 1-shard engine tests exercise the full
+reshard / checkpoint / supervisor machinery on the single real CPU device;
+the multi-device bit-identity and elastic-restore suites live in
+tests/test_reshard_checkpoint.py (8-device subprocess, slow lane).
+"""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import EngineConfig, WalkConfig
+from repro.distributed.placement import (
+    HashPlacement,
+    Placement,
+    RangePlacement,
+    SkewPlacement,
+    make_placement,
+    placement_from_manifest,
+)
+
+NC = 128
+
+
+def _policies(num_shards, nc=NC):
+    rp = RangePlacement(num_shards=num_shards, node_capacity=nc)
+    hp = HashPlacement.make(num_shards, nc, num_buckets=64)
+    sp = SkewPlacement(num_shards=num_shards, node_capacity=nc, base=rp,
+                       hot_nodes=(0, 7, 31), hot_owners=(num_shards - 1,) * 3)
+    return {"range": rp, "hash": hp, "skew": sp}
+
+
+# ---------------------------------------------------------------------------
+# pure-placement invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 8])
+@pytest.mark.parametrize("kind", ["range", "hash", "skew"])
+def test_every_node_exactly_one_shard(num_shards, kind):
+    p = _policies(num_shards)[kind]
+    v = np.arange(NC, dtype=np.int32)
+    own = p.owner_np(v)
+    assert own.shape == (NC,)
+    assert ((own >= 0) & (own < num_shards)).all()
+    # shard_nodes is the exact inverse: a partition of [0, NC)
+    parts = [p.shard_nodes(d) for d in range(num_shards)]
+    joined = np.concatenate(parts) if parts else np.empty(0, np.int32)
+    assert sorted(joined.tolist()) == list(range(NC))
+    for d, part in enumerate(parts):
+        assert (p.owner_np(part) == d).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 8]))
+def test_host_device_owner_agree(seed, num_shards):
+    """owner() and owner_np() are one rule in two residencies — bit-equal
+    for every policy on arbitrary node-id vectors."""
+    rng = np.random.default_rng(seed)
+    v = rng.integers(0, NC, size=64).astype(np.int32)
+    for p in _policies(num_shards).values():
+        host = p.owner_np(v)
+        dev = np.asarray(jax.jit(p.owner, static_argnums=())(v))
+        np.testing.assert_array_equal(host, dev)
+
+
+def test_range_matches_legacy_formula():
+    from repro.core.distributed import owner_range_size
+    for d in (1, 2, 3, 8):
+        p = RangePlacement(num_shards=d, node_capacity=NC)
+        rs = owner_range_size(NC, d)
+        v = np.arange(NC, dtype=np.int32)
+        np.testing.assert_array_equal(
+            p.owner_np(v), np.clip(v // rs, 0, d - 1))
+
+
+def test_manifest_roundtrip():
+    for p in _policies(4).values():
+        q = placement_from_manifest(p.describe())
+        assert q == p
+    # JSON round-trip (the checkpoint path serializes the manifest)
+    import json
+    sp = _policies(4)["skew"]
+    q = placement_from_manifest(json.loads(json.dumps(sp.describe())))
+    assert q == sp
+
+
+def test_make_placement_and_validation():
+    assert isinstance(make_placement("range", 2, NC), RangePlacement)
+    assert isinstance(make_placement("hash", 2, NC), HashPlacement)
+    sp = make_placement("skew", 2, NC)
+    assert isinstance(sp, SkewPlacement) and sp.hot_nodes == ()
+    with pytest.raises(ValueError, match="unknown placement"):
+        make_placement("modulo", 2, NC)
+    with pytest.raises(ValueError, match="power of two"):
+        HashPlacement(num_shards=2, node_capacity=NC, table=(0, 1, 0))
+    with pytest.raises(ValueError, match="out of shard range"):
+        HashPlacement(num_shards=2, node_capacity=NC, table=(0, 3))
+    rp = RangePlacement(num_shards=2, node_capacity=NC)
+    with pytest.raises(ValueError, match="duplicate"):
+        SkewPlacement(num_shards=2, node_capacity=NC, base=rp,
+                      hot_nodes=(3, 3), hot_owners=(0, 1))
+    with pytest.raises(ValueError, match="length mismatch"):
+        SkewPlacement(num_shards=2, node_capacity=NC, base=rp,
+                      hot_nodes=(3,), hot_owners=())
+
+
+def test_skew_empty_equals_base():
+    rp = RangePlacement(num_shards=4, node_capacity=NC)
+    sp = SkewPlacement(num_shards=4, node_capacity=NC, base=rp)
+    v = np.arange(NC, dtype=np.int32)
+    np.testing.assert_array_equal(sp.owner_np(v), rp.owner_np(v))
+
+
+def test_skew_from_loads_lpt():
+    """Top-k hubs peel off the base assignment onto the least-loaded
+    shards; zero-load nodes never become overrides."""
+    rp = RangePlacement(num_shards=4, node_capacity=NC)
+    loads = np.zeros(NC)
+    loads[0] = 100.0          # hub on shard 0
+    loads[1] = 90.0           # second hub, also shard 0
+    loads[40] = 10.0          # light node on shard 2 (range_size=32)
+    sp = SkewPlacement.from_loads(rp, loads, k=3)
+    assert sp.hot_nodes == (0, 1, 40)
+    # heaviest hub goes to an empty shard, second hub to a different one
+    assert sp.hot_owners[0] != sp.hot_owners[1]
+    own = sp.owner_np(np.arange(NC, dtype=np.int32))
+    shard_load = np.zeros(4)
+    np.add.at(shard_load, own, loads)
+    base_load = np.zeros(4)
+    np.add.at(base_load, rp.owner_np(np.arange(NC, dtype=np.int32)), loads)
+    assert shard_load.max() < base_load.max()
+    # re-deriving from a skew base unwraps instead of stacking
+    sp2 = SkewPlacement.from_loads(sp, loads, k=2)
+    assert isinstance(sp2.base, RangePlacement)
+    with pytest.raises(ValueError, match="entries"):
+        SkewPlacement.from_loads(rp, loads[:-1], k=2)
+
+
+def test_skew_from_loads_skips_zero_load():
+    rp = RangePlacement(num_shards=2, node_capacity=NC)
+    loads = np.zeros(NC)
+    loads[5] = 1.0
+    sp = SkewPlacement.from_loads(rp, loads, k=8)
+    assert sp.hot_nodes == (5,)
+
+
+# ---------------------------------------------------------------------------
+# 1-shard engine: placement plumbing, reshard, checkpoint, supervisor
+# ---------------------------------------------------------------------------
+
+
+def _small_cfg():
+    cfg = EngineConfig()
+    return dataclasses.replace(
+        cfg,
+        window=dataclasses.replace(cfg.window, node_capacity=NC,
+                                   edge_capacity=256, duration=50.0),
+        shard=dataclasses.replace(cfg.shard, num_shards=1,
+                                  edge_capacity_per_shard=256))
+
+
+def _batches(n_batches=6, seed=0):
+    from repro.data.synthetic import powerlaw_temporal_graph
+    g = powerlaw_temporal_graph(NC, 300, t_max=100.0, seed=seed)
+    order = np.argsort(g.ts, kind="stable")
+    src, dst, ts = g.src[order], g.dst[order], g.ts[order]
+    bs = len(src) // n_batches
+    return [(src[i * bs:(i + 1) * bs], dst[i * bs:(i + 1) * bs],
+             ts[i * bs:(i + 1) * bs]) for i in range(n_batches)], bs
+
+
+@pytest.fixture(scope="module")
+def engine_run():
+    from repro.distributed.streaming_shard import DistributedStreamingEngine
+    cfg = _small_cfg()
+    wcfg = WalkConfig(num_walks=16, max_length=4, start_mode="all_nodes")
+    batches, bs = _batches()
+    eng = DistributedStreamingEngine(cfg, batch_capacity=bs)
+    eng.replay_device(batches, wcfg)
+    return cfg, wcfg, batches, bs, eng
+
+
+def test_one_shard_reshard_identity(engine_run):
+    """At D=1 every placement owns everything, so reshard is a pure
+    re-sort of the resident edges by timestamp: the ts column (and the
+    paired src/dst) must be byte-preserved, and the device reshard must
+    agree leaf-for-leaf with the host mirror."""
+    from repro.distributed.streaming_shard import reshard, reshard_host
+    cfg, wcfg, batches, bs, eng = engine_run
+    hp = HashPlacement.make(1, NC)
+    rp = RangePlacement(num_shards=1, node_capacity=NC)
+    dev_state, _ = reshard(eng.state, rp, hp)
+    host_state = reshard_host(eng.state, hp)
+    for a, b in zip(jax.tree_util.tree_leaves(dev_state),
+                    jax.tree_util.tree_leaves(host_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # resident edge multiset preserved (no drops possible at D=1)
+    def edges(state):
+        n = int(np.asarray(state.window.index.num_edges)[0])
+        s = np.asarray(state.window.index.store.src)[0, :n]
+        d = np.asarray(state.window.index.store.dst)[0, :n]
+        t = np.asarray(state.window.index.store.ts)[0, :n]
+        return sorted(zip(s.tolist(), d.tolist(), t.tolist()))
+    assert edges(dev_state) == edges(eng.state)
+    assert int(np.asarray(dev_state.exchange_drops).sum()) == \
+        int(np.asarray(eng.state.exchange_drops).sum())
+
+
+def test_engine_rebalance(engine_run):
+    from repro.distributed.streaming_shard import DistributedStreamingEngine
+    cfg, wcfg, batches, bs, _ = engine_run
+    eng = DistributedStreamingEngine(cfg, batch_capacity=bs)
+    eng.replay_device(batches[:3], wcfg)
+    loads = eng.node_loads()
+    assert loads.shape == (NC,)
+    assert loads.sum() == int(np.asarray(eng.state.window.index.num_edges
+                                         ).sum())
+    newp = eng.rebalance(k=4)
+    assert isinstance(newp, SkewPlacement)
+    assert eng.placement is newp
+    # engine keeps replaying after the live reshard
+    stats, walks, _ = eng.replay_device(batches[3:], wcfg)
+    assert walks is not None
+
+
+def test_checkpoint_roundtrip_exact(engine_run):
+    """Save + restore with no target change is byte-identical, including
+    the walk key; the placement manifest round-trips."""
+    from repro.train import checkpoint as ckpt
+    cfg, wcfg, batches, bs, eng = engine_run
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_sharded_window(d, eng.state, eng.placement, step=6,
+                                 walk_key=eng.key)
+        meta = ckpt.load_placement_manifest(d)
+        assert meta["num_shards"] == 1
+        assert meta["node_capacity"] == NC
+        assert meta["step"] == 6 and meta["has_walk_key"]
+        assert placement_from_manifest(meta["placement"]) == eng.placement
+        state, plc, key = ckpt.restore_sharded_window(d)
+        assert plc == eng.placement
+        np.testing.assert_array_equal(np.asarray(key), np.asarray(eng.key))
+        for a, b in zip(jax.tree_util.tree_leaves(eng.state),
+                        jax.tree_util.tree_leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_restore_new_policy(engine_run):
+    """Restoring under a different placement re-buckets through the host
+    reshard; at D=1 the edge multiset and counters are preserved."""
+    from repro.train import checkpoint as ckpt
+    cfg, wcfg, batches, bs, eng = engine_run
+    hp = HashPlacement.make(1, NC)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_sharded_window(d, eng.state, eng.placement, step=1)
+        state, plc, key = ckpt.restore_sharded_window(d, placement=hp)
+        assert plc == hp and key is None
+        assert int(np.asarray(state.window.index.num_edges).sum()) == \
+            int(np.asarray(eng.state.window.index.num_edges).sum())
+        bad = RangePlacement(num_shards=1, node_capacity=NC * 2)
+        with pytest.raises(ValueError, match="node_capacity"):
+            ckpt.restore_sharded_window(d, placement=bad)
+
+
+def test_stream_supervisor_crash_resume(engine_run):
+    """Kill after 3 batches, restore the step-3 checkpoint, finish: the
+    final window AND walk key are bit-identical to the uninterrupted
+    run (the checkpoint persists the RNG chain, not just the edges)."""
+    from repro.distributed.fault_tolerance import StreamSupervisor
+    from repro.distributed.streaming_shard import DistributedStreamingEngine
+    cfg, wcfg, batches, bs, _ = engine_run
+    # the key splits once per replay_device CALL, so the uninterrupted
+    # reference must feed batches one call at a time like the supervisor
+    ref = DistributedStreamingEngine(cfg, batch_capacity=bs)
+    for b in batches:
+        ref.replay_device([b], wcfg)
+    with tempfile.TemporaryDirectory() as d:
+        sup = StreamSupervisor(d, save_every=3)
+        e1 = DistributedStreamingEngine(cfg, batch_capacity=bs)
+        stats, step = sup.run(e1, batches[:3], wcfg)
+        assert step == 3 and len(stats) == 3
+        assert sup.resume_batch() == 3
+        e2 = sup.checkpointer.restore_engine(cfg, batch_capacity=bs)
+        out2, step2 = sup.run(e2, batches, wcfg,
+                              start_batch=sup.resume_batch())
+        assert step2 == len(batches)
+        for a, b in zip(jax.tree_util.tree_leaves(ref.state),
+                        jax.tree_util.tree_leaves(e2.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(ref.key),
+                                      np.asarray(e2.key))
+
+
+def test_engine_rejects_mismatched_placement():
+    from repro.distributed.streaming_shard import DistributedStreamingEngine
+    cfg = _small_cfg()
+    bad = RangePlacement(num_shards=4, node_capacity=NC)
+    with pytest.raises(ValueError):
+        DistributedStreamingEngine(cfg, batch_capacity=50, placement=bad)

@@ -1,0 +1,233 @@
+"""Live resharding + elastic sharded-window checkpoints (DESIGN.md §15).
+
+Runs in a subprocess with 8 forced host devices. Covers the placement
+layer end to end at real shard counts:
+
+* hash / skew placements replay **bit-identical** to the single-device
+  engine at D in {2, 8} (walk RNG is placement-independent);
+* mid-stream live reshard (range -> hash) loses no edges and leaves the
+  walk stream bit-identical to an engine that never resharded;
+* range -> hash -> range round-trips the window byte-identically (the
+  canonical ts merge is a stable sort; timestamps are distinct);
+* the device reshard and its host numpy mirror agree leaf-for-leaf;
+* a checkpoint written at 8 shards restores at 2 (and 2 -> 8), preserving
+  the window edge multiset, and the continued replay is bit-identical to
+  an uninterrupted engine at the target shard count;
+* engine.rebalance() (measured-load skew overrides + live reshard)
+  keeps the replay running with zero drops.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs.base import (EngineConfig, SamplerConfig, SchedulerConfig,
+                                ShardConfig, WalkConfig, WindowConfig)
+from repro.core.streaming import StreamingEngine
+from repro.data.synthetic import powerlaw_temporal_graph
+from repro.distributed.fault_tolerance import StreamSupervisor
+from repro.distributed.placement import (HashPlacement, RangePlacement,
+                                         SkewPlacement)
+from repro.distributed.streaming_shard import (DistributedStreamingEngine,
+                                               reshard, reshard_host)
+
+N, E = 128, 2000
+g = powerlaw_temporal_graph(N, E, seed=7)
+# distinct timestamps: the canonical reshard merge sorts stably by ts, so
+# unique ts make every per-shard ordering fully deterministic
+ts = np.arange(E, dtype=g.ts.dtype)
+cfg = EngineConfig(
+    window=WindowConfig(duration=5000, edge_capacity=4096, node_capacity=N),
+    sampler=SamplerConfig(bias="exponential", mode="index"),
+    scheduler=SchedulerConfig(path="grouped", regroup="bucket"),
+    shard=ShardConfig(edge_capacity_per_shard=4096, exchange_capacity=1024,
+                      walk_slots=512, walk_bucket_capacity=512),
+)
+wcfg = WalkConfig(num_walks=256, max_length=8, start_mode="all_nodes")
+nb, bs = 5, E // 5
+batches = [(g.src[i*bs:(i+1)*bs], g.dst[i*bs:(i+1)*bs], ts[i*bs:(i+1)*bs])
+           for i in range(nb)]
+
+def edge_multiset(state):
+    ne = np.asarray(state.window.index.num_edges)
+    S = np.asarray(state.window.index.store.src)
+    Dd = np.asarray(state.window.index.store.dst)
+    T = np.asarray(state.window.index.store.ts)
+    out = []
+    for d in range(ne.shape[0]):
+        n = int(ne[d])
+        out += list(zip(S[d, :n].tolist(), Dd[d, :n].tolist(),
+                        T[d, :n].tolist()))
+    return sorted(out)
+
+def counters(state):
+    out = {f: int(np.asarray(getattr(state.window, f)).sum())
+           for f in ("ingested", "late_drops", "overflow_drops")}
+    out["exchange_drops"] = int(np.asarray(state.exchange_drops).sum())
+    return out
+
+ref = StreamingEngine(cfg, batch_capacity=bs)
+rstats, rwalks, _ = ref.replay_device(batches, wcfg, return_walks=True)
+n_ref = int(ref.state.index.store.num_edges)
+ref_edges = sorted(zip(
+    np.asarray(ref.state.index.store.src)[:n_ref].tolist(),
+    np.asarray(ref.state.index.store.dst)[:n_ref].tolist(),
+    np.asarray(ref.state.index.store.ts)[:n_ref].tolist()))
+
+# --- hash + skew placements bit-identical to single-device at D {2, 8} ---
+for D in (2, 8):
+    rp = RangePlacement(num_shards=D, node_capacity=N)
+    for plc in (HashPlacement.make(D, N),
+                SkewPlacement(num_shards=D, node_capacity=N, base=rp,
+                              hot_nodes=(0, 1, 2, 3),
+                              hot_owners=(D - 1,) * 4)):
+        deng = DistributedStreamingEngine(cfg, batch_capacity=bs,
+                                          num_shards=D, placement=plc)
+        dstats, dwalks, _ = deng.replay_device(batches, wcfg)
+        assert int(dstats.exchange_drops.sum()) == 0, (D, plc.kind)
+        assert int(dstats.walk_drops.sum()) == 0, (D, plc.kind)
+        for f in rstats._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(rstats, f)),
+                np.asarray(getattr(dstats.replay, f)),
+                err_msg=f"D={D} {plc.kind} {f}")
+        np.testing.assert_array_equal(rwalks.nodes, dwalks.nodes,
+                                      err_msg=f"D={D} {plc.kind}")
+        np.testing.assert_array_equal(rwalks.times, dwalks.times)
+        np.testing.assert_array_equal(rwalks.lengths, dwalks.lengths)
+        assert edge_multiset(deng.state) == ref_edges, (D, plc.kind)
+        # every shard's resident edges are the ones the placement assigns
+        S_ = np.asarray(deng.state.window.index.store.src)
+        ne = np.asarray(deng.state.window.index.num_edges)
+        for d in range(D):
+            own = plc.owner_np(S_[d, :int(ne[d])])
+            assert (own == d).all(), (D, plc.kind, d)
+print("POLICY_IDENTITY_OK")
+
+# --- mid-stream live reshard range -> hash at D=8 ------------------------
+D = 8
+rp = RangePlacement(num_shards=D, node_capacity=N)
+hp = HashPlacement.make(D, N)
+eng = DistributedStreamingEngine(cfg, batch_capacity=bs, num_shards=D)
+eng.replay_device(batches[:3], wcfg)
+pre = counters(eng.state)
+eng.reshard_to(hp)
+assert eng.placement is hp
+post = counters(eng.state)
+assert post == pre, (pre, post)     # reshard moves edges, not counters
+s2, w2, _ = eng.replay_device(batches[3:], wcfg)
+assert int(s2.exchange_drops.sum()) == 0 and int(s2.walk_drops.sum()) == 0
+
+base = DistributedStreamingEngine(cfg, batch_capacity=bs, num_shards=D)
+base.replay_device(batches[:3], wcfg)     # same call pattern -> same keys
+b2, bw2, _ = base.replay_device(batches[3:], wcfg)
+np.testing.assert_array_equal(w2.nodes, bw2.nodes)
+np.testing.assert_array_equal(w2.times, bw2.times)
+np.testing.assert_array_equal(w2.lengths, bw2.lengths)
+for f in b2.replay._fields:
+    np.testing.assert_array_equal(np.asarray(getattr(s2.replay, f)),
+                                  np.asarray(getattr(b2.replay, f)),
+                                  err_msg=f"live-reshard {f}")
+assert edge_multiset(eng.state) == edge_multiset(base.state) == ref_edges
+print("LIVE_RESHARD_OK")
+
+# --- range -> hash -> range round-trip is byte-identical -----------------
+state0 = base.state
+s_hash, _ = reshard(state0, rp, hp)
+s_back, _ = reshard(s_hash, hp, rp)
+for name in ("t_now", "window"):
+    np.testing.assert_array_equal(
+        np.asarray(getattr(state0.window, name)),
+        np.asarray(getattr(s_back.window, name)), err_msg=name)
+idx0 = state0.window.index
+idxb = s_back.window.index
+np.testing.assert_array_equal(np.asarray(idx0.num_edges),
+                              np.asarray(idxb.num_edges))
+ne = np.asarray(idx0.num_edges)
+for fld in ("src", "dst", "ts"):
+    a = np.asarray(getattr(idx0.store, fld))
+    b = np.asarray(getattr(idxb.store, fld))
+    for d in range(D):
+        np.testing.assert_array_equal(a[d, :int(ne[d])], b[d, :int(ne[d])],
+                                      err_msg=f"roundtrip {fld} shard {d}")
+np.testing.assert_array_equal(np.asarray(idx0.node_starts),
+                              np.asarray(idxb.node_starts))
+assert counters(s_back) == counters(state0)
+
+# --- device reshard == host mirror, leaf for leaf, at D=8 ----------------
+h_hash = reshard_host(state0, hp)
+for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_flatten_with_path(s_hash)[0],
+        jax.tree_util.tree_flatten_with_path(h_hash)[0]):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                  err_msg=str(pa))
+print("ROUNDTRIP_OK")
+
+# --- elastic checkpoint: 8 -> 2 and 2 -> 8 -------------------------------
+for D_save, D_load in ((8, 2), (2, 8)):
+    with tempfile.TemporaryDirectory() as tmp:
+        sup = StreamSupervisor(tmp, save_every=3)
+        e1 = DistributedStreamingEngine(cfg, batch_capacity=bs,
+                                        num_shards=D_save)
+        sup.run(e1, batches[:3], wcfg)
+        assert sup.resume_batch() == 3
+        e2 = sup.checkpointer.restore_engine(cfg, batch_capacity=bs,
+                                             num_shards=D_load)
+        assert e2.num_shards == D_load
+        assert edge_multiset(e2.state) == edge_multiset(e1.state)
+        assert counters(e2.state) == counters(e1.state)
+        out, step = sup.run(e2, batches, wcfg, start_batch=3)
+        assert step == nb
+
+        # uninterrupted reference at the TARGET shard count, same
+        # per-batch call pattern (the walk key splits once per call)
+        r2 = DistributedStreamingEngine(cfg, batch_capacity=bs,
+                                        num_shards=D_load)
+        for b in batches[:-1]:
+            r2.replay_device([b], wcfg)
+        rs_, rw_, _ = r2.replay_device([batches[-1]], wcfg)
+        np.testing.assert_array_equal(np.asarray(e2.key), np.asarray(r2.key))
+        assert edge_multiset(e2.state) == edge_multiset(r2.state) == ref_edges
+        assert counters(e2.state) == counters(r2.state)
+        for f in rs_.replay._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out[-1].replay, f)),
+                np.asarray(getattr(rs_.replay, f)),
+                err_msg=f"elastic {D_save}->{D_load} {f}")
+print("ELASTIC_CKPT_OK")
+
+# --- rebalance: measured-load skew overrides + live reshard --------------
+eng = DistributedStreamingEngine(cfg, batch_capacity=bs, num_shards=8)
+eng.replay_device(batches[:3], wcfg)
+loads = eng.node_loads()
+assert loads.shape == (N,) and loads.sum() > 0
+before = edge_multiset(eng.state)
+newp = eng.rebalance(k=8)
+assert isinstance(newp, SkewPlacement) and len(newp.hot_nodes) > 0
+assert edge_multiset(eng.state) == before
+s3, _, _ = eng.replay_device(batches[3:], wcfg)
+assert int(s3.exchange_drops.sum()) == 0 and int(s3.walk_drops.sum()) == 0
+# the hot overrides actually moved hub load off the heaviest shard
+sl = eng.shard_loads()
+assert sl.sum() == len(ref_edges)
+print("REBALANCE_OK")
+"""
+
+pytestmark = pytest.mark.slow      # 8-device subprocess
+
+
+def test_reshard_and_elastic_checkpoint_8_devices():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    for sentinel in ("POLICY_IDENTITY_OK", "LIVE_RESHARD_OK", "ROUNDTRIP_OK",
+                     "ELASTIC_CKPT_OK", "REBALANCE_OK"):
+        assert sentinel in out.stdout, \
+            (sentinel, out.stdout[-1500:], out.stderr[-3000:])

@@ -309,12 +309,18 @@ def test_pack_queries_edge_cases():
 def test_lane_owners_routing():
     """Host-side owner routing matches the device claim rule; padding
     lanes map to -1."""
+    from repro.distributed.placement import make_placement
     from repro.serve import lane_owners
     params, _ = pack_queries(
         [WalkQuery(start_nodes=(0, 63, 64, 127), max_length=4)], 8, 4)
-    own = lane_owners(params, node_capacity=128, num_shards=2)
+    own = lane_owners(params, make_placement("range", 2, 128))
     assert own.tolist() == [0, 0, 1, 1, -1, -1, -1, -1]
-    assert lane_owners(params, 128, 1).tolist() == [0, 0, 0, 0] + [-1] * 4
+    own1 = lane_owners(params, make_placement("range", 1, 128))
+    assert own1.tolist() == [0, 0, 0, 0] + [-1] * 4
+    # hash policy routes through the same host mirror; still -1 on padding
+    hown = lane_owners(params, make_placement("hash", 2, 128))
+    assert (hown[:4] >= 0).all() and (hown[:4] <= 1).all()
+    assert hown[4:].tolist() == [-1] * 4
 
 
 def test_shape_buckets():

@@ -131,6 +131,18 @@ t = svc.submit(WalkQuery(start_nodes=starts, max_length=4, seed=5),
 svc.step()
 assert svc.poll(t) is not None
 assert len(svc.stats.lanes_by_shard) > 1, svc.stats.lanes_by_shard
+# nodes-mode claims are device-counted: one claim per admitted start
+# lane (a zero-degree start node is claimed by no shard)
+assert 0 < sum(svc.stats.lanes_by_shard.values()) <= len(starts)
+
+# --- edges-mode lanes are claim-counted on device too --------------------
+before = sum(svc.stats.lanes_by_shard.values())
+t = svc.submit(WalkQuery(num_walks=24, start_mode="edges", max_length=4,
+                         seed=9), strict=True)
+svc.step()
+assert svc.poll(t) is not None
+after = sum(svc.stats.lanes_by_shard.values())
+assert after == before + 24, (before, after)
 
 # --- walk-slot overflow is counted, not crashed --------------------------
 tiny = EngineConfig(
