@@ -1,14 +1,25 @@
 """Shared benchmark utilities. All timings are CPU wall-clock (relative
-claims only; TPU projections come from the roofline model — DESIGN.md §9)."""
+claims only; TPU projections come from the roofline model — DESIGN.md §9).
+
+Every suite's ``emit()`` rows are also accumulated into a per-suite
+record (``begin_suite``/``end_suite``, driven by ``benchmarks.run``);
+with ``--emit-json`` each suite writes a schema-validated
+``BENCH_<suite>.json`` in the shared ``tempest-bench/v1`` layout
+(obs/export.py, DESIGN.md §16) — one schema for every artifact instead
+of per-suite ad-hoc payloads.
+"""
 from __future__ import annotations
 
 import json
+import math
 import os
 import time
-from typing import Callable
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
+
+from repro.obs.export import bench_doc
 
 from repro.configs.base import (
     EngineConfig,
@@ -28,17 +39,61 @@ from repro.data.synthetic import powerlaw_temporal_graph
 EMIT_JSON = False
 SMALL = False
 
+# Active suite record (one per ``begin_suite``/``end_suite`` bracket):
+# emit() rows + any write_json() detail payloads land here.
+_SUITE: Optional[str] = None
+_SUITE_ROWS: List[dict] = []
+_SUITE_EXTRAS: Dict[str, dict] = {}
 
-def write_json(name: str, payload: dict) -> str | None:
-    """Write ``BENCH_<name>.json`` in the cwd when --emit-json is active."""
+
+def begin_suite(name: str) -> None:
+    """Open a suite record; subsequent ``emit``/``write_json`` calls
+    accumulate into it until ``end_suite``."""
+    global _SUITE, _SUITE_ROWS, _SUITE_EXTRAS
+    _SUITE = name
+    _SUITE_ROWS = []
+    _SUITE_EXTRAS = {}
+
+
+def end_suite() -> str | None:
+    """Close the active suite; with --emit-json write its accumulated
+    rows (+ detail payloads) as a schema-validated ``BENCH_<suite>.json``
+    in the shared ``tempest-bench/v1`` layout."""
+    global _SUITE, _SUITE_ROWS, _SUITE_EXTRAS
+    if _SUITE is None:
+        return None
+    name, rows, extras = _SUITE, _SUITE_ROWS, _SUITE_EXTRAS
+    _SUITE, _SUITE_ROWS, _SUITE_EXTRAS = None, [], {}
     if not EMIT_JSON:
         return None
+    doc = bench_doc(name, rows, results=extras or None)
+    return _dump_json(name, doc)
+
+
+def _dump_json(name: str, doc: dict) -> str:
     path = os.path.join(os.getcwd(), f"BENCH_{name}.json")
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
+        json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {path}", flush=True)
     return path
+
+
+def write_json(name: str, payload: dict) -> str | None:
+    """Persist a suite's detail payload when --emit-json is active.
+
+    The payload is folded into the active suite record (so the suite's
+    ``BENCH_<suite>.json`` carries it under ``results``) and, for
+    backwards compatibility with existing artifact names, also written
+    standalone as ``BENCH_<name>.json`` — wrapped in the same
+    ``tempest-bench/v1`` schema with the rows emitted so far.
+    """
+    if _SUITE is not None:
+        _SUITE_EXTRAS[name] = payload
+    if not EMIT_JSON:
+        return None
+    doc = bench_doc(name, list(_SUITE_ROWS), results={name: payload})
+    return _dump_json(name, doc)
 
 
 def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 1,
@@ -58,6 +113,12 @@ def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 1,
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
+    us = float(us_per_call)
+    if not math.isfinite(us):
+        us = -1.0          # schema wants finite numbers; -1 marks "n/a"
+    if _SUITE is not None:
+        _SUITE_ROWS.append(
+            {"name": name, "us_per_call": us, "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
 
 

@@ -8,11 +8,15 @@ Usage:
     python -m benchmarks.run [--help] [--emit-json] [--small] [filter]
 
 With a ``filter`` argument, only suites whose name contains the substring
-run. ``--emit-json`` additionally persists machine-readable
-``BENCH_*.json`` artifacts (suites that support it, e.g. fused_walks
--> BENCH_fused.json). ``--small`` shrinks suite configs to nightly-CI
-scale. ``--help`` lists every suite with its paper counterpart (the same
-set documented in benchmarks/README.md).
+run. ``--emit-json`` additionally persists machine-readable artifacts:
+every suite's emit() rows are written as a schema-validated
+``BENCH_<suite>.json`` in the shared ``tempest-bench/v1`` layout
+(repro.obs.export.bench_doc, DESIGN.md §16); suites with extra detail
+payloads (fused_walks -> BENCH_fused.json, fig7 -> BENCH_shard.json)
+keep those artifact names, wrapped in the same schema. ``--small``
+shrinks suite configs to nightly-CI scale. ``--help`` lists every suite
+with its paper counterpart (the same set documented in
+benchmarks/README.md).
 """
 from __future__ import annotations
 
@@ -87,8 +91,10 @@ def main() -> None:
         if only and only not in name:
             continue
         print(f"# --- {name} ---", flush=True)
+        common.begin_suite(name)
         try:
             importlib.import_module(f"benchmarks.{mod_name}").run()
+            common.end_suite()
         except Exception:
             traceback.print_exc()
             failed.append(name)

@@ -1,7 +1,12 @@
-"""Streaming ingestion under a sliding window (paper §3.3 regime).
+"""Streaming ingestion under a sliding window (paper §3.3 regime),
+plus the observability quickstart (DESIGN.md §16): both replay drivers
+publish into one metrics registry, exported at the end as Prometheus
+text, a JSON snapshot, and a streaming-health document.
 
     PYTHONPATH=src python examples/streaming_walks.py
 """
+import json
+
 import numpy as np
 
 from repro.configs.base import (
@@ -14,6 +19,7 @@ from repro.configs.base import (
 from repro.core.streaming import StreamingEngine
 from repro.core.validation import validate_walks
 from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.obs import health_snapshot, new_registry, to_prometheus
 
 
 def main():
@@ -24,7 +30,8 @@ def main():
         sampler=SamplerConfig(bias="exponential", mode="index"),
         scheduler=SchedulerConfig(path="grouped"),
     )
-    engine = StreamingEngine(cfg, batch_capacity=8192)
+    registry = new_registry()     # or omit: engines share the process default
+    engine = StreamingEngine(cfg, batch_capacity=8192, registry=registry)
     wcfg = WalkConfig(num_walks=2048, max_length=30, start_mode="nodes")
 
     def on_batch(eng, walks):
@@ -44,13 +51,24 @@ def main():
     # Same replay, device-resident: all 16 batches run under one lax.scan
     # (merge ingest + fused walks, donated buffers) with a single host sync
     # at the end — the throughput driver (DESIGN.md §4).
-    engine2 = StreamingEngine(cfg, batch_capacity=8192)
+    engine2 = StreamingEngine(cfg, batch_capacity=8192, registry=registry)
     stats, secs = engine2.replay_device(chronological_batches(g, 16), wcfg)
     print(f"device-resident replay: {len(stats.edges_active)} batches in "
           f"{secs:.2f}s incl. one-time jit compile "
           f"(see benchmarks/streaming_replay.py for warmed timings), "
           f"late={int(stats.late_drops[-1])} "
           f"overflow={int(stats.overflow_drops[-1])}")
+
+    # Both drivers published into the same registry (the device replay's
+    # probe counters flushed at its one existing host sync). One export
+    # covers everything — DESIGN.md §16.
+    print("\n--- Prometheus exposition (excerpt) ---")
+    print("\n".join(l for l in to_prometheus(registry).splitlines()
+                    if l.startswith(("stream_", "window_", "drops_"))))
+    health = health_snapshot(registry)     # validated tempest-health/v1
+    print("\n--- streaming health ---")
+    print(json.dumps({k: health[k] for k in ("ingest", "window", "drops")},
+                     indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

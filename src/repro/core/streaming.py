@@ -56,6 +56,13 @@ from repro.core.window import (
     ingest_sort,
     init_window,
 )
+from repro.obs.probes import (
+    flush_replay_probes,
+    replay_probe_update,
+    replay_probe_zeros,
+)
+from repro.obs.registry import MetricsRegistry, get_registry
+from repro.obs.tracing import span
 
 
 # sample_walks_sharded replicates the index per device; past this size a
@@ -140,6 +147,61 @@ ingest_and_walk_donated = partial(
 )(_ingest_and_walk_donated_impl)
 
 
+def _replay_scan_impl(state: WindowState, batches: EdgeBatch, key: jax.Array,
+                      node_capacity: int, wcfg: WalkConfig,
+                      scfg: SamplerConfig, sched_cfg: SchedulerConfig,
+                      bias_scale: float = 1.0, with_probes: bool = False):
+    """Shared body of ``replay_scan`` / ``replay_scan_probed``.
+
+    ``with_probes`` threads an obs probe vector (obs/probes.py) through
+    the scan carry as an *extra* leaf: the walk/RNG dataflow is untouched
+    (probe updates are pure ``at[].add`` on counters the stats already
+    compute), and when False the traced program is exactly the historical
+    one — no probe leaf exists to be DCE'd.
+    """
+
+    def step(carry, batch):
+        if with_probes:
+            st, k, bufs, _, pv = carry
+        else:
+            st, k, bufs, _ = carry
+        k, sub = jax.random.split(k)
+        st2, res = _ingest_and_walk_impl(st, batch, sub, node_capacity,
+                                         wcfg, scfg, sched_cfg, bias_scale,
+                                         walk_bufs=bufs)
+        stats = ReplayStats(
+            edges_active=st2.index.num_edges,
+            t_now=st2.t_now,
+            ingested=st2.ingested,
+            late_drops=st2.late_drops,
+            overflow_drops=st2.overflow_drops,
+            mean_len=jnp.mean(res.lengths.astype(jnp.float32)),
+        )
+        # walk buffers ride the scan carry: batch k+1's walks are written
+        # into batch k's storage (DESIGN.md §10)
+        nbufs = WalkBuffers(res.nodes, res.times)
+        if with_probes:
+            pv = replay_probe_update(
+                pv,
+                ingested_delta=st2.ingested - st.ingested,
+                late_delta=st2.late_drops - st.late_drops,
+                overflow_delta=st2.overflow_drops - st.overflow_drops,
+                lengths=res.lengths)
+            return (st2, k, nbufs, res.lengths, pv), stats
+        return (st2, k, nbufs, res.lengths), stats
+
+    lengths0 = jnp.zeros((wcfg.num_walks,), jnp.int32)
+    carry0 = [state, key, alloc_walk_buffers(wcfg), lengths0]
+    if with_probes:
+        carry0.append(replay_probe_zeros())
+    carry, stats = jax.lax.scan(step, tuple(carry0), batches)
+    walks = WalkResult(nodes=carry[2].nodes, times=carry[2].times,
+                       lengths=carry[3], stats=None)
+    if with_probes:
+        return carry[0], stats, walks, carry[4]
+    return carry[0], stats, walks
+
+
 @partial(jax.jit,
          static_argnames=("node_capacity", "wcfg", "scfg", "sched_cfg",
                           "bias_scale"),
@@ -158,31 +220,30 @@ def replay_scan(state: WindowState, batches: EdgeBatch, key: jax.Array,
     (repro/distributed/streaming_shard.py, DESIGN.md §12) must reproduce
     bit-for-bit, and costs nothing to expose.
     """
+    return _replay_scan_impl(state, batches, key, node_capacity, wcfg,
+                             scfg, sched_cfg, bias_scale, with_probes=False)
 
-    def step(carry, batch):
-        st, k, bufs, _ = carry
-        k, sub = jax.random.split(k)
-        st, res = _ingest_and_walk_impl(st, batch, sub, node_capacity,
-                                        wcfg, scfg, sched_cfg, bias_scale,
-                                        walk_bufs=bufs)
-        stats = ReplayStats(
-            edges_active=st.index.num_edges,
-            t_now=st.t_now,
-            ingested=st.ingested,
-            late_drops=st.late_drops,
-            overflow_drops=st.overflow_drops,
-            mean_len=jnp.mean(res.lengths.astype(jnp.float32)),
-        )
-        # walk buffers ride the scan carry: batch k+1's walks are written
-        # into batch k's storage (DESIGN.md §10)
-        return (st, k, WalkBuffers(res.nodes, res.times), res.lengths), stats
 
-    lengths0 = jnp.zeros((wcfg.num_walks,), jnp.int32)
-    (state, _, bufs, lengths), stats = jax.lax.scan(
-        step, (state, key, alloc_walk_buffers(wcfg), lengths0), batches)
-    walks = WalkResult(nodes=bufs.nodes, times=bufs.times, lengths=lengths,
-                       stats=None)
-    return state, stats, walks
+@partial(jax.jit,
+         static_argnames=("node_capacity", "wcfg", "scfg", "sched_cfg",
+                          "bias_scale"),
+         donate_argnums=(0,))
+def replay_scan_probed(state: WindowState, batches: EdgeBatch,
+                       key: jax.Array, node_capacity: int, wcfg: WalkConfig,
+                       scfg: SamplerConfig, sched_cfg: SchedulerConfig,
+                       bias_scale: float = 1.0):
+    """``replay_scan`` plus an obs probe vector (DESIGN.md §16).
+
+    Returns ``(final_state, ReplayStats, final_walks, probes)`` with
+    ``probes`` an int32[NUM_REPLAY_PROBES] device vector accumulated
+    across the scan — flush it with ``obs.flush_replay_probes`` at the
+    same host sync that reads ``stats``. Walks and stats are bit-identical
+    to ``replay_scan`` (pinned by tests/test_obs_probes.py); keeping this
+    a separate jit entry point leaves the uninstrumented program
+    byte-unchanged.
+    """
+    return _replay_scan_impl(state, batches, key, node_capacity, wcfg,
+                             scfg, sched_cfg, bias_scale, with_probes=True)
 
 
 class StreamingEngine:
@@ -194,7 +255,9 @@ class StreamingEngine:
     """
 
     def __init__(self, cfg: EngineConfig, batch_capacity: int,
-                 ingest_impl: str = "merge"):
+                 ingest_impl: str = "merge",
+                 registry: Optional[MetricsRegistry] = None,
+                 probes: bool = True):
         if ingest_impl not in ("merge", "sort"):
             raise ValueError(f"unknown ingest_impl {ingest_impl!r}")
         self.cfg = cfg
@@ -205,18 +268,80 @@ class StreamingEngine:
             int(cfg.window.duration))
         self.key = jax.random.PRNGKey(cfg.seed)
         self.stats = StreamStats()
+        # obs integration (DESIGN.md §16): every driver publishes into the
+        # registry; ``probes=False`` pins replay_device to the historical
+        # uninstrumented program (used by the byte-identity tests).
+        self.registry = registry if registry is not None else get_registry()
+        self.probes = probes
+        # window-counter baselines: state counters are cumulative, the
+        # registry wants monotonic deltas
+        self._ingested_seen = 0
+        self._late_seen = 0
+        self._overflow_seen = 0
         # walk-buffer pool for sample_walks_donated, keyed by (W, L)
         self._walk_bufs: dict = {}
         self._warned_replicated_index = False
 
+    def _publish_window(self) -> None:
+        """Refresh window gauges + drop deltas from the synced state."""
+        from repro.obs.registry import count_drop
+        reg = self.registry
+        num_edges = int(self.state.index.num_edges)
+        reg.set_gauge("window_edges_active", num_edges,
+                      help="edges resident in the temporal window")
+        reg.set_gauge("window_t_now", int(self.state.t_now),
+                      help="watermark timestamp of the window")
+        reg.set_gauge("window_occupancy",
+                      num_edges / self.cfg.window.edge_capacity,
+                      help="window fill fraction (edges_active / capacity)")
+        ingested = int(self.state.ingested)
+        late = int(self.state.late_drops)
+        overflow = int(self.state.overflow_drops)
+        reg.inc("stream_edges_ingested_total",
+                max(0, ingested - self._ingested_seen),
+                labels={"driver": "host"},
+                help="edges delivered into the window")
+        count_drop(reg, "ingest_late", max(0, late - self._late_seen))
+        count_drop(reg, "window_overflow",
+                   max(0, overflow - self._overflow_seen))
+        self._ingested_seen = ingested
+        self._late_seen = late
+        self._overflow_seen = overflow
+
+    def _publish_window_from_replay(self, stats: ReplayStats) -> None:
+        """Window gauges after a device replay; drop/ingest counters were
+        already published from the probe vector, so only the cumulative
+        baselines advance here."""
+        last = np.asarray(stats.edges_active)
+        if last.size == 0:
+            return
+        reg = self.registry
+        edges = int(last[-1])
+        reg.set_gauge("window_edges_active", edges,
+                      help="edges resident in the temporal window")
+        reg.set_gauge("window_t_now", int(np.asarray(stats.t_now)[-1]),
+                      help="watermark timestamp of the window")
+        reg.set_gauge("window_occupancy",
+                      edges / self.cfg.window.edge_capacity,
+                      help="window fill fraction (edges_active / capacity)")
+        self._ingested_seen = int(np.asarray(stats.ingested)[-1])
+        self._late_seen = int(np.asarray(stats.late_drops)[-1])
+        self._overflow_seen = int(np.asarray(stats.overflow_drops)[-1])
+
     def ingest_batch(self, src, dst, ts) -> None:
         batch = make_batch(src, dst, ts, capacity=self.batch_capacity)
         t0 = time.perf_counter()
-        self.state = self._ingest(self.state, batch,
-                                  self.cfg.window.node_capacity)
-        jax.block_until_ready(self.state.index.ns_order)
+        with span("ingest_merge", self.registry):
+            self.state = self._ingest(self.state, batch,
+                                      self.cfg.window.node_capacity)
+            jax.block_until_ready(self.state.index.ns_order)
         self.stats.ingest_s.append(time.perf_counter() - t0)
         self.stats.edges_active.append(int(self.state.index.num_edges))
+        self.registry.inc("stream_batches_total", 1,
+                          labels={"driver": "host"},
+                          help="batches replayed through the streaming "
+                               "drivers")
+        self._publish_window()
 
     def sample_walks(self, wcfg: WalkConfig,
                      collect_stats: bool = False):
@@ -225,7 +350,7 @@ class StreamingEngine:
         res = generate_walks(self.state.index, sub, wcfg,
                              self.cfg.sampler, self.cfg.scheduler,
                              collect_stats=collect_stats)
-        self._finish_sample(res, t0)
+        self._finish_sample(res, t0, path="host")
         return res
 
     def sample_walks_donated(self, wcfg: WalkConfig):
@@ -245,7 +370,7 @@ class StreamingEngine:
         t0 = time.perf_counter()
         res = generate_walks_donated(self.state.index, sub, bufs, wcfg,
                                      self.cfg.sampler, self.cfg.scheduler)
-        self._finish_sample(res, t0)
+        self._finish_sample(res, t0, path="donated")
         self._walk_bufs[shape_key] = WalkBuffers(res.nodes, res.times)
         return res
 
@@ -272,7 +397,7 @@ class StreamingEngine:
         res = generate_walks_sharded(self.state.index, sub, wcfg,
                                      self.cfg.sampler, self.cfg.scheduler,
                                      mesh=mesh)
-        self._finish_sample(res, t0)
+        self._finish_sample(res, t0, path="sharded")
         return res
 
     def _warn_replicated_index(self) -> None:
@@ -295,16 +420,28 @@ class StreamingEngine:
                 stacklevel=3)
             self._warned_replicated_index = True
 
-    def _finish_sample(self, res, t0: float) -> float:
+    def _finish_sample(self, res, t0: float, path: str = "host") -> float:
         """Shared stats tail of every sample_walks* entry point: sync,
-        record wall time + valid-walk fraction, return the elapsed
-        seconds."""
+        record wall time + valid-walk fraction, publish into the registry,
+        return the elapsed seconds."""
         jax.block_until_ready(res.nodes)
         elapsed = time.perf_counter() - t0
         self.stats.sample_s.append(elapsed)
         lengths = np.asarray(res.lengths)
         frac = float(np.mean(lengths >= 2)) if lengths.size else 0.0
         self.stats.walks_valid.append(frac)
+        reg = self.registry
+        reg.inc("walks_dispatched_total", int(lengths.size),
+                labels={"path": path},
+                help="walk slots dispatched, by sampling path")
+        reg.inc("walks_emitted_total", int(np.sum(lengths >= 2)),
+                labels={"driver": "host"},
+                help="walks with at least one hop")
+        reg.inc("walk_hops_total",
+                int(np.sum(np.maximum(lengths.astype(np.int64) - 1, 0))),
+                labels={"source": "replay"}, help="hop cells executed")
+        reg.observe("walk_sample_seconds", elapsed, labels={"path": path},
+                    help="wall time per sample_walks dispatch")
         return elapsed
 
     def replay(self, batches: Iterable, wcfg: WalkConfig,
@@ -328,11 +465,24 @@ class StreamingEngine:
         stacked = stack_batches(batches, self.batch_capacity)
         self.key, sub = jax.random.split(self.key)
         t0 = time.perf_counter()
-        self.state, stats, walks = replay_scan(
-            self.state, stacked, sub, self.cfg.window.node_capacity,
-            wcfg, self.cfg.sampler, self.cfg.scheduler)
-        jax.block_until_ready(stats)           # the single sync point
+        if self.probes:
+            self.state, stats, walks, pv = replay_scan_probed(
+                self.state, stacked, sub, self.cfg.window.node_capacity,
+                wcfg, self.cfg.sampler, self.cfg.scheduler)
+            # the single sync point — probes ride the same materialization
+            jax.block_until_ready((stats, pv))
+        else:
+            self.state, stats, walks = replay_scan(
+                self.state, stacked, sub, self.cfg.window.node_capacity,
+                wcfg, self.cfg.sampler, self.cfg.scheduler)
+            jax.block_until_ready(stats)       # the single sync point
         elapsed = time.perf_counter() - t0
+        if self.probes:
+            flush_replay_probes(self.registry, pv, driver="device")
+            self.registry.observe("replay_seconds", elapsed,
+                                  labels={"driver": "device"},
+                                  help="wall time per replay_device call")
+            self._publish_window_from_replay(stats)
         # NOTE: self.stats is left untouched — StreamStats' lists are
         # parallel per host-loop batch, and this driver has no per-batch
         # host timings to pair with. Everything lives in the return value.

@@ -23,6 +23,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from repro.obs.registry import MetricsRegistry, get_registry
 from repro.train import checkpoint as ckpt
 
 
@@ -68,6 +69,11 @@ class TrainSupervisor:
     ckpt_dir: str
     save_every: int = 100
     straggler: StragglerPolicy = field(default_factory=StragglerPolicy)
+    registry: Optional[MetricsRegistry] = None
+
+    @property
+    def _reg(self) -> MetricsRegistry:
+        return self.registry if self.registry is not None else get_registry()
 
     def resume_step(self) -> int:
         s = ckpt.latest_step(os.path.join(self.ckpt_dir, "params"))
@@ -94,8 +100,12 @@ class TrainSupervisor:
             t0 = time.perf_counter()
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             verdict = self.straggler.observe(time.perf_counter() - t0)
-            if verdict != "ok" and on_event:
-                on_event(step, verdict)
+            if verdict != "ok":
+                self._reg.inc("straggler_events_total", 1,
+                              labels={"verdict": verdict},
+                              help="straggler watchdog flags, by verdict")
+                if on_event:
+                    on_event(step, verdict)
             step += 1
             if step % self.save_every == 0:
                 self.save(params, opt_state, step)
@@ -104,6 +114,8 @@ class TrainSupervisor:
     def save(self, params, opt_state, step: int):
         ckpt.save(os.path.join(self.ckpt_dir, "params"), params, step)
         ckpt.save(os.path.join(self.ckpt_dir, "opt"), opt_state, step)
+        self._reg.inc("checkpoints_total", 1, labels={"kind": "train"},
+                      help="checkpoints written, by kind")
 
 
 @dataclass
@@ -168,18 +180,41 @@ class StreamSupervisor:
     on 'straggler'/'remesh' verdicts; a 'remesh' caller typically
     restores the latest checkpoint at a new shard count via
     ``WindowCheckpointer.restore_engine``.
+
+    **Health telemetry** (DESIGN.md §16): with ``health_every > 0`` the
+    supervisor writes a validated ``tempest-health/v1`` snapshot
+    (``obs.dump_health`` — ingest progress, window occupancy, per-shard
+    load/drift, drop taxonomy) to ``health_dir`` (default
+    ``<ckpt_dir>/health``) every ``health_every`` batches and once at the
+    end of the run — the periodic streaming-health dump a dashboard or
+    the rebalance policy tails.
     """
 
     ckpt_dir: str
     save_every: int = 8
     straggler: StragglerPolicy = field(default_factory=StragglerPolicy)
+    registry: Optional[MetricsRegistry] = None
+    health_every: int = 0
+    health_dir: Optional[str] = None
 
     def __post_init__(self):
         self.checkpointer = WindowCheckpointer(self.ckpt_dir)
+        if self.registry is None:
+            self.registry = get_registry()
+        if self.health_dir is None:
+            self.health_dir = os.path.join(self.ckpt_dir, "health")
 
     def resume_batch(self) -> int:
         s = self.checkpointer.latest_step()
         return int(s) if s is not None else 0
+
+    def dump_health(self, engine, step: int) -> str:
+        """Write one health snapshot for ``step``; returns its path."""
+        from repro.obs.export import dump_health
+        os.makedirs(self.health_dir, exist_ok=True)
+        path = os.path.join(self.health_dir, f"health_{step:06d}.json")
+        dump_health(path, self.registry, engine=engine)
+        return path
 
     def run(self, engine, batches, wcfg, start_batch: int = 0,
             on_event: Optional[Callable] = None):
@@ -191,10 +226,22 @@ class StreamSupervisor:
             t0 = time.perf_counter()
             stats, _walks, _ = engine.replay_device([batch], wcfg)
             verdict = self.straggler.observe(time.perf_counter() - t0)
-            if verdict != "ok" and on_event:
-                on_event(step, verdict)
+            if verdict != "ok":
+                self.registry.inc("straggler_events_total", 1,
+                                  labels={"verdict": verdict},
+                                  help="straggler watchdog flags, by "
+                                       "verdict")
+                if on_event:
+                    on_event(step, verdict)
             out.append(stats)
             step += 1
             if step % self.save_every == 0:
                 self.checkpointer.save(engine, step)
+                self.registry.inc("checkpoints_total", 1,
+                                  labels={"kind": "window"},
+                                  help="checkpoints written, by kind")
+            if self.health_every and step % self.health_every == 0:
+                self.dump_health(engine, step)
+        if self.health_every and out:
+            self.dump_health(engine, step)
         return out, step

@@ -108,6 +108,17 @@ from repro.distributed.placement import (
 )
 from repro.core.samplers import index_pick_lanes
 from repro.core.streaming import ReplayStats
+from repro.obs.probes import (
+    RP_WALKS_EMITTED,
+    SP_HOPS,
+    SP_LANES_CLAIMED,
+    SP_WALK_DROPS,
+    flush_replay_probes,
+    replay_probe_update,
+    replay_probe_zeros,
+    serve_probe_zeros,
+)
+from repro.obs.registry import MetricsRegistry, count_drop, get_registry
 from repro.core.walk_engine import (
     NODE_PAD,
     LaneParams,
@@ -225,8 +236,10 @@ def _shard_walks(idx, walk_key: jax.Array, wcfg: WalkConfig,
 
     Returns this shard's trace contributions (walk-order [W, L+1] arrays,
     NODE_PAD where this shard executed no hop), its [W] length
-    contributions, and its drop count. ``psum`` across shards reassembles
-    the exact single-device WalkResult.
+    contributions, its drop count, and its start-claim count (the number
+    of position-0 cells it wrote — obs probes derive per-shard hop counts
+    as ``sum(ln) - claims``; DCE'd when unused). ``psum`` across shards
+    reassembles the exact single-device WalkResult.
     """
     W, L = wcfg.num_walks, wcfg.max_length
     nc = idx.node_capacity
@@ -251,6 +264,7 @@ def _shard_walks(idx, walk_key: jax.Array, wcfg: WalkConfig,
     vc = jnp.clip(node, 0, nc - 1)
     deg = idx.node_starts[vc + 1] - idx.node_starts[vc]
     alive = (wid >= 0) & (deg > 0)
+    claims = jnp.sum(alive.astype(jnp.int32))
     cur_time = jnp.full((Ws,), 1, jnp.int32) * t_floor
 
     # walk-order trace contributions; every cell this shard writes is PAD
@@ -311,7 +325,7 @@ def _shard_walks(idx, walk_key: jax.Array, wcfg: WalkConfig,
         _, _, _, tn, tt, ln = record_hop(
             wid, node, cur_time, alive, tn, tt, ln,
             jnp.asarray(L - 1, jnp.int32))
-    return tn, tt, ln, dropped + start_drop
+    return tn, tt, ln, dropped + start_drop, claims
 
 
 def _shard_walk_lanes(idx, view: TsView, lanes: LaneParams, lane_keys,
@@ -549,13 +563,14 @@ def _check_supported(wcfg: WalkConfig, scfg: SamplerConfig, *,
 
 @partial(jax.jit,
          static_argnames=("mesh", "axis_name", "node_capacity", "wcfg",
-                          "scfg", "shard_cfg", "placement"))
+                          "scfg", "shard_cfg", "placement", "with_probes"))
 def serve_lanes_sharded(state: ShardedWindowState, view: TsView,
                         key: jax.Array, lanes: LaneParams, *, mesh: Mesh,
                         axis_name: str, node_capacity: int,
                         wcfg: WalkConfig, scfg: SamplerConfig,
                         shard_cfg: ShardConfig,
-                        placement: Optional[Placement] = None):
+                        placement: Optional[Placement] = None,
+                        with_probes: bool = False):
     """One coalesced lane batch over the node-partitioned window.
 
     ``state`` is the sharded window (NOT donated: the serving snapshot
@@ -569,6 +584,11 @@ def serve_lanes_sharded(state: ShardedWindowState, view: TsView,
     provisioning, and required for the bit-identity guarantee) and
     ``claims`` (start lanes claimed by each shard, the device-side source
     of ``ServeStats.lanes_by_shard`` for both start modes).
+    ``with_probes=True`` appends a sixth output — an obs serve-probe
+    matrix int32[D, NUM_SERVE_PROBES] (claims / drops / per-shard hop
+    cells) for ``obs.flush_serve_probes`` — computed from values the
+    dispatch already produces, so walks stay bit-identical (pinned by
+    tests/test_obs_probes.py).
     """
     _check_supported(wcfg, scfg, lanes=True)
     D = mesh.devices.size
@@ -588,8 +608,19 @@ def serve_lanes_sharded(state: ShardedWindowState, view: TsView,
         nodes = NODE_PAD + jax.lax.psum(tn - NODE_PAD, axis_name)
         times = NODE_PAD + jax.lax.psum(tt - NODE_PAD, axis_name)
         lengths = jax.lax.psum(ln, axis_name)
-        return (nodes[None], times[None], lengths[None], drop[None],
+        outs = (nodes[None], times[None], lengths[None], drop[None],
                 claims[None])
+        if with_probes:
+            # start cells are written only by the claiming shard (2 per
+            # lane in edges mode: src + first dst), so this shard's hop
+            # cells are its length contributions minus its start cells
+            start_cells = claims * (2 if wcfg.start_mode == "edges" else 1)
+            sp = serve_probe_zeros()
+            sp = sp.at[SP_LANES_CLAIMED].add(claims)
+            sp = sp.at[SP_WALK_DROPS].add(drop)
+            sp = sp.at[SP_HOPS].add(jnp.sum(ln) - start_cells)
+            outs = outs + (sp[None],)
+        return outs
 
     sharded = P(axis_name)
     state_spec = ShardedWindowState(
@@ -597,29 +628,34 @@ def serve_lanes_sharded(state: ShardedWindowState, view: TsView,
         exchange_drops=sharded)
     view_spec = jax.tree.map(lambda _: P(), view)
     lane_spec = LaneParams(*([P()] * len(LaneParams._fields)))
+    out_specs = (sharded,) * (6 if with_probes else 5)
     fn = shard_map(shard_fn, mesh=mesh,
                    in_specs=(state_spec, view_spec, P(), lane_spec),
-                   out_specs=(sharded, sharded, sharded, sharded, sharded),
-                   check_rep=False)
+                   out_specs=out_specs, check_rep=False)
     return fn(state, view, key, lanes)
 
 
 @partial(jax.jit,
          static_argnames=("axis_name", "node_capacity", "wcfg", "scfg",
-                          "shard_cfg", "bias_scale", "mesh", "placement"),
+                          "shard_cfg", "bias_scale", "mesh", "placement",
+                          "with_probes"),
          donate_argnums=(0,))
 def _replay_scan_sharded(state: ShardedWindowState, bsrc, bdst, bts, bcount,
                          key, *, mesh: Mesh, axis_name: str,
                          node_capacity: int, wcfg: WalkConfig,
                          scfg: SamplerConfig, shard_cfg: ShardConfig,
                          bias_scale: float = 1.0,
-                         placement: Optional[Placement] = None):
+                         placement: Optional[Placement] = None,
+                         with_probes: bool = False):
     """Replay K stacked batches over the sharded window, fully on device.
 
     ``bsrc/bdst/bts`` are [K, D, Bd] (the batch axis pre-split per shard),
     ``bcount`` [K]. Returns (new state, per-batch stat leaves, final-batch
     walk leaves); everything carries a leading [D] axis — psum'd leaves are
-    replicated so callers read row 0.
+    replicated so callers read row 0. ``with_probes=True`` appends one
+    obs probe matrix int32[D, NUM_REPLAY_PROBES] (shard-local counters
+    accumulated across batches in the scan carry — pure arithmetic on
+    values the replay already computes, RNG chain untouched).
     """
     D = mesh.devices.size
     if placement is None:
@@ -635,7 +671,11 @@ def _replay_scan_sharded(state: ShardedWindowState, bsrc, bdst, bts, bcount,
         gpos = shard_id * Bd + jnp.arange(Bd, dtype=jnp.int32)
 
         def batch_step(carry, xs):
-            wstate, xdrops, k = carry
+            if with_probes:
+                wstate, xdrops, k, pv = carry
+            else:
+                wstate, xdrops, k = carry
+            w0 = wstate
             src, dst, ts, cnt = xs
             k, sub = jax.random.split(k)
             wstate, x_drop = _shard_ingest(
@@ -646,7 +686,7 @@ def _replay_scan_sharded(state: ShardedWindowState, bsrc, bdst, bts, bcount,
 
             # same key chain as the single-device replay_scan
             _, walk_key = jax.random.split(sub)
-            tn, tt, ln, w_drop = _shard_walks(
+            tn, tt, ln, w_drop, claims = _shard_walks(
                 wstate.index, walk_key, wcfg, scfg, axis=axis_name,
                 num_shards=D, placement=placement,
                 walk_slots=shard_cfg.walk_slots,
@@ -662,12 +702,32 @@ def _replay_scan_sharded(state: ShardedWindowState, bsrc, bdst, bts, bcount,
                                             axis_name),
                 mean_len=jnp.mean(lengths.astype(jnp.float32)),
             )
+            if with_probes:
+                # shard-local deltas (the flush sums label series); the
+                # emitted-walk count is global, so only shard 0 records it
+                pv = replay_probe_update(
+                    pv,
+                    ingested_delta=wstate.ingested - w0.ingested,
+                    late_delta=wstate.late_drops - w0.late_drops,
+                    overflow_delta=wstate.overflow_drops - w0.overflow_drops,
+                    exchange_drops=x_drop,
+                    walk_drops=w_drop,
+                    hops=jnp.sum(ln) - claims)
+                emitted = jnp.sum((lengths >= 2).astype(jnp.int32))
+                pv = pv.at[RP_WALKS_EMITTED].add(
+                    jnp.where(shard_id == 0, emitted, 0))
+                return ((wstate, xdrops + x_drop, k, pv),
+                        (stats, x_drop, w_drop, tn, tt, ln))
             return ((wstate, xdrops + x_drop, k),
                     (stats, x_drop, w_drop, tn, tt, ln))
 
-        (wstate, xdrops, _), (stats, x_drops, w_drops, tns, tts, lns) = \
-            jax.lax.scan(batch_step, (wstate, xdrops, key),
+        carry0 = [wstate, xdrops, key]
+        if with_probes:
+            carry0.append(replay_probe_zeros())
+        carry, (stats, x_drops, w_drops, tns, tts, lns) = \
+            jax.lax.scan(batch_step, tuple(carry0),
                          (lsrc, ldst, lts, bcount))
+        wstate, xdrops = carry[0], carry[1]
 
         # reassemble the final batch's walks (each cell written by ≤ 1
         # shard; contributions are PAD elsewhere)
@@ -680,20 +740,26 @@ def _replay_scan_sharded(state: ShardedWindowState, bsrc, bdst, bts, bcount,
             window=jax.tree.map(lambda a: a[None], wstate),
             exchange_drops=xdrops[None])
         expand = lambda a: a[None]
-        return (new_state, jax.tree.map(expand, stats), x_drops[None],
+        outs = (new_state, jax.tree.map(expand, stats), x_drops[None],
                 w_drops[None], expand(nodes), expand(times), expand(lengths))
+        if with_probes:
+            outs = outs + (expand(carry[3]),)
+        return outs
 
     sharded = P(axis_name)
     state_spec = ShardedWindowState(
         window=jax.tree.map(lambda _: sharded, state.window),
         exchange_drops=sharded)
     stats_spec = ReplayStats(*([sharded] * len(ReplayStats._fields)))
+    out_specs = (state_spec, stats_spec, sharded, sharded, sharded,
+                 sharded, sharded)
+    if with_probes:
+        out_specs = out_specs + (sharded,)
     fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(state_spec, P(None, axis_name), P(None, axis_name),
                   P(None, axis_name), P(), P()),
-        out_specs=(state_spec, stats_spec, sharded, sharded, sharded,
-                   sharded, sharded),
+        out_specs=out_specs,
         check_rep=False)
     return fn(state, bsrc, bdst, bts, bcount, key)
 
@@ -715,8 +781,14 @@ class DistributedStreamingEngine:
 
     def __init__(self, cfg: EngineConfig, batch_capacity: int, *,
                  mesh: Optional[Mesh] = None, num_shards: int = 0,
-                 placement: Optional[Placement] = None):
+                 placement: Optional[Placement] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 probes: bool = True):
         self.cfg = cfg
+        # obs integration (DESIGN.md §16); ``probes=False`` pins
+        # replay_device to the historical uninstrumented program
+        self.registry = registry if registry is not None else get_registry()
+        self.probes = probes
         self.mesh = mesh if mesh is not None else window_mesh(
             num_shards or cfg.shard.num_shards)
         self.axis_name = self.mesh.axis_names[0]
@@ -767,17 +839,26 @@ class DistributedStreamingEngine:
         split = lambda a: a.reshape(K, self.num_shards, self.batch_slice)
         self.key, sub = jax.random.split(self.key)
         t0 = time.perf_counter()
-        (self.state, stats, x_drops, w_drops, nodes, times, lengths) = \
-            _replay_scan_sharded(
-                self.state, split(stacked.src), split(stacked.dst),
-                split(stacked.ts), stacked.count, sub, mesh=self.mesh,
-                axis_name=self.axis_name,
-                node_capacity=self.cfg.window.node_capacity, wcfg=wcfg,
-                scfg=self.cfg.sampler, shard_cfg=self.cfg.shard,
-                placement=self.placement)
-        jax.block_until_ready(lengths)          # the single sync point
+        outs = _replay_scan_sharded(
+            self.state, split(stacked.src), split(stacked.dst),
+            split(stacked.ts), stacked.count, sub, mesh=self.mesh,
+            axis_name=self.axis_name,
+            node_capacity=self.cfg.window.node_capacity, wcfg=wcfg,
+            scfg=self.cfg.sampler, shard_cfg=self.cfg.shard,
+            placement=self.placement, with_probes=self.probes)
+        if self.probes:
+            (self.state, stats, x_drops, w_drops, nodes, times, lengths,
+             pv) = outs
+            # the single sync point — probes ride the same materialization
+            jax.block_until_ready((lengths, pv))
+        else:
+            (self.state, stats, x_drops, w_drops, nodes, times,
+             lengths) = outs
+            jax.block_until_ready(lengths)      # the single sync point
         elapsed = time.perf_counter() - t0
         replay = ReplayStats(*(np.asarray(a)[0] for a in stats))
+        if self.probes:
+            self._publish_replay(pv, replay, elapsed)
         dstats = DistReplayStats(
             replay=replay,
             exchange_drops=np.asarray(x_drops).T,     # [D, K] -> [K, D]
@@ -787,6 +868,32 @@ class DistributedStreamingEngine:
                            times=np.asarray(times)[0],
                            lengths=np.asarray(lengths)[0], stats=None)
         return dstats, walks, elapsed
+
+    def _publish_replay(self, pv, replay: ReplayStats, elapsed: float
+                        ) -> None:
+        """Flush the per-shard probe matrix + window gauges after a
+        replay's single host sync (the arrays are already materialized)."""
+        reg = self.registry
+        mat = np.asarray(pv)                     # [D, NUM_REPLAY_PROBES]
+        for d in range(mat.shape[0]):
+            flush_replay_probes(reg, mat[d], driver="sharded", shard=d)
+        loads = self.shard_loads()
+        for d, v in enumerate(loads):
+            reg.set_gauge("shard_edges_active", int(v),
+                          labels={"shard": str(d)},
+                          help="resident window edges per shard")
+        cap = self.cfg.shard.edge_capacity_per_shard * self.num_shards
+        edges = int(replay.edges_active[-1]) if replay.edges_active.size \
+            else 0
+        reg.set_gauge("window_edges_active", edges,
+                      help="edges resident in the temporal window")
+        reg.set_gauge("window_t_now",
+                      int(replay.t_now[-1]) if replay.t_now.size else 0,
+                      help="watermark timestamp of the window")
+        reg.set_gauge("window_occupancy", edges / cap,
+                      help="window fill fraction (edges_active / capacity)")
+        reg.observe("replay_seconds", elapsed, labels={"driver": "sharded"},
+                    help="wall time per replay_device call")
 
     # ------------------------------------------------------------------
     # Placement control plane: measured load -> new placement -> reshard
@@ -816,9 +923,16 @@ class DistributedStreamingEngine:
         one all_to_all; ingest/replay continue against the new layout.
         The walk RNG chain is untouched — replay stays bit-identical to
         the single-device engine across the reshard (absent drops)."""
+        before = int(np.asarray(self.state.exchange_drops).sum())
         self.state, self.mesh = reshard(
             self.state, self.placement, new_placement,
             axis_name=self.axis_name)
+        # exchange_drops is cumulative; the reshard's own contribution is
+        # the per-shard capacity clip — published under its canonical kind
+        after = int(np.asarray(self.state.exchange_drops).sum())
+        count_drop(self.registry, "reshard_clip", max(0, after - before))
+        self.registry.inc("reshards_total", 1,
+                          help="live placement reshards executed")
         self.placement = new_placement
         D = new_placement.num_shards
         self.num_shards = D

@@ -48,6 +48,15 @@ from repro.serve.coalescer import (
     result_arrays,
     slice_result,
 )
+from repro.obs.probes import flush_serve_probes
+from repro.obs.registry import (
+    RESERVOIR_SIZE,
+    MetricsRegistry,
+    Reservoir,
+    count_drop,
+    get_registry,
+)
+from repro.obs.tracing import span
 from repro.serve.query import QueryResult, WalkQuery
 from repro.serve.snapshot import ShardedSnapshotManager, SnapshotManager
 
@@ -57,9 +66,10 @@ class QueueFull(RuntimeError):
 
 
 # percentile window: counters are lifetime totals, but the latency/batch
-# samples backing p50/p99 are a bounded recent window so a long-running
-# service neither grows without bound nor pays O(history) per stat read
-STATS_WINDOW = 65536
+# samples backing p50/p99 are a bounded ring-buffer reservoir (the obs
+# histogram backing store, obs/registry.py) so a long-running service
+# neither grows without bound nor pays O(history) per stat read
+STATS_WINDOW = RESERVOIR_SIZE
 
 
 @dataclass
@@ -78,28 +88,32 @@ class ServeStats:
     busy_s: float = 0.0             # total wall time inside dispatches
     shard_walk_drops: int = 0       # sharded serving: capacity-overflow lanes
     exchange_drops: int = 0         # sharded serving: ingest-exchange drops
-    # ^ cumulative over the service lifetime, refreshed at publish(). The
-    #   §13 bit-identity guarantee needs BOTH drop counters at zero: walk
-    #   drops lose lanes, exchange drops lose window edges.
+    # ^ cumulative over the service lifetime; BOTH refresh per dispatch
+    #   (and exchange_drops additionally at publish()), so they advance in
+    #   lockstep — the old asymmetry where exchange_drops lagged until the
+    #   next snapshot publish is gone. The §13 bit-identity guarantee
+    #   needs BOTH at zero: walk drops lose lanes, exchange drops lose
+    #   window edges.
     lanes_by_shard: Dict[int, int] = field(default_factory=dict)
     # ^ sharded batches, BOTH start modes: start lanes claimed per owner
     #   shard, counted on device inside ``serve_lanes_sharded`` (the
     #   walk_slots provisioning signal and the placement-imbalance gauge
     #   that ``SkewPlacement.from_loads`` consumes, DESIGN.md §15)
-    latencies_s: Deque[float] = field(
-        default_factory=lambda: deque(maxlen=STATS_WINDOW))
-    sample_s: Deque[float] = field(
-        default_factory=lambda: deque(maxlen=STATS_WINDOW))
+    latencies_s: Reservoir = field(
+        default_factory=lambda: Reservoir(STATS_WINDOW))
+    sample_s: Reservoir = field(
+        default_factory=lambda: Reservoir(STATS_WINDOW))
 
     @property
     def dropped(self) -> int:
         return self.dropped_backpressure + self.dropped_oversize
 
     def latency_percentile(self, q: float) -> float:
-        """q-th percentile of submit→complete latency (recent window), s."""
-        if not self.latencies_s:
-            return float("nan")
-        return float(np.percentile(np.asarray(self.latencies_s), q))
+        """q-th percentile of submit→complete latency over the bounded
+        reservoir, in seconds. Contract (tested in tests/test_obs.py):
+        empty reservoir -> nan for every q; a single sample -> that sample
+        for every q; q outside [0, 100] -> ValueError."""
+        return self.latencies_s.percentile(q)
 
     @property
     def p50_ms(self) -> float:
@@ -137,7 +151,9 @@ class WalkService:
                  serve_cfg: ServeConfig = ServeConfig(),
                  state: Optional[WindowState] = None,
                  batch_capacity: int = 8192, *,
-                 mesh=None, num_shards: int = 0, placement=None):
+                 mesh=None, num_shards: int = 0, placement=None,
+                 registry: Optional[MetricsRegistry] = None,
+                 probes: bool = True):
         if cfg.sampler.mode != "index":
             raise ValueError(
                 "serving requires SamplerConfig.mode='index' (per-lane "
@@ -156,6 +172,10 @@ class WalkService:
         # passes through and serves heterogeneous batches in-kernel.
         self.sched_cfg = (dataclasses.replace(cfg.scheduler, path="grouped")
                          if cfg.scheduler.path == "tiled" else cfg.scheduler)
+        # obs integration (DESIGN.md §16); ``probes=False`` pins the
+        # sharded dispatch to the historical uninstrumented program
+        self.registry = registry if registry is not None else get_registry()
+        self.probes = probes
         ns = num_shards or serve_cfg.num_shards
         self.sharded = mesh is not None or ns > 0
         if self.sharded:
@@ -165,7 +185,7 @@ class WalkService:
                     "window; the state= override is single-device only")
             self.snapshots = ShardedSnapshotManager(
                 cfg, batch_capacity, mesh=mesh, num_shards=ns,
-                placement=placement)
+                placement=placement, registry=self.registry)
             self.batch_capacity = self.snapshots.batch_capacity
             self.num_shards = self.snapshots.num_shards
         else:
@@ -178,11 +198,14 @@ class WalkService:
                 state if state is not None else init_window(
                     cfg.window.edge_capacity, cfg.window.node_capacity,
                     int(cfg.window.duration)),
-                cfg.window.node_capacity)
+                cfg.window.node_capacity, registry=self.registry)
         # NOT split per call: lane RNG identity lives in (seed, walk, step)
         # folds, and solo/coalesced bit-equality needs a stable base.
         self.base_key = jax.random.PRNGKey(cfg.seed)
         self.stats = ServeStats()
+        # drop-delta baseline: stats.exchange_drops is cumulative and may
+        # be reset by callers, the registry needs monotonic deltas
+        self._exchange_drops_seen = 0
         self._last_shard_claims: Optional[np.ndarray] = None
         self.placement = (self.snapshots.placement if self.sharded
                           else None)
@@ -203,15 +226,28 @@ class WalkService:
         """Start building the next window; serving continues against the
         current snapshot until ``publish``."""
         batch = make_batch(src, dst, ts, capacity=self.batch_capacity)
-        self.snapshots.begin_ingest(batch)
+        with span("ingest_merge", self.registry):
+            self.snapshots.begin_ingest(batch)
 
     def publish(self) -> None:
-        self.snapshots.publish()
+        with span("snapshot_publish", self.registry):
+            self.snapshots.publish()
+        self.registry.set_gauge("snapshot_version", self.snapshots.version,
+                                help="published serving snapshot version")
         if self.sharded:
-            # sharded ingest drops edges (not lanes) on exchange overflow;
-            # they break bit-identity just like walk drops, so surface them
-            self.stats.exchange_drops = int(
-                np.asarray(self.snapshots.state.exchange_drops).sum())
+            self._refresh_exchange_drops()
+
+    def _refresh_exchange_drops(self) -> None:
+        """Pull the sharded ingest's cumulative exchange-drop counter into
+        the stats view + registry. Called per dispatch AND per publish, so
+        ``exchange_drops`` advances in lockstep with ``shard_walk_drops``
+        (sharded ingest drops edges — not lanes — on exchange overflow;
+        they break bit-identity just like walk drops)."""
+        total = int(np.asarray(self.snapshots.state.exchange_drops).sum())
+        self.stats.exchange_drops = total
+        count_drop(self.registry, "exchange_clip",
+                   max(0, total - self._exchange_drops_seen))
+        self._exchange_drops_seen = max(total, self._exchange_drops_seen)
 
     # ------------------------------------------------------------------
     # Query side
@@ -238,6 +274,7 @@ class WalkService:
                     f"{self.serve_cfg.lane_buckets[-1]} × "
                     f"{self.serve_cfg.length_buckets[-1]}")
             self.stats.dropped_oversize += 1
+            count_drop(self.registry, "oversize")
             return None
         if len(self._pending) >= self.serve_cfg.queue_capacity:
             if strict:
@@ -245,11 +282,16 @@ class WalkService:
                     f"{len(self._pending)} queries pending "
                     f"(capacity {self.serve_cfg.queue_capacity})")
             self.stats.dropped_backpressure += 1
+            count_drop(self.registry, "queue_backpressure")
             return None
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append((ticket, time.perf_counter(), query))
         self.stats.submitted += 1
+        self.registry.inc("serve_submitted_total", 1,
+                          help="queries accepted into the serving queue")
+        self.registry.set_gauge("serve_queue_depth", len(self._pending),
+                                help="queries pending in the serving queue")
         return ticket
 
     def poll(self, ticket: int) -> Optional[QueryResult]:
@@ -289,15 +331,24 @@ class WalkService:
         if self.sharded:
             from repro.distributed.streaming_shard import serve_lanes_sharded
             snap = self.snapshots
-            nodes, times, lengths, drops, claims = serve_lanes_sharded(
+            outs = serve_lanes_sharded(
                 snap.state, snap.view, self.base_key, params,
                 mesh=snap.mesh, axis_name=snap.axis_name,
                 node_capacity=self.cfg.window.node_capacity, wcfg=wcfg,
                 scfg=self.cfg.sampler, shard_cfg=self.cfg.shard,
-                placement=snap.placement)
+                placement=snap.placement, with_probes=self.probes)
+            if self.probes:
+                nodes, times, lengths, drops, claims, sp = outs
+            else:
+                nodes, times, lengths, drops, claims = outs
             jax.block_until_ready(lengths)
             self.stats.shard_walk_drops += int(np.asarray(drops).sum())
             self._last_shard_claims = np.asarray(claims)
+            if self.probes:
+                # flushed at the dispatch's existing sync; the exchange
+                # refresh keeps both sharded drop counters per-dispatch
+                flush_serve_probes(self.registry, np.asarray(sp))
+                self._refresh_exchange_drops()
             return (np.asarray(nodes)[0], np.asarray(times)[0],
                     np.asarray(lengths)[0])
         res = generate_walk_lanes(self.snapshots.current.index,
@@ -310,15 +361,18 @@ class WalkService:
         """Serve one coalesced batch; returns the number of queries served."""
         if not self._pending:
             return 0
-        (start_mode, len_bucket), taken, lanes = self._take_batch()
-        lane_bucket = bucketize(lanes, self.serve_cfg.lane_buckets)
-        queries = [q for _, _, q in taken]
-        params, slices = pack_queries(queries, lane_bucket, len_bucket)
+        reg = self.registry
+        with span("coalesce", reg):
+            (start_mode, len_bucket), taken, lanes = self._take_batch()
+            lane_bucket = bucketize(lanes, self.serve_cfg.lane_buckets)
+            queries = [q for _, _, q in taken]
+            params, slices = pack_queries(queries, lane_bucket, len_bucket)
         wcfg = WalkConfig(num_walks=lane_bucket, max_length=len_bucket,
                           start_mode=start_mode)
         version = self.snapshots.version
         t0 = time.perf_counter()
-        nodes, times, lengths = self._dispatch_lanes(params, wcfg)
+        with span("dispatch", reg):
+            nodes, times, lengths = self._dispatch_lanes(params, wcfg)
         elapsed = time.perf_counter() - t0
         self.stats.sample_s.append(elapsed)
         self.stats.busy_s += elapsed
@@ -326,6 +380,15 @@ class WalkService:
         self.stats.batches += 1
         self.stats.lanes_dispatched += lane_bucket
         self.stats.lanes_live += lanes
+        reg.inc("serve_batches_total", 1,
+                help="coalesced serving dispatches")
+        reg.inc("walks_dispatched_total", lane_bucket,
+                labels={"path": "serve"},
+                help="walk slots dispatched, by sampling path")
+        reg.observe("serve_batch_seconds", elapsed,
+                    help="wall time per coalesced dispatch")
+        reg.set_gauge("serve_lane_occupancy", self.stats.lane_occupancy,
+                      help="live fraction of dispatched lanes")
         if self.sharded and self._last_shard_claims is not None:
             # device-side per-shard claim counters (serve_lanes_sharded):
             # unlike the old host-side owner fold this covers edges-mode
@@ -334,15 +397,21 @@ class WalkService:
                 if n:
                     self.stats.lanes_by_shard[int(d)] = \
                         self.stats.lanes_by_shard.get(int(d), 0) + int(n)
-        for (ticket, arrival, q), sl in zip(taken, slices):
-            qn, qt, ql = slice_result(nodes, times, lengths, sl, q)
-            self._results[ticket] = QueryResult(
-                ticket=ticket, query=q, nodes=qn, times=qt, lengths=ql,
-                latency_s=done_t - arrival, snapshot_version=version)
-            self.stats.completed += 1
-            self.stats.walks += q.num_lanes
-            self.stats.hops += int(np.sum(np.clip(ql - 1, 0, None)))
-            self.stats.latencies_s.append(done_t - arrival)
+        with span("result_slice", reg):
+            for (ticket, arrival, q), sl in zip(taken, slices):
+                qn, qt, ql = slice_result(nodes, times, lengths, sl, q)
+                self._results[ticket] = QueryResult(
+                    ticket=ticket, query=q, nodes=qn, times=qt, lengths=ql,
+                    latency_s=done_t - arrival, snapshot_version=version)
+                self.stats.completed += 1
+                self.stats.walks += q.num_lanes
+                self.stats.hops += int(np.sum(np.clip(ql - 1, 0, None)))
+                self.stats.latencies_s.append(done_t - arrival)
+                reg.observe("serve_latency_seconds", done_t - arrival,
+                            help="submit -> complete latency per query")
+        reg.inc("serve_completed_total", len(taken),
+                help="queries completed")
+        reg.set_gauge("serve_queue_depth", len(self._pending))
         return len(taken)
 
     def drain(self) -> List[QueryResult]:

@@ -47,14 +47,17 @@ from repro.core.window import (
     ingest_nodonate,
     init_view,
 )
+from repro.obs.registry import MetricsRegistry, get_registry
 
 
 class SnapshotManager:
     """Double-buffered ``WindowState`` for the serving layer."""
 
-    def __init__(self, state: WindowState, node_capacity: int):
+    def __init__(self, state: WindowState, node_capacity: int,
+                 registry: Optional[MetricsRegistry] = None):
         self.current = state
         self.node_capacity = node_capacity
+        self.registry = registry if registry is not None else get_registry()
         self.version = 0          # bumped at every publish
         self._next: Optional[WindowState] = None
 
@@ -76,6 +79,8 @@ class SnapshotManager:
         jax.block_until_ready(self._next.index.ns_order)
         self.current, self._next = self._next, None
         self.version += 1
+        self.registry.inc("snapshot_publishes_total", 1,
+                          help="serving snapshot buffer swaps")
         return self.current
 
     def discard(self) -> None:
@@ -101,7 +106,8 @@ class ShardedSnapshotManager:
     """
 
     def __init__(self, cfg: EngineConfig, batch_capacity: int = 8192, *,
-                 mesh=None, num_shards: int = 0, placement=None):
+                 mesh=None, num_shards: int = 0, placement=None,
+                 registry: Optional[MetricsRegistry] = None):
         from repro.distributed.placement import make_placement
         from repro.distributed.streaming_shard import (
             init_sharded_window,
@@ -128,6 +134,7 @@ class ShardedSnapshotManager:
             axis_name=self.axis_name)
         self.view = init_view(cfg.window.edge_capacity, self.node_capacity,
                               int(cfg.window.duration))
+        self.registry = registry if registry is not None else get_registry()
         self.version = 0          # bumped at every publish
         self._next: Optional[Tuple[object, TsView]] = None
 
@@ -164,6 +171,8 @@ class ShardedSnapshotManager:
         self.state, self.view = self._next
         self._next = None
         self.version += 1
+        self.registry.inc("snapshot_publishes_total", 1,
+                          help="serving snapshot buffer swaps")
         return self.state
 
     def discard(self) -> None:

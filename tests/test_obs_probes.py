@@ -1,0 +1,233 @@
+"""Probe instrumentation is free (DESIGN.md §16): the probed replay and
+serve programs are bit-identical to the uninstrumented ones — probes are
+pure extra arithmetic on values the step already computes, never touching
+the RNG chain — and the probe counters agree with the host-side stats.
+
+The multi-shard cases run in a subprocess with 8 forced host devices
+(device count must be set before jax initializes, mirroring
+tests/test_streaming_shard.py); the fast lane covers the single-device
+engine and the 1-shard distributed engine in-process.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    ShardConfig,
+    WalkConfig,
+    WindowConfig,
+)
+from repro.core.streaming import StreamingEngine
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.distributed.streaming_shard import DistributedStreamingEngine
+from repro.obs import new_registry
+
+N = 96
+
+
+def _cfg():
+    return EngineConfig(
+        window=WindowConfig(duration=2500, edge_capacity=2048,
+                            node_capacity=N),
+        sampler=SamplerConfig(bias="exponential", mode="index"),
+        scheduler=SchedulerConfig(path="grouped", regroup="bucket"),
+        shard=ShardConfig(edge_capacity_per_shard=2048,
+                          exchange_capacity=512, walk_slots=256,
+                          walk_bucket_capacity=256),
+    )
+
+
+def _replay(eng, g, wcfg):
+    return eng.replay_device(chronological_batches(g, 4), wcfg,
+                             return_walks=True)
+
+
+def test_probed_replay_scan_bit_identical():
+    """StreamingEngine with probes on == probes off: same stats, same
+    walks, same final window — the instrumented program computes nothing
+    the walk sees."""
+    g = powerlaw_temporal_graph(N, 2000, seed=13)
+    wcfg = WalkConfig(num_walks=128, max_length=8, start_mode="nodes")
+    base = StreamingEngine(_cfg(), batch_capacity=512,
+                           registry=new_registry(), probes=False)
+    probed = StreamingEngine(_cfg(), batch_capacity=512,
+                             registry=new_registry(), probes=True)
+    bstats, bwalks, _ = _replay(base, g, wcfg)
+    pstats, pwalks, _ = _replay(probed, g, wcfg)
+    for f in bstats._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(bstats, f)),
+                                      np.asarray(getattr(pstats, f)),
+                                      err_msg=f)
+    np.testing.assert_array_equal(bwalks.nodes, pwalks.nodes)
+    np.testing.assert_array_equal(bwalks.times, pwalks.times)
+    np.testing.assert_array_equal(bwalks.lengths, pwalks.lengths)
+    np.testing.assert_array_equal(
+        np.asarray(base.state.index.store.ts),
+        np.asarray(probed.state.index.store.ts))
+
+
+def test_probe_counters_agree_with_stats():
+    """The flushed probe vector reproduces the replay's own cumulative
+    accounting — the probes count, they don't estimate."""
+    g = powerlaw_temporal_graph(N, 2000, seed=13)
+    wcfg = WalkConfig(num_walks=128, max_length=8, start_mode="nodes")
+    reg = new_registry()
+    eng = StreamingEngine(_cfg(), batch_capacity=512, registry=reg,
+                          probes=True)
+    stats, walks, _ = _replay(eng, g, wcfg)
+    assert reg.value("stream_edges_ingested_total",
+                     labels={"driver": "device"}) == int(
+        np.asarray(stats.ingested)[-1])
+    assert reg.value("drops_total", labels={"kind": "ingest_late"},
+                     default=0) == int(np.asarray(stats.late_drops)[-1])
+    assert reg.value("drops_total", labels={"kind": "window_overflow"},
+                     default=0) == int(np.asarray(stats.overflow_drops)[-1])
+    assert reg.value("walks_emitted_total",
+                     labels={"driver": "device"}) == 4 * wcfg.num_walks
+    # final batch's hop cells are a lower bound on the whole replay's
+    final_hops = int(np.sum(np.maximum(
+        np.asarray(walks.lengths, dtype=np.int64) - 1, 0)))
+    assert reg.value("walk_hops_total",
+                     labels={"source": "replay"}) >= final_hops > 0
+
+
+def test_sharded_probes_single_shard_identity():
+    """1-shard distributed replay with probes == without, bit for bit,
+    and the per-shard probe flush lands in the registry."""
+    g = powerlaw_temporal_graph(N, 2000, seed=13)
+    wcfg = WalkConfig(num_walks=128, max_length=8, start_mode="all_nodes")
+    base = DistributedStreamingEngine(_cfg(), batch_capacity=512,
+                                      num_shards=1,
+                                      registry=new_registry(), probes=False)
+    reg = new_registry()
+    probed = DistributedStreamingEngine(_cfg(), batch_capacity=512,
+                                        num_shards=1, registry=reg,
+                                        probes=True)
+    bstats, bwalks, _ = base.replay_device(chronological_batches(g, 4), wcfg)
+    pstats, pwalks, _ = probed.replay_device(chronological_batches(g, 4),
+                                             wcfg)
+    for f in bstats.replay._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(bstats.replay, f)),
+            np.asarray(getattr(pstats.replay, f)), err_msg=f)
+    np.testing.assert_array_equal(bwalks.nodes, pwalks.nodes)
+    np.testing.assert_array_equal(bwalks.lengths, pwalks.lengths)
+    assert reg.value("stream_edges_ingested_total",
+                     labels={"driver": "sharded", "shard": "0"}) == int(
+        np.asarray(pstats.replay.ingested)[-1])
+    assert reg.sum_values("walk_hops_total") > 0
+    assert reg.value("shard_edges_active", labels={"shard": "0"}) == int(
+        np.asarray(pstats.replay.edges_active)[-1])
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+from repro.configs.base import (EngineConfig, SamplerConfig, SchedulerConfig,
+                                ServeConfig, ShardConfig, WalkConfig,
+                                WindowConfig)
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.distributed.streaming_shard import DistributedStreamingEngine
+from repro.obs import new_registry
+from repro.serve import WalkQuery, WalkService
+
+N = 128
+g = powerlaw_temporal_graph(N, 3000, seed=7)
+cfg = EngineConfig(
+    window=WindowConfig(duration=3000, edge_capacity=4096, node_capacity=N),
+    sampler=SamplerConfig(bias="exponential", mode="index"),
+    scheduler=SchedulerConfig(path="grouped", regroup="bucket"),
+    shard=ShardConfig(edge_capacity_per_shard=4096, exchange_capacity=1024,
+                      walk_slots=512, walk_bucket_capacity=512),
+)
+wcfg = WalkConfig(num_walks=256, max_length=8, start_mode="all_nodes")
+
+# --- probed sharded replay == unprobed, bit for bit, at D in {1,2,8} -----
+emitted_by_d = {}
+for D in (1, 2, 8):
+    base = DistributedStreamingEngine(cfg, batch_capacity=1024, num_shards=D,
+                                      registry=new_registry(), probes=False)
+    reg = new_registry()
+    probed = DistributedStreamingEngine(cfg, batch_capacity=1024,
+                                        num_shards=D, registry=reg,
+                                        probes=True)
+    bstats, bwalks, _ = base.replay_device(chronological_batches(g, 5), wcfg)
+    pstats, pwalks, _ = probed.replay_device(chronological_batches(g, 5),
+                                             wcfg)
+    for f in bstats.replay._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(bstats.replay, f)),
+            np.asarray(getattr(pstats.replay, f)), err_msg=f"D={D} {f}")
+    np.testing.assert_array_equal(bstats.exchange_drops,
+                                  pstats.exchange_drops)
+    np.testing.assert_array_equal(bwalks.nodes, pwalks.nodes)
+    np.testing.assert_array_equal(bwalks.times, pwalks.times)
+    np.testing.assert_array_equal(bwalks.lengths, pwalks.lengths)
+    # per-shard edge counters sum to the global cumulative ingest count
+    tot = sum(int(reg.value("stream_edges_ingested_total",
+                            labels={"driver": "sharded", "shard": str(d)},
+                            default=0)) for d in range(D))
+    assert tot == int(np.asarray(pstats.replay.ingested)[-1]), (D, tot)
+    emitted_by_d[D] = sum(
+        int(reg.value("walks_emitted_total",
+                      labels={"driver": "sharded", "shard": str(d)},
+                      default=0))
+        for d in range(D))
+
+# emitted walks are global (recorded once, on shard 0): the probe count
+# must agree across shard topologies, like the walks themselves
+assert len(set(emitted_by_d.values())) == 1, emitted_by_d
+assert min(emitted_by_d.values()) > 0, emitted_by_d
+
+# --- probed sharded serving == unprobed, bit for bit, at D in {1,2,8} ----
+scfg = ServeConfig(lane_buckets=(8, 16, 64), length_buckets=(4, 8, 16))
+BIASES = ("uniform", "linear", "exponential")
+queries = []
+for i, b in enumerate(BIASES):
+    queries.append(WalkQuery(start_nodes=(1 + i, 30 + i, 60 + i, 99 - i),
+                             bias=b, max_length=5 + i, seed=100 + i))
+    queries.append(WalkQuery(num_walks=3 + i, start_mode="edges", bias=b,
+                             start_bias=BIASES[(i + 1) % 3],
+                             max_length=4 + i, seed=200 + i))
+
+for D in (1, 2, 8):
+    results = {}
+    for probes in (False, True):
+        reg = new_registry()
+        svc = WalkService(cfg, scfg, num_shards=D, registry=reg,
+                          probes=probes)
+        for bs, bd, bt in chronological_batches(g, 3):
+            svc.ingest(bs, bd, bt)
+        tickets = [svc.submit(q, strict=True) for q in queries]
+        while svc.pending_count:
+            svc.step()
+        results[probes] = [svc.poll(t) for t in tickets]
+        if probes:
+            claims = int(reg.sum_values("serve_lane_claims_total"))
+            assert claims == sum(svc.stats.lanes_by_shard.values()), D
+    for rb, rp in zip(results[False], results[True]):
+        np.testing.assert_array_equal(rb.nodes, rp.nodes, err_msg=str(D))
+        np.testing.assert_array_equal(rb.times, rp.times, err_msg=str(D))
+        np.testing.assert_array_equal(rb.lengths, rp.lengths,
+                                      err_msg=str(D))
+
+print("OBS_PROBES_OK")
+"""
+
+
+@pytest.mark.slow      # 8-device subprocess
+def test_probed_paths_8_devices():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "OBS_PROBES_OK" in out.stdout, \
+        (out.stdout[-1500:], out.stderr[-3000:])
