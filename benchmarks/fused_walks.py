@@ -10,6 +10,7 @@ record is persisted as ``BENCH_fused.json`` for trend tracking.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
@@ -22,6 +23,9 @@ from benchmarks.common import (
 )
 from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
 from repro.core import scheduler as sched
+from repro.core.alias import alias_pick, build_tables, spec_from_sampler
+from repro.core.samplers import weighted_pick_exp
+from repro.core.temporal_index import node_range
 from repro.core.walk_engine import generate_walks
 
 PATHS = [
@@ -90,6 +94,46 @@ def run():
         payload["tiers"][tier] = int(st[:, getattr(sched, const)].sum())
     emit("fused_walks/tiers", 0.0,
          ";".join(f"{k}={v}" for k, v in payload["tiers"].items()))
+
+    # ---- alias tables vs binary-search weighted picks (DESIGN.md §17) ----
+    # walk-level: the same exponential-recency law sampled through O(1)
+    # alias draws (bias="table") vs the O(log n) weighted inverse CDF.
+    table_scfg = SamplerConfig(mode="index", bias="table",
+                               table_weight="exponential")
+    spec = spec_from_sampler(table_scfg)
+    tables = build_tables(idx, spec)
+    grouped = SchedulerConfig(path="grouped", regroup="bucket", **tiles)
+    payload["table_bias"] = {}
+    for name, s, tb in (("walks-weight-binsearch", scfg, None),
+                        ("walks-table-alias", table_scfg, tables)):
+        mean_s, std_s, res = timeit(generate_walks, idx, key, wcfg, s,
+                                    grouped, tables=tb, repeats=repeats)
+        emit(f"fused_walks/{name}", mean_s * 1e6,
+             f"walks/s={num_walks / mean_s:.0f}")
+        payload["table_bias"][name] = dict(
+            mean_s=float(mean_s), std_s=float(std_s),
+            walks_per_s=float(num_walks / mean_s))
+
+    # draw-level micro: one biased pick per lane over full node regions
+    W = 50_000 if small else 200_000
+    rng = np.random.default_rng(0)
+    nodes = jnp.asarray(rng.integers(0, idx.node_capacity, W), jnp.int32)
+    a, b = node_range(idx, nodes)
+    u = jnp.asarray(rng.uniform(size=W), jnp.float32)
+    draw_alias = jax.jit(lambda aa, bb, uu: alias_pick(
+        tables, aa, aa, bb, uu, radix=spec.radix,
+        degree_cap=spec.degree_cap))
+    draw_bin = jax.jit(lambda aa, bb, uu: weighted_pick_exp(
+        idx.pexp, aa, bb, uu))
+    for name, fn in (("draws-table-alias", draw_alias),
+                     ("draws-weight-binsearch", draw_bin)):
+        mean_s, std_s, _ = timeit(fn, a, b, u, repeats=repeats)
+        emit(f"fused_walks/{name}", mean_s * 1e6,
+             f"Mdraws/s={W / mean_s / 1e6:.2f}")
+        payload["table_bias"][name] = dict(
+            mean_s=float(mean_s), std_s=float(std_s),
+            mdraws_per_s=float(W / mean_s / 1e6))
+
     write_json("fused", payload)
     return payload
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Walk-engine configs (the paper's system)
@@ -30,15 +30,32 @@ class WindowConfig:
 
 @dataclass(frozen=True)
 class SamplerConfig:
-    """Temporal bias sampling (paper §2.5)."""
+    """Temporal bias sampling (paper §2.5; DESIGN.md §17 for table bias).
 
-    bias: str = "exponential"         # uniform | linear | exponential
+    ``bias="table"`` selects the alias/radix factorization (Bingo-style):
+    per-node alias tables over the window's neighborhood regions, built
+    from ``table_weight`` and maintained incrementally by ingest. The
+    weight callable ``(ts, tbase, tref) -> float32`` must be elementwise,
+    non-negative, and node-local (may read only the edge timestamp and
+    its source node's min/max timestamp); it may also be one of the
+    built-in names "uniform" | "linear" | "exponential" (which reproduce
+    the closed-form samplers' laws when timestamps are consecutive
+    integers). ``None`` with bias="table" defaults to exponential.
+    """
+
+    bias: str = "exponential"         # uniform | linear | exponential | table
     mode: str = "index"               # index (closed-form O(1)) | weight (exact, O(log n))
     start_bias: str = "uniform"       # bias over start edges (timestamp view)
     # Temporal node2vec second-order parameters (rejection sampling); p=q=1.0
     # disables the second-order bias entirely.
     node2vec_p: float = 1.0
     node2vec_q: float = 1.0
+    # Alias-table parameters (bias="table"; DESIGN.md §17). table_weight may
+    # be a callable or a built-in name; callables hash by identity, so reuse
+    # one function object across configs to share jit caches.
+    table_weight: Optional[Callable] = None
+    table_radix: int = 4096           # M: coin resolution per alias bucket
+    table_degree_cap: int = 64        # R: largest region on the O(1) path
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,419 @@
+"""Alias/radix bias factorization with incremental maintenance (DESIGN.md §17).
+
+Tempest (paper §2.5) ships three closed-form inverse-CDF samplers.
+Arbitrary bias functions need either an O(log n) binary search over a
+cumulative-weight array per hop, or — the Bingo factorization this module
+implements — a per-node **alias table** over the window's neighborhood
+regions: weights are quantized radix-wise into integer masses summing
+``deg · M`` (M = ``TableSpec.radix``), the classic two-stack Vose
+construction turns the masses into (threshold, partner) bucket pairs, and
+a draw is O(1): one uniform → bucket ``j = ⌊u·deg·M⌋ div M`` → biased
+coin ``r = ⌊u·deg·M⌋ mod M`` → ``j`` if ``r < thresh[j]`` else
+``partner[j]``.
+
+Layout — three flat arrays carried in the window state beside pexp/plin:
+
+* ``thresh``  int32[E]: per ns-view position, the bucket threshold in
+  [0, M]; ``-1`` where no table exists (padding, or regions larger than
+  ``degree_cap``).
+* ``partner`` int32[E]: the alias partner as a **region-local offset** —
+  position-independent content, which is what lets a node whose region
+  merely *shifted* (other nodes' edges moved around it) copy its old
+  table bytes instead of rebuilding.
+* ``ptab``    float32[E+1]: exclusive prefix of the raw weights in
+  ns-view order. The exact fallback for draws the table cannot serve —
+  temporal-suffix neighborhoods Γ_t(v) ⊊ [a, b) and oversize regions —
+  via the same O(log E) shifted binary search the weight-mode samplers
+  use.
+
+**Incremental maintenance rule** (the Bingo dynamic-update analog): an
+ingest advance dirties exactly the nodes whose region content changed —
+sources of kept batch edges, sources of the evicted store prefix, and
+sources of overflow-clipped rows. Dirty nodes are compacted and rebuilt
+in fixed-size chunks under a ``lax.while_loop`` (work ∝ dirty count, not
+window size); clean nodes positionally copy their old table content
+through the old→new ``node_starts`` offset. A from-scratch build is the
+same code path with an all-dirty mask, so incremental-vs-scratch
+leaf-identity (property-tested) is a real check of the dirty rule, not a
+tautology of shared arithmetic.
+
+**Quantization** is largest-remainder apportionment: ``m_i =
+⌊w_i/W · deg·M⌋`` plus one unit to the ``deficit`` largest fractional
+remainders (index tie-break). Zero-weight entries provably get zero mass
+(surplus only lands on positions with a positive remainder), and the
+total is exactly ``deg·M`` — the invariant the two-stack construction
+and the exact-enumeration law tests rely on. ``deg·M ≤ 64·4096 = 2^18``
+keeps every quantized quantity exact in float32/int32.
+
+The module is import-light on purpose: samplers.py does not import it
+(walk_engine dispatches table-coded lanes), so there is no cycle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.samplers import _shifted_lower_bound, index_uniform
+from repro.core.temporal_index import TemporalIndex
+
+DEFAULT_RADIX = 4096        # M: coin resolution per bucket (2^12)
+DEFAULT_DEGREE_CAP = 64     # R: largest region served by the O(1) path
+DEFAULT_CHUNK = 128         # dirty nodes rebuilt per while_loop iteration
+
+
+# ---------------------------------------------------------------------------
+# Spec + state
+# ---------------------------------------------------------------------------
+
+
+def weight_uniform(ts, tbase, tref):
+    """w ≡ 1 — table-bias reproduction of the uniform sampler."""
+    return jnp.ones_like(ts, dtype=jnp.float32)
+
+
+def weight_linear(ts, tbase, tref):
+    """w = ts − t_base(v) + 1 — the weight-mode linear element weights."""
+    return (ts - tbase + 1).astype(jnp.float32)
+
+
+def weight_exponential(ts, tbase, tref):
+    """w = exp(ts − t_ref(v)) — the weight-mode exponential weights."""
+    return jnp.exp((ts - tref).astype(jnp.float32))
+
+
+WEIGHT_FNS = {
+    "uniform": weight_uniform,
+    "linear": weight_linear,
+    "exponential": weight_exponential,
+}
+
+
+@dataclass(frozen=True)
+class TableSpec:
+    """Static alias-table parameters (hashable; keys jit caches).
+
+    ``weight(ts, tbase, tref) -> float32`` is the user bias: elementwise
+    and **node-local** (it may read only the edge's timestamp and its
+    source node's min/max timestamp). Node-locality is what makes the
+    incremental clean-node copy sound: a node whose edge set did not
+    change cannot see its weights change. Non-negative by contract;
+    negative outputs are clamped to 0.
+    """
+
+    weight: Callable = weight_exponential
+    radix: int = DEFAULT_RADIX
+    degree_cap: int = DEFAULT_DEGREE_CAP
+    chunk: int = DEFAULT_CHUNK
+
+    def __post_init__(self):
+        if self.radix < 2 or self.radix & (self.radix - 1):
+            raise ValueError(f"radix must be a power of two >= 2, got "
+                             f"{self.radix}")
+        if self.degree_cap < 1:
+            raise ValueError("degree_cap must be >= 1")
+        if self.degree_cap * self.radix > 1 << 23:
+            # deg·M must stay exactly representable in float32
+            raise ValueError("degree_cap * radix must be <= 2^23")
+        if self.chunk < 1:
+            raise ValueError("chunk must be >= 1")
+
+
+class AliasTables(NamedTuple):
+    """Per-node alias tables over the ns-view regions (see module doc)."""
+
+    thresh: jax.Array    # int32[E]   bucket threshold in [0, M]; -1 = none
+    partner: jax.Array   # int32[E]   region-local alias partner offset
+    ptab: jax.Array      # float32[E+1] exclusive raw-weight prefix (fallback)
+    rebuilt: jax.Array   # int32[]    cumulative node rebuilds (obs counter)
+
+
+def spec_from_sampler(scfg) -> Optional[TableSpec]:
+    """The TableSpec a SamplerConfig implies, or None when tables are off."""
+    if scfg.bias != "table" and scfg.table_weight is None:
+        return None
+    weight = scfg.table_weight
+    if weight is None:
+        weight = weight_exponential
+    elif isinstance(weight, str):
+        weight = WEIGHT_FNS[weight]
+    return TableSpec(weight=weight, radix=scfg.table_radix,
+                     degree_cap=scfg.table_degree_cap)
+
+
+# ---------------------------------------------------------------------------
+# Row-level construction (vmapped over a chunk of dirty nodes)
+# ---------------------------------------------------------------------------
+
+
+def quantize_row(w: jax.Array, deg: jax.Array, radix: int) -> jax.Array:
+    """Integer masses m[R] with Σm = deg·M exactly, m_i ∝ w_i.
+
+    Largest-remainder apportionment with index tie-break; positions with
+    zero weight get zero mass; an all-zero row falls back to uniform
+    masses (M each). ``deg == 0`` yields the all-zero row.
+    """
+    R = w.shape[0]
+    M = radix
+    pos = jnp.arange(R, dtype=jnp.int32)
+    inrow = pos < deg
+    w = jnp.where(inrow, jnp.maximum(w.astype(jnp.float32), 0.0), 0.0)
+    total_w = jnp.sum(w)
+    target = (deg * M).astype(jnp.int32)
+    targetf = target.astype(jnp.float32)
+
+    q = jnp.where(total_w > 0, w * (targetf / jnp.maximum(total_w, 1e-30)),
+                  0.0)
+    fl = jnp.minimum(jnp.floor(q).astype(jnp.int32), target)
+    frac = q - fl.astype(jnp.float32)
+    d = target - jnp.sum(fl)
+
+    # d > 0: +1 to the d largest remainders (stable argsort => index ties)
+    order_desc = jnp.argsort(jnp.where(inrow & (frac > 0), -frac, 2.0),
+                             stable=True)
+    rank_desc = jnp.argsort(order_desc, stable=True).astype(jnp.int32)
+    add = (rank_desc < d) & (frac > 0)
+    # d < 0 (float-rounding edge): -1 from the |d| smallest remainders
+    # among positions that have a unit to give
+    order_asc = jnp.argsort(jnp.where(inrow & (fl >= 1), frac, 2.0),
+                            stable=True)
+    rank_asc = jnp.argsort(order_asc, stable=True).astype(jnp.int32)
+    sub = (rank_asc < -d) & (fl >= 1)
+
+    m = fl + add.astype(jnp.int32) - sub.astype(jnp.int32)
+    # belt-and-braces: fold any residual into the heaviest slot (never a
+    # zero-weight one: it holds >= target/deg >= M units when total_w > 0)
+    resid = target - jnp.sum(m)
+    imax = jnp.argmax(m)
+    m = m.at[imax].add(resid)
+
+    uniform = jnp.where(inrow, M, 0).astype(jnp.int32)
+    m = jnp.where(total_w > 0, m, uniform)
+    return jnp.where(inrow, m, 0)
+
+
+def vose_row(masses: jax.Array, deg: jax.Array, radix: int):
+    """Two-stack Vose construction as a fixed-trip jnp scan.
+
+    ``masses`` int32[R] with Σ = deg·M (see ``quantize_row``). Returns
+    (thresh[R], partner[R]): bucket i resolves to i when the coin
+    ``r < thresh[i]`` and to ``partner[i]`` otherwise. Each scan step pops
+    one small (m < M) and one large (m ≥ M) bucket, finalizes the small
+    one at its current mass and donates the shortfall from the large one;
+    the exact-integer invariant (remaining mass = pending·M) means the
+    large stack can never empty first, and whatever remains when the
+    small stack empties sits at exactly M — finalized self-referential in
+    the post-pass.
+    """
+    R = masses.shape[0]
+    M = radix
+    pos = jnp.arange(R, dtype=jnp.int32)
+    inrow = pos < deg
+
+    is_small = inrow & (masses < M)
+    is_large = inrow & (masses >= M)
+    # compacted ascending index stacks; top = entry count-1
+    small = jnp.argsort(jnp.where(is_small, 0, 1), stable=True).astype(
+        jnp.int32)
+    large = jnp.argsort(jnp.where(is_large, 0, 1), stable=True).astype(
+        jnp.int32)
+    sn = jnp.sum(is_small.astype(jnp.int32))
+    ln = jnp.sum(is_large.astype(jnp.int32))
+
+    thresh0 = jnp.full((R,), -1, jnp.int32)
+    partner0 = pos
+
+    def step(carry, _):
+        m, ss, sn_, ls, ln_, th, pa = carry
+        can = (sn_ > 0) & (ln_ > 0)
+        si = ss[jnp.maximum(sn_ - 1, 0)]
+        li = ls[jnp.maximum(ln_ - 1, 0)]
+        ms = m[si]
+        th2 = th.at[si].set(ms)
+        pa2 = pa.at[si].set(li)
+        ml = m[li] - (M - ms)
+        m2 = m.at[li].set(ml)
+        sn2 = sn_ - 1
+        ln2 = ln_ - 1
+        now_small = ml < M
+        ss2 = jnp.where(now_small, ss.at[sn2].set(li), ss)
+        sn3 = sn2 + now_small.astype(jnp.int32)
+        ls2 = jnp.where(now_small, ls, ls.at[ln2].set(li))
+        ln3 = ln2 + (1 - now_small.astype(jnp.int32))
+        new = (m2, ss2, sn3, ls2, ln3, th2, pa2)
+        old = (m, ss, sn_, ls, ln_, th, pa)
+        out = jax.tree.map(lambda a, b: jnp.where(can, a, b), new, old)
+        return out, None
+
+    carry0 = (masses, small, sn, large, ln, thresh0, partner0)
+    (m, _, _, _, _, thresh, partner), _ = jax.lax.scan(
+        step, carry0, None, length=max(R - 1, 1))
+
+    pending = inrow & (thresh < 0)
+    thresh = jnp.where(pending, M, thresh)
+    partner = jnp.where(pending, pos, partner)
+    return jnp.where(inrow, thresh, -1), jnp.where(inrow, partner, 0)
+
+
+def row_masses(thresh: jax.Array, partner: jax.Array, deg, radix: int):
+    """Recover the quantized masses a (thresh, partner) row encodes.
+
+    m_i = thresh_i + Σ_j [partner_j == i]·(M − thresh_j) — the accounting
+    identity the exact-enumeration law tests assert against.
+    """
+    R = thresh.shape[0]
+    M = radix
+    pos = jnp.arange(R, dtype=jnp.int32)
+    inrow = pos < deg
+    own = jnp.where(inrow, thresh, 0)
+    donated = jnp.where(inrow, M - thresh, 0)
+    recv = jnp.zeros((R,), jnp.int32).at[
+        jnp.where(inrow, partner, R)].add(donated, mode="drop")
+    return own + recv
+
+
+# ---------------------------------------------------------------------------
+# Flat build / incremental update
+# ---------------------------------------------------------------------------
+
+
+def region_weights(index: TemporalIndex, spec: TableSpec) -> jax.Array:
+    """Raw per-position weights over the ns view (0 beyond the valid part)."""
+    nc = index.node_capacity
+    srcc = jnp.clip(index.ns_src, 0, nc - 1)
+    w = spec.weight(index.ns_ts, index.node_tbase[srcc],
+                    index.node_tref[srcc])
+    valid = index.ns_src < nc
+    return jnp.where(valid, jnp.maximum(w.astype(jnp.float32), 0.0), 0.0)
+
+
+def update_tables(index: TemporalIndex, spec: TableSpec, *,
+                  old_starts: Optional[jax.Array] = None,
+                  old_tables: Optional[AliasTables] = None,
+                  dirty: Optional[jax.Array] = None) -> AliasTables:
+    """(Re)build alias tables for ``index``.
+
+    With ``old_starts``/``old_tables``/``dirty`` (bool[N]) this is the
+    incremental advance: clean nodes copy their old region content
+    through the old→new offset, dirty ones rebuild in chunks. Without
+    them (or with an all-True mask) it is the from-scratch build — the
+    same code path, so the two are leaf-identical by construction *iff*
+    the dirty rule catches every changed node (property-tested).
+    """
+    E = index.edge_capacity
+    nc = index.node_capacity
+    M, R, K = spec.radix, spec.degree_cap, spec.chunk
+
+    w = region_weights(index, spec)
+    ptab = jnp.concatenate([jnp.zeros((1,), jnp.float32), jnp.cumsum(w)])
+
+    starts = index.node_starts
+    if dirty is None:
+        dirty = jnp.ones((nc,), bool)
+    dirty = dirty.astype(bool)
+
+    thresh = jnp.full((E,), -1, jnp.int32)
+    partner = jnp.zeros((E,), jnp.int32)
+
+    if old_tables is not None:
+        # clean-node positional copy: position p of node v's new region
+        # holds what old position old_starts[v] + (p − starts[v]) held
+        pos = jnp.arange(E, dtype=jnp.int32)
+        v = jnp.clip(index.ns_src, 0, nc - 1)
+        clean = (index.ns_src < nc) & ~dirty[v]
+        old_pos = jnp.clip(old_starts[v] + (pos - starts[v]), 0, E - 1)
+        thresh = jnp.where(clean, old_tables.thresh[old_pos], thresh)
+        partner = jnp.where(clean, old_tables.partner[old_pos], partner)
+        prev_rebuilt = old_tables.rebuilt
+    else:
+        prev_rebuilt = jnp.asarray(0, jnp.int32)
+
+    # compact dirty node ids to the front; sentinel nc beyond
+    ids = jnp.argsort(jnp.where(dirty, 0, 1), stable=True).astype(jnp.int32)
+    n_dirty = jnp.sum(dirty.astype(jnp.int32))
+    ids = jnp.where(jnp.arange(nc, dtype=jnp.int32) < n_dirty, ids, nc)
+    ids = jnp.concatenate([ids, jnp.full((K,), nc, jnp.int32)])
+
+    off = jnp.arange(R, dtype=jnp.int32)
+
+    def rebuild_chunk(state):
+        i, th, pa = state
+        vs = jax.lax.dynamic_slice(ids, (i * K,), (K,))
+        vc = jnp.clip(vs, 0, nc)
+        A = starts[vc]
+        B = starts[vc + 1]
+        deg = jnp.where(vs < nc, B - A, 0)
+        small = (deg > 0) & (deg <= R)
+        degr = jnp.where(small, deg, 0)          # oversize rows: no-op
+        gpos = A[:, None] + off[None, :]
+        gvalid = off[None, :] < degr[:, None]
+        wrow = jnp.where(gvalid, w[jnp.clip(gpos, 0, E - 1)], 0.0)
+        masses = jax.vmap(quantize_row, in_axes=(0, 0, None))(wrow, degr, M)
+        throw, parow = jax.vmap(vose_row, in_axes=(0, 0, None))(
+            masses, degr, M)
+        spos = jnp.where(gvalid, gpos, E).reshape(-1)   # E -> dropped
+        th = th.at[spos].set(throw.reshape(-1), mode="drop")
+        pa = pa.at[spos].set(parow.reshape(-1), mode="drop")
+        return i + 1, th, pa
+
+    def cond(state):
+        return state[0] * K < n_dirty
+
+    _, thresh, partner = jax.lax.while_loop(
+        cond, rebuild_chunk, (jnp.asarray(0, jnp.int32), thresh, partner))
+
+    deg_all = starts[1:nc + 1] - starts[:nc]
+    rebuilt = prev_rebuilt + jnp.sum((dirty & (deg_all > 0)).astype(
+        jnp.int32))
+    return AliasTables(thresh=thresh, partner=partner, ptab=ptab,
+                       rebuilt=rebuilt)
+
+
+def build_tables(index: TemporalIndex, spec: TableSpec) -> AliasTables:
+    """From-scratch build: ``update_tables`` with an all-dirty mask."""
+    return update_tables(index, spec)
+
+
+# ---------------------------------------------------------------------------
+# Draws
+# ---------------------------------------------------------------------------
+
+
+def alias_pick(tables: AliasTables, a: jax.Array, c: jax.Array,
+               b: jax.Array, u: jax.Array, *, radix: int,
+               degree_cap: int) -> jax.Array:
+    """Pick k ∈ [c, b) under the table bias; valid only when b > c.
+
+    O(1) alias path when the temporal cutoff keeps the whole region
+    (c == a) and the region fits the table (deg ≤ degree_cap) — true for
+    every hop launched at the window floor, and for any node whose edges
+    all postdate the walker's clock. Otherwise the draw falls back to the
+    exact float-weight inverse CDF over ``ptab`` restricted to [c, b)
+    (O(log E) — the binary-search comparator the benchmarks race the
+    table against).
+    """
+    M = radix
+    E = tables.thresh.shape[0]
+    deg = b - a
+    n = b - c
+    tabled = (c == a) & (deg > 0) & (deg <= degree_cap)
+
+    # O(1) path: bucket + biased coin, all exact in float32 (deg·M ≤ 2^23)
+    kq = jnp.floor(u * (deg * M).astype(jnp.float32)).astype(jnp.int32)
+    kq = jnp.clip(kq, 0, jnp.maximum(deg * M - 1, 0))
+    j = kq // M
+    r = kq - j * M
+    pa = jnp.clip(a + j, 0, E - 1)
+    take_own = r < tables.thresh[pa]
+    k_tab = a + jnp.where(take_own, j, tables.partner[pa])
+
+    # exact fallback over the raw-weight prefix, suffix-restricted
+    total = tables.ptab[b] - tables.ptab[c]
+    target = tables.ptab[c] + u * total
+    k_w = _shifted_lower_bound(tables.ptab, c, b, target)
+    k_w = jnp.where(total > 0, k_w, c + index_uniform(u, n))
+
+    k = jnp.where(tabled, k_tab, k_w)
+    return jnp.clip(k, c, jnp.maximum(b - 1, c))

@@ -116,11 +116,14 @@ def index_pick(bias: str, u: jax.Array, n: jax.Array) -> jax.Array:
 BIAS_UNIFORM = 0
 BIAS_LINEAR = 1
 BIAS_EXPONENTIAL = 2
+BIAS_TABLE = 3        # alias/radix tables (core/alias.py, DESIGN.md §17);
+                      # dispatched by walk_engine, not index_pick_lanes
 
 BIAS_CODES = {
     "uniform": BIAS_UNIFORM,
     "linear": BIAS_LINEAR,
     "exponential": BIAS_EXPONENTIAL,
+    "table": BIAS_TABLE,
 }
 
 
@@ -302,3 +305,18 @@ def node2vec_beta(index: TemporalIndex, prev: jax.Array, cand: jax.Array,
 
 def node2vec_max_beta(p: float, q: float) -> float:
     return max(1.0 / p, 1.0, 1.0 / q)
+
+
+def node2vec_beta_lanes(index: TemporalIndex, prev: jax.Array,
+                        cand: jax.Array, p: jax.Array,
+                        q: jax.Array) -> jax.Array:
+    """Per-lane β(u,w): like ``node2vec_beta`` but with array (p, q)."""
+    is_return = cand == prev
+    is_common = adjacency_contains(index, prev, cand)
+    return jnp.where(is_return, 1.0 / p,
+                     jnp.where(is_common, 1.0, 1.0 / q)).astype(jnp.float32)
+
+
+def node2vec_max_beta_lanes(p: jax.Array, q: jax.Array) -> jax.Array:
+    return jnp.maximum(jnp.maximum(1.0 / p, 1.0), 1.0 / q).astype(
+        jnp.float32)

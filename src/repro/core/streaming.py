@@ -106,20 +106,24 @@ def _ingest_and_walk_impl(state: WindowState, batch: EdgeBatch,
                           wcfg: WalkConfig, scfg: SamplerConfig,
                           sched_cfg: SchedulerConfig,
                           bias_scale: float = 1.0,
-                          walk_bufs: Optional[WalkBuffers] = None):
-    state = ingest_impl(state, batch, node_capacity, bias_scale)
+                          walk_bufs: Optional[WalkBuffers] = None,
+                          table=None):
+    state = ingest_impl(state, batch, node_capacity, bias_scale,
+                        table=table)
     res = _generate_walks_impl(state.index, key, wcfg, scfg, sched_cfg,
-                               buffers=walk_bufs)
+                               buffers=walk_bufs, tables=state.tables)
     return state, res
 
 
 # Fused step: ingest + rebuild + walk in ONE jitted program, old state
 # donated. One dispatch per batch instead of two, and XLA may overlap the
-# index rebuild with the first hops of the walk scan.
+# index rebuild with the first hops of the walk scan. ``table`` (static
+# TableSpec) switches on incremental alias-table maintenance + table-bias
+# walks (DESIGN.md §17).
 ingest_and_walk = partial(
     jax.jit,
     static_argnames=("node_capacity", "wcfg", "scfg", "sched_cfg",
-                     "bias_scale"),
+                     "bias_scale", "table"),
     donate_argnums=(0,),
 )(_ingest_and_walk_impl)
 
@@ -129,10 +133,10 @@ def _ingest_and_walk_donated_impl(state: WindowState, batch: EdgeBatch,
                                   node_capacity: int, wcfg: WalkConfig,
                                   scfg: SamplerConfig,
                                   sched_cfg: SchedulerConfig,
-                                  bias_scale: float = 1.0):
+                                  bias_scale: float = 1.0, table=None):
     return _ingest_and_walk_impl(state, batch, key, node_capacity, wcfg,
                                  scfg, sched_cfg, bias_scale,
-                                 walk_bufs=walk_bufs)
+                                 walk_bufs=walk_bufs, table=table)
 
 
 # Fully donated fused step (DESIGN.md §10): both the window state AND the
@@ -142,7 +146,7 @@ def _ingest_and_walk_donated_impl(state: WindowState, batch: EdgeBatch,
 ingest_and_walk_donated = partial(
     jax.jit,
     static_argnames=("node_capacity", "wcfg", "scfg", "sched_cfg",
-                     "bias_scale"),
+                     "bias_scale", "table"),
     donate_argnums=(0, 2),
 )(_ingest_and_walk_donated_impl)
 
@@ -150,7 +154,8 @@ ingest_and_walk_donated = partial(
 def _replay_scan_impl(state: WindowState, batches: EdgeBatch, key: jax.Array,
                       node_capacity: int, wcfg: WalkConfig,
                       scfg: SamplerConfig, sched_cfg: SchedulerConfig,
-                      bias_scale: float = 1.0, with_probes: bool = False):
+                      bias_scale: float = 1.0, with_probes: bool = False,
+                      table=None):
     """Shared body of ``replay_scan`` / ``replay_scan_probed``.
 
     ``with_probes`` threads an obs probe vector (obs/probes.py) through
@@ -168,7 +173,7 @@ def _replay_scan_impl(state: WindowState, batches: EdgeBatch, key: jax.Array,
         k, sub = jax.random.split(k)
         st2, res = _ingest_and_walk_impl(st, batch, sub, node_capacity,
                                          wcfg, scfg, sched_cfg, bias_scale,
-                                         walk_bufs=bufs)
+                                         walk_bufs=bufs, table=table)
         stats = ReplayStats(
             edges_active=st2.index.num_edges,
             t_now=st2.t_now,
@@ -204,11 +209,12 @@ def _replay_scan_impl(state: WindowState, batches: EdgeBatch, key: jax.Array,
 
 @partial(jax.jit,
          static_argnames=("node_capacity", "wcfg", "scfg", "sched_cfg",
-                          "bias_scale"),
+                          "bias_scale", "table"),
          donate_argnums=(0,))
 def replay_scan(state: WindowState, batches: EdgeBatch, key: jax.Array,
                 node_capacity: int, wcfg: WalkConfig, scfg: SamplerConfig,
-                sched_cfg: SchedulerConfig, bias_scale: float = 1.0):
+                sched_cfg: SchedulerConfig, bias_scale: float = 1.0,
+                table=None):
     """Replay K stacked batches fully on device under `jax.lax.scan`.
 
     ``batches`` holds [K, B_cap] arrays (see edge_store.stack_batches).
@@ -221,17 +227,18 @@ def replay_scan(state: WindowState, batches: EdgeBatch, key: jax.Array,
     bit-for-bit, and costs nothing to expose.
     """
     return _replay_scan_impl(state, batches, key, node_capacity, wcfg,
-                             scfg, sched_cfg, bias_scale, with_probes=False)
+                             scfg, sched_cfg, bias_scale, with_probes=False,
+                             table=table)
 
 
 @partial(jax.jit,
          static_argnames=("node_capacity", "wcfg", "scfg", "sched_cfg",
-                          "bias_scale"),
+                          "bias_scale", "table"),
          donate_argnums=(0,))
 def replay_scan_probed(state: WindowState, batches: EdgeBatch,
                        key: jax.Array, node_capacity: int, wcfg: WalkConfig,
                        scfg: SamplerConfig, sched_cfg: SchedulerConfig,
-                       bias_scale: float = 1.0):
+                       bias_scale: float = 1.0, table=None):
     """``replay_scan`` plus an obs probe vector (DESIGN.md §16).
 
     Returns ``(final_state, ReplayStats, final_walks, probes)`` with
@@ -243,7 +250,8 @@ def replay_scan_probed(state: WindowState, batches: EdgeBatch,
     byte-unchanged.
     """
     return _replay_scan_impl(state, batches, key, node_capacity, wcfg,
-                             scfg, sched_cfg, bias_scale, with_probes=True)
+                             scfg, sched_cfg, bias_scale, with_probes=True,
+                             table=table)
 
 
 class StreamingEngine:
@@ -263,9 +271,18 @@ class StreamingEngine:
         self.cfg = cfg
         self.batch_capacity = batch_capacity
         self._ingest = ingest if ingest_impl == "merge" else ingest_sort
+        # alias-table spec (DESIGN.md §17): bias='table' configs maintain
+        # per-node alias tables incrementally through every ingest
+        from repro.core.alias import spec_from_sampler
+        self._table = spec_from_sampler(cfg.sampler)
+        if self._table is not None and ingest_impl == "sort":
+            raise ValueError(
+                "alias-table maintenance (bias='table') requires the merge "
+                "ingest path; the 'sort' reference path does not thread "
+                "table state")
         self.state: WindowState = init_window(
             cfg.window.edge_capacity, cfg.window.node_capacity,
-            int(cfg.window.duration))
+            int(cfg.window.duration), table=self._table)
         self.key = jax.random.PRNGKey(cfg.seed)
         self.stats = StreamStats()
         # obs integration (DESIGN.md §16): every driver publishes into the
@@ -278,6 +295,7 @@ class StreamingEngine:
         self._ingested_seen = 0
         self._late_seen = 0
         self._overflow_seen = 0
+        self._rebuilt_seen = 0
         # walk-buffer pool for sample_walks_donated, keyed by (W, L)
         self._walk_bufs: dict = {}
         self._warned_replicated_index = False
@@ -307,6 +325,20 @@ class StreamingEngine:
         self._ingested_seen = ingested
         self._late_seen = late
         self._overflow_seen = overflow
+        self._publish_tables()
+
+    def _publish_tables(self) -> None:
+        """Alias-table maintenance counters (DESIGN.md §17): how many node
+        rebuilds the incremental update actually performed — the work a
+        full per-batch rebuild would multiply by the window's node count."""
+        if self.state.tables is None:
+            return
+        rebuilt = int(self.state.tables.rebuilt)
+        self.registry.inc("alias_nodes_rebuilt_total",
+                          max(0, rebuilt - self._rebuilt_seen),
+                          help="alias-table node rebuilds performed by "
+                               "incremental window maintenance")
+        self._rebuilt_seen = rebuilt
 
     def _publish_window_from_replay(self, stats: ReplayStats) -> None:
         """Window gauges after a device replay; drop/ingest counters were
@@ -327,13 +359,19 @@ class StreamingEngine:
         self._ingested_seen = int(np.asarray(stats.ingested)[-1])
         self._late_seen = int(np.asarray(stats.late_drops)[-1])
         self._overflow_seen = int(np.asarray(stats.overflow_drops)[-1])
+        self._publish_tables()
 
     def ingest_batch(self, src, dst, ts) -> None:
         batch = make_batch(src, dst, ts, capacity=self.batch_capacity)
         t0 = time.perf_counter()
         with span("ingest_merge", self.registry):
-            self.state = self._ingest(self.state, batch,
-                                      self.cfg.window.node_capacity)
+            if self._table is not None:
+                self.state = self._ingest(self.state, batch,
+                                          self.cfg.window.node_capacity,
+                                          table=self._table)
+            else:
+                self.state = self._ingest(self.state, batch,
+                                          self.cfg.window.node_capacity)
             jax.block_until_ready(self.state.index.ns_order)
         self.stats.ingest_s.append(time.perf_counter() - t0)
         self.stats.edges_active.append(int(self.state.index.num_edges))
@@ -349,7 +387,8 @@ class StreamingEngine:
         t0 = time.perf_counter()
         res = generate_walks(self.state.index, sub, wcfg,
                              self.cfg.sampler, self.cfg.scheduler,
-                             collect_stats=collect_stats)
+                             collect_stats=collect_stats,
+                             tables=self.state.tables)
         self._finish_sample(res, t0, path="host")
         return res
 
@@ -369,7 +408,8 @@ class StreamingEngine:
         self.key, sub = jax.random.split(self.key)
         t0 = time.perf_counter()
         res = generate_walks_donated(self.state.index, sub, bufs, wcfg,
-                                     self.cfg.sampler, self.cfg.scheduler)
+                                     self.cfg.sampler, self.cfg.scheduler,
+                                     tables=self.state.tables)
         self._finish_sample(res, t0, path="donated")
         self._walk_bufs[shape_key] = WalkBuffers(res.nodes, res.times)
         return res
@@ -468,13 +508,15 @@ class StreamingEngine:
         if self.probes:
             self.state, stats, walks, pv = replay_scan_probed(
                 self.state, stacked, sub, self.cfg.window.node_capacity,
-                wcfg, self.cfg.sampler, self.cfg.scheduler)
+                wcfg, self.cfg.sampler, self.cfg.scheduler,
+                table=self._table)
             # the single sync point — probes ride the same materialization
             jax.block_until_ready((stats, pv))
         else:
             self.state, stats, walks = replay_scan(
                 self.state, stacked, sub, self.cfg.window.node_capacity,
-                wcfg, self.cfg.sampler, self.cfg.scheduler)
+                wcfg, self.cfg.sampler, self.cfg.scheduler,
+                table=self._table)
             jax.block_until_ready(stats)       # the single sync point
         elapsed = time.perf_counter() - t0
         if self.probes:

@@ -64,6 +64,7 @@ with the identical bit-identity guarantee.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -72,9 +73,14 @@ import jax.numpy as jnp
 
 from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
 from repro.core import scheduler as sched
+from repro.core.alias import AliasTables, alias_pick
 from repro.core.samplers import (
+    BIAS_CODES,
+    BIAS_TABLE,
     node2vec_beta,
+    node2vec_beta_lanes,
     node2vec_max_beta,
+    node2vec_max_beta_lanes,
     pick_in_neighborhood,
     pick_in_neighborhood_lanes,
     pick_start_edges,
@@ -88,6 +94,148 @@ from repro.core.temporal_index import (
 
 NODE_PAD = -1          # sentinel in emitted walks beyond walk length
 N2V_ROUNDS = 8         # rejection-sampling rounds per hop (vectorized)
+# Second-order lanes draw their rejection uniforms from dedicated RNG tags
+# N2V_TAG_BASE + step·(2·N2V_ROUNDS) + 2r + j, far above any per-step tag
+# (tag s+1 for scan step s) a first-order lane ever uses — so enabling
+# second-order lanes leaves every existing draw stream bit-identical.
+N2V_TAG_BASE = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# Capability chokepoint: every bias/path/lane refusal goes through here
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LaneFeatures:
+    """Static summary of what a coalesced lane batch needs from the engine.
+
+    ``table``: the batch may carry lanes with bias code "table" (alias
+    tables are threaded into the dispatch). ``second_order``: the batch
+    carries per-lane node2vec (p, q) arrays with at least one lane ≠ 1.
+    Both are compile-time facts (the service derives them from the query
+    set), so refusals stay trace-time errors.
+    """
+
+    table: bool = False
+    second_order: bool = False
+
+
+_CAP = "unsupported sampler capability: "
+
+
+def check_capabilities(scfg: SamplerConfig, path: str,
+                       lanes: Optional[LaneFeatures] = None, *,
+                       sharded: bool = False,
+                       have_tables: bool = False) -> None:
+    """Validate a (sampler config, path, lane features) combination.
+
+    The single chokepoint behind every refusal the engine, the serving
+    layer, and the sharded streaming walker used to issue separately —
+    one place to read what runs where, one set of error messages, and
+    one matrix for tests to sweep (tests/test_capabilities.py). Raises
+    ``ValueError``; returns ``None`` when the combination is supported.
+    """
+    if scfg.bias not in BIAS_CODES:
+        raise ValueError(
+            _CAP + f"unknown bias {scfg.bias!r} "
+            f"(expected one of {sorted(BIAS_CODES)})")
+    if scfg.start_bias == "table" or scfg.start_bias not in BIAS_CODES:
+        raise ValueError(
+            _CAP + f"start-edge bias {scfg.start_bias!r} is not supported; "
+            "start draws use the closed forms 'uniform'|'linear'|"
+            "'exponential' (alias tables cover neighborhood regions, not "
+            "the timestamp view)")
+    use_n2v = scfg.node2vec_p != 1.0 or scfg.node2vec_q != 1.0
+
+    if scfg.bias == "table":
+        if scfg.mode != "index":
+            raise ValueError(
+                _CAP + "bias='table' requires SamplerConfig.mode='index' "
+                f"(the alias draw replaces the mode dispatch; got "
+                f"mode={scfg.mode!r})")
+        if sharded:
+            raise ValueError(
+                _CAP + "sharded streaming walks do not support bias="
+                "'table' (per-shard alias tables cover resident regions "
+                "only; a migrating walk's draw would need its owner's "
+                "table)")
+        if not have_tables:
+            raise ValueError(
+                _CAP + "bias='table' requires alias tables: build the "
+                "window with a TableSpec (init_window(..., table=spec) / "
+                "ingest(..., table=spec)) and pass state.tables into the "
+                "walk entry point")
+        if path in ("tiled", "fused"):
+            raise ValueError(
+                _CAP + f"path={path!r} does not support bias='table' (the "
+                "Pallas kernels dispatch the closed-form inverse CDFs "
+                "only); use 'fullwalk'|'grouped'")
+
+    if use_n2v:
+        if sharded:
+            raise ValueError(
+                _CAP + "sharded streaming walks do not support node2vec "
+                "second-order bias (the β probe needs the previous node's "
+                "adjacency, which lives on a different shard)")
+        if lanes is not None:
+            raise ValueError(
+                _CAP + "per-lane batches do not support config-level "
+                "node2vec second-order bias; second-order lanes carry "
+                "their own (n2v_p, n2v_q) arrays (set node2vec_p="
+                "node2vec_q=1.0)")
+        if path == "fused":
+            raise ValueError(
+                _CAP + "path='fused' does not support node2vec "
+                "second-order bias (the rejection loop re-draws outside "
+                "the kernel); use 'fullwalk'|'grouped'")
+        if path == "tiled":
+            raise ValueError(
+                _CAP + "path='tiled' does not support node2vec "
+                "second-order bias (the walk-step kernel draws first-"
+                "order only); use 'fullwalk'|'grouped'")
+
+    if lanes is not None:
+        if scfg.mode != "index":
+            raise ValueError(
+                _CAP + "per-lane batches require SamplerConfig.mode="
+                "'index': the per-lane dispatch selects over the closed-"
+                f"form inverse CDFs (got mode={scfg.mode!r})")
+        if path == "tiled":
+            raise ValueError(
+                _CAP + "per-lane batches support paths 'fullwalk'|"
+                "'grouped'|'fused'; the tiled Pallas kernel compiles a "
+                "single bias per dispatch (the fused kernel dispatches "
+                "per-lane bias codes)")
+        if lanes.table:
+            if sharded:
+                raise ValueError(
+                    _CAP + "sharded lane serving does not support bias "
+                    "code 'table' (per-shard alias tables cover resident "
+                    "regions only; a migrating lane's draw would need its "
+                    "owner's table)")
+            if not have_tables:
+                raise ValueError(
+                    _CAP + "lane bias code 'table' requires alias tables: "
+                    "ingest with a TableSpec and pass state.tables into "
+                    "generate_walk_lanes")
+            if path == "fused":
+                raise ValueError(
+                    _CAP + "path='fused' does not serve lane bias code "
+                    "'table' (the fused kernel dispatches the closed-form "
+                    "codes only); use 'fullwalk'|'grouped'")
+        if lanes.second_order:
+            if sharded:
+                raise ValueError(
+                    _CAP + "sharded lane serving does not support "
+                    "node2vec second-order lanes (the β probe needs the "
+                    "previous node's adjacency, which lives on a "
+                    "different shard)")
+            if path == "fused":
+                raise ValueError(
+                    _CAP + "path='fused' does not support node2vec "
+                    "second-order lanes (the rejection loop re-draws "
+                    "outside the kernel); use 'fullwalk'|'grouped'")
 
 
 class WalkResult(NamedTuple):
@@ -140,6 +288,13 @@ class LaneParams(NamedTuple):
     rid: jax.Array          # int32[W] request seed folded into the RNG
     wid: jax.Array          # int32[W] walk index within the request
     active: jax.Array       # bool[W] real lane vs bucket padding
+    # second-order node2vec lane parameters (DESIGN.md §17): float32[W],
+    # 1.0 disables the second-order bias for that lane. None (the default,
+    # an empty pytree subtree) on batches packed before this field existed
+    # — equivalent to all-ones. Only read when the entry point is called
+    # with second_order=True.
+    n2v_p: Optional[jax.Array] = None
+    n2v_q: Optional[jax.Array] = None
 
 
 def _lane_keys(key: jax.Array, lanes: LaneParams) -> jax.Array:
@@ -287,15 +442,72 @@ def start_walks(index: TemporalIndex, wcfg: WalkConfig, scfg: SamplerConfig,
 # ---------------------------------------------------------------------------
 
 
+def _pick_config(index, scfg, tables, a, c, b, u, node):
+    """First-order pick under the *config* bias (non-lane paths)."""
+    if scfg.bias == "table":
+        return alias_pick(tables, a, c, b, u, radix=scfg.table_radix,
+                          degree_cap=scfg.table_degree_cap)
+    return pick_in_neighborhood(index, scfg, c, b, u, node)
+
+
+def _pick_lane_codes(index, scfg, tables, code, a, c, b, u):
+    """First-order pick under per-lane bias codes.
+
+    The closed forms dispatch branchlessly as before; when alias tables
+    are threaded in, lanes coded BIAS_TABLE overlay the alias draw —
+    still elementwise in (code, u, region), preserving the coalesced↔solo
+    bit-identity guarantee.
+    """
+    k = pick_in_neighborhood_lanes(index, code, c, b, u)
+    if tables is not None:
+        k_tab = alias_pick(tables, a, c, b, u, radix=scfg.table_radix,
+                           degree_cap=scfg.table_degree_cap)
+        k = jnp.where(code == BIAS_TABLE, k_tab, k)
+    return k
+
+
+def _lane_second_order(index, scfg, tables, lane_bias, a, c, b, prev,
+                       k_plain, n2v):
+    """Per-lane node2vec rejection over the first-order proposal stream.
+
+    ``n2v = (p, q, us2)`` with us2[N2V_ROUNDS, 2, W] from the dedicated
+    N2V_TAG_BASE substreams, all in the caller's lane layout. Lanes with
+    p == q == 1 keep ``k_plain`` (the ordinary first-order draw), so a
+    mixed batch is bit-identical to running each lane solo either way.
+    """
+    p, q, us2 = n2v
+    beta_max = node2vec_max_beta_lanes(p, q)
+
+    def round_(carry_, uv):
+        k_acc, accepted = carry_
+        u_r, v_r = uv[0], uv[1]
+        k_r = _pick_lane_codes(index, scfg, tables, lane_bias, a, c, b, u_r)
+        cand = index.ns_dst[jnp.clip(k_r, 0, index.edge_capacity - 1)]
+        beta = node2vec_beta_lanes(index, prev, cand, p, q)
+        # hops with no previous node accept unconditionally
+        ok = (v_r * beta_max <= beta) | (prev < 0)
+        take = ok & ~accepted
+        return (jnp.where(take, k_r, k_acc), accepted | ok), None
+
+    k0 = _pick_lane_codes(index, scfg, tables, lane_bias, a, c, b,
+                          us2[0, 0])
+    W = k0.shape[0]
+    (k_rej, _), _ = jax.lax.scan(round_, (k0, jnp.zeros((W,), bool)), us2)
+    is_n2v = (p != 1.0) | (q != 1.0)
+    return jnp.where(is_n2v, k_rej, k_plain)
+
+
 def _sample_hop(index: TemporalIndex, scfg: SamplerConfig,
                 cur_node, cur_time, prev_node, alive, hop_key,
-                lane_bias=None, lane_u=None):
+                lane_bias=None, lane_u=None, tables=None, lane_n2v=None):
     """Given per-walk (node, time), returns (next_node, next_time, has_next).
 
     Pure sampling logic shared by every path; callers control the layout.
     With ``lane_bias``/``lane_u`` (walk-order arrays, DESIGN.md §11) the
     draw is the caller-supplied per-lane uniform and the bias dispatches
-    per lane over the closed-form inverse CDFs.
+    per lane; ``tables`` threads the alias tables for table-coded lanes
+    (or config bias='table'); ``lane_n2v`` carries per-lane second-order
+    parameters (see ``_lane_second_order``).
     """
     W = cur_node.shape[0]
     a, b = node_range(index, cur_node)
@@ -305,10 +517,14 @@ def _sample_hop(index: TemporalIndex, scfg: SamplerConfig,
 
     use_n2v = (scfg.node2vec_p != 1.0) or (scfg.node2vec_q != 1.0)
     if lane_u is not None:
-        k = pick_in_neighborhood_lanes(index, lane_bias, c, b, lane_u)
+        k = _pick_lane_codes(index, scfg, tables, lane_bias, a, c, b,
+                             lane_u)
+        if lane_n2v is not None:
+            k = _lane_second_order(index, scfg, tables, lane_bias, a, c, b,
+                                   prev_node, k, lane_n2v)
     elif not use_n2v:
         u = jax.random.uniform(hop_key, (W,))
-        k = pick_in_neighborhood(index, scfg, c, b, u, cur_node)
+        k = _pick_config(index, scfg, tables, a, c, b, u, cur_node)
     else:
         # rejection sampling on the first-order proposal (paper §2.5)
         beta_max = node2vec_max_beta(scfg.node2vec_p, scfg.node2vec_q)
@@ -317,7 +533,7 @@ def _sample_hop(index: TemporalIndex, scfg: SamplerConfig,
         def round_(carry, uv):
             k_acc, accepted = carry
             u_r, v_r = uv[0], uv[1]
-            k_r = pick_in_neighborhood(index, scfg, c, b, u_r, cur_node)
+            k_r = _pick_config(index, scfg, tables, a, c, b, u_r, cur_node)
             cand = index.ns_dst[jnp.clip(k_r, 0, index.edge_capacity - 1)]
             beta = node2vec_beta(index, prev_node, cand,
                                  scfg.node2vec_p, scfg.node2vec_q)
@@ -327,7 +543,7 @@ def _sample_hop(index: TemporalIndex, scfg: SamplerConfig,
             return (jnp.where(take, k_r, k_acc), accepted | ok), None
 
         u0 = us[0, 0]
-        k0 = pick_in_neighborhood(index, scfg, c, b, u0, cur_node)
+        k0 = _pick_config(index, scfg, tables, a, c, b, u0, cur_node)
         (k, _), _ = jax.lax.scan(round_, (k0, jnp.zeros((W,), bool)), us)
 
     k = jnp.clip(k, 0, index.edge_capacity - 1)
@@ -338,10 +554,11 @@ def _sample_hop(index: TemporalIndex, scfg: SamplerConfig,
 
 def _hop_fullwalk(index, scfg, carry: _Carry, step: jax.Array,
                   hop_key, lane_bias=None, lane_u=None,
-                  lane_limit=None) -> _Carry:
+                  lane_limit=None, tables=None, lane_n2v=None) -> _Carry:
     nn, nt, has_next, _ = _sample_hop(
         index, scfg, carry.cur_node, carry.cur_time, carry.prev_node,
-        carry.alive, hop_key, lane_bias=lane_bias, lane_u=lane_u)
+        carry.alive, hop_key, lane_bias=lane_bias, lane_u=lane_u,
+        tables=tables, lane_n2v=lane_n2v)
     if lane_limit is not None:
         has_next = has_next & lane_limit
     return _advance(carry, step, nn, nt, has_next)
@@ -386,23 +603,32 @@ def _bucket_prologue(index: TemporalIndex, sched_cfg, carry: _Carry):
 
 
 def _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, order,
-               lane_bias=None, lane_u=None):
+               lane_bias=None, lane_u=None, tables=None, lane_n2v=None):
     """Sample positions k ∈ [c, b) for grouped lanes.
 
     ``order`` maps lane -> original walk id; draws are generated in walk-id
     order and indexed through it, which is what makes every layout emit
-    identical walks for identical keys. ``lane_bias``/``lane_u`` are
-    walk-order per-lane arrays (DESIGN.md §11), indexed through ``order``
-    the same way.
+    identical walks for identical keys. ``lane_bias``/``lane_u`` and the
+    ``lane_n2v`` arrays are walk-order per-lane arrays (DESIGN.md §11),
+    indexed through ``order`` the same way.
     """
     W = s_node.shape[0]
     use_n2v = (scfg.node2vec_p != 1.0) or (scfg.node2vec_q != 1.0)
+    if tables is not None or lane_n2v is not None:
+        a, _ = node_range(index, s_node)
+    else:
+        a = None
     if lane_u is not None:
-        k = pick_in_neighborhood_lanes(index, lane_bias[order], c, b,
-                                       lane_u[order])
+        k = _pick_lane_codes(index, scfg, tables, lane_bias[order], a, c, b,
+                             lane_u[order])
+        if lane_n2v is not None:
+            p, q, us2 = lane_n2v
+            k = _lane_second_order(index, scfg, tables, lane_bias[order],
+                                   a, c, b, s_prev, k,
+                                   (p[order], q[order], us2[:, :, order]))
     elif not use_n2v:
         u = jax.random.uniform(hop_key, (W,))[order]
-        k = pick_in_neighborhood(index, scfg, c, b, u, s_node)
+        k = _pick_config(index, scfg, tables, a, c, b, u, s_node)
     else:
         beta_max = node2vec_max_beta(scfg.node2vec_p, scfg.node2vec_q)
         us = jax.random.uniform(hop_key, (N2V_ROUNDS, 2, W))[:, :, order]
@@ -410,7 +636,7 @@ def _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, order,
         def round_(carry_, uv):
             k_acc, accepted = carry_
             u_r, v_r = uv[0], uv[1]
-            k_r = pick_in_neighborhood(index, scfg, c, b, u_r, s_node)
+            k_r = _pick_config(index, scfg, tables, a, c, b, u_r, s_node)
             cand = index.ns_dst[jnp.clip(k_r, 0, index.edge_capacity - 1)]
             beta = node2vec_beta(index, s_prev, cand,
                                  scfg.node2vec_p, scfg.node2vec_q)
@@ -418,7 +644,7 @@ def _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, order,
             take = ok & ~accepted
             return (jnp.where(take, k_r, k_acc), accepted | ok), None
 
-        k0 = pick_in_neighborhood(index, scfg, c, b, us[0, 0], s_node)
+        k0 = _pick_config(index, scfg, tables, a, c, b, us[0, 0], s_node)
         (k, _), _ = jax.lax.scan(round_, (k0, jnp.zeros((W,), bool)), us)
 
     return jnp.clip(k, 0, index.edge_capacity - 1)
@@ -426,7 +652,7 @@ def _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, order,
 
 def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
                  hop_key, lane_bias=None, lane_u=None,
-                 lane_limit=None) -> _Carry:
+                 lane_limit=None, tables=None, lane_n2v=None) -> _Carry:
     """Reference regroup: fresh lexsort by (node, time) + inverse scatter."""
     W = carry.cur_node.shape[0]
     nc = index.node_capacity
@@ -444,7 +670,8 @@ def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
         has_next_s = has_next_s & lane_limit[perm]
 
     k = _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, perm,
-                   lane_bias=lane_bias, lane_u=lane_u)
+                   lane_bias=lane_bias, lane_u=lane_u, tables=tables,
+                   lane_n2v=lane_n2v)
     nn_s = index.ns_dst[k]
     nt_s = index.ns_ts[k]
 
@@ -456,7 +683,8 @@ def _hop_grouped(index, scfg, carry: _Carry, step: jax.Array,
 
 def _hop_grouped_bucket(index, scfg, sched_cfg, carry: _Carry,
                         step: jax.Array, hop_key, lane_bias=None,
-                        lane_u=None, lane_limit=None) -> _Carry:
+                        lane_u=None, lane_limit=None, tables=None,
+                        lane_n2v=None) -> _Carry:
     """O(W) counting regroup with carried permutation (DESIGN.md §10).
 
     Lanes stay in grouped order across hops — the regroup permutes the
@@ -473,7 +701,8 @@ def _hop_grouped_bucket(index, scfg, sched_cfg, carry: _Carry,
         has_next_s = has_next_s & lane_limit[lane]
 
     k = _draw_pick(index, scfg, hop_key, c, b, s_node, s_prev, lane,
-                   lane_bias=lane_bias, lane_u=lane_u)
+                   lane_bias=lane_bias, lane_u=lane_u, tables=tables,
+                   lane_n2v=lane_n2v)
     return _advance_lanes(carry, lane, step, s_node, s_time, s_prev,
                           index.ns_dst[k], index.ns_ts[k], has_next_s)
 
@@ -532,8 +761,13 @@ def _fused_draws(index, scfg, hop_key, order, lane_bias, lane_u):
 
 
 def _hop_fused(index, scfg, sched_cfg, carry: _Carry, step, hop_key,
-               lane_bias=None, lane_u=None, lane_limit=None) -> _Carry:
-    """Lexsort layout feeding the fused convergence-tiered kernel."""
+               lane_bias=None, lane_u=None, lane_limit=None, tables=None,
+               lane_n2v=None) -> _Carry:
+    """Lexsort layout feeding the fused convergence-tiered kernel.
+
+    ``tables``/``lane_n2v`` are always None here — check_capabilities
+    refuses table-bias and second-order batches on the fused path.
+    """
     from repro.kernels import fused_step as kfused
     W = carry.cur_node.shape[0]
     node_key = jnp.where(carry.alive, carry.cur_node, index.node_capacity + 1)
@@ -554,12 +788,13 @@ def _hop_fused(index, scfg, sched_cfg, carry: _Carry, step, hop_key,
 
 
 def _hop_fused_bucket(index, scfg, sched_cfg, carry: _Carry, step, hop_key,
-                      lane_bias=None, lane_u=None,
-                      lane_limit=None) -> _Carry:
+                      lane_bias=None, lane_u=None, lane_limit=None,
+                      tables=None, lane_n2v=None) -> _Carry:
     """Bucket-regrouped layout feeding the fused kernel (DESIGN.md §14).
 
     The kernel returns the gathered dst/ts directly — the hop issues no
     edge-array gathers at all, unlike ``_hop_tiled_bucket``.
+    ``tables``/``lane_n2v`` are always None here (see ``_hop_fused``).
     """
     from repro.kernels import fused_step as kfused
     lane, s_node, s_time, s_prev, s_alive = _bucket_prologue(
@@ -626,15 +861,25 @@ def _generate_walks_impl(index: TemporalIndex, key: jax.Array,
                          collect_stats: bool = False,
                          buffers: Optional[WalkBuffers] = None,
                          walk_offset=0,
-                         lanes: Optional[LaneParams] = None) -> WalkResult:
-    """Shared walk-generation body behind every jit entry point."""
+                         lanes: Optional[LaneParams] = None,
+                         tables: Optional[AliasTables] = None,
+                         second_order: bool = False) -> WalkResult:
+    """Shared walk-generation body behind every jit entry point.
+
+    ``tables`` threads the window's alias tables (bias='table' configs or
+    table-coded lanes, DESIGN.md §17); ``second_order`` (static) compiles
+    the per-lane node2vec rejection machinery into the lane dispatch.
+    """
+    path = sched_cfg.path
     if lanes is not None:
-        _check_lane_support(wcfg, scfg, sched_cfg, lanes)
+        _check_lane_support(wcfg, scfg, sched_cfg, lanes,
+                            tables=tables, second_order=second_order)
         # one base key; lane streams are derived by fold_in, no split —
         # the split would make draws depend on batch composition
         lane_keys = _lane_keys(key, lanes)
         start_key = walk_key = key
     else:
+        check_capabilities(scfg, path, have_tables=tables is not None)
         lane_keys = None
         start_key, walk_key = jax.random.split(key)
     carry0 = start_walks(index, wcfg, scfg, start_key,
@@ -644,16 +889,11 @@ def _generate_walks_impl(index: TemporalIndex, key: jax.Array,
     # number of remaining hops: start already consumed 1 edge in edges-mode
     hops = L - 1 if wcfg.start_mode == "edges" else L
 
-    path = sched_cfg.path
     bucket = sched_cfg.regroup == "bucket"
     if sched_cfg.regroup not in ("bucket", "lexsort"):
         raise ValueError(f"unknown regroup {sched_cfg.regroup!r}")
-    if path == "fused" and (scfg.node2vec_p != 1.0
-                            or scfg.node2vec_q != 1.0):
-        raise ValueError(
-            "path='fused' does not support node2vec second-order bias "
-            "(the rejection loop re-draws outside the kernel); use "
-            "'fullwalk'|'grouped'|'tiled'")
+    pass_tables = tables if scfg.bias == "table" or lanes is not None \
+        else None
 
     def body(carry, step):
         hop_key = jax.random.fold_in(walk_key, step)
@@ -666,7 +906,19 @@ def _generate_walks_impl(index: TemporalIndex, key: jax.Array,
                 lane_bias=lanes.bias,
                 lane_u=_lane_uniform(lane_keys, step + 1),
                 lane_limit=(write_pos + 1) <= lanes.max_len,
+                tables=pass_tables,
             )
+            if second_order:
+                # second-order rejection uniforms from the dedicated tag
+                # block (see N2V_TAG_BASE): 2 per round per lane
+                base = N2V_TAG_BASE + step * (2 * N2V_ROUNDS)
+                us2 = jnp.stack([
+                    jnp.stack([_lane_uniform(lane_keys, base + 2 * r),
+                               _lane_uniform(lane_keys, base + 2 * r + 1)])
+                    for r in range(N2V_ROUNDS)])
+                lane_kw["lane_n2v"] = (lanes.n2v_p, lanes.n2v_q, us2)
+        elif scfg.bias == "table":
+            lane_kw = dict(tables=pass_tables)
         else:
             lane_kw = {}
         if collect_stats:
@@ -710,30 +962,31 @@ def _generate_walks_impl(index: TemporalIndex, key: jax.Array,
 
 
 def _check_lane_support(wcfg: WalkConfig, scfg: SamplerConfig,
-                        sched_cfg: SchedulerConfig,
-                        lanes: LaneParams) -> None:
-    """Static (trace-time) validation of a per-lane batch (DESIGN.md §11)."""
-    if scfg.mode != "index":
-        raise ValueError(
-            "per-lane batches require SamplerConfig.mode='index': the "
-            "per-lane dispatch selects over the three closed-form inverse "
-            f"CDFs (got mode={scfg.mode!r})")
-    if scfg.node2vec_p != 1.0 or scfg.node2vec_q != 1.0:
-        raise ValueError(
-            "per-lane batches do not support node2vec second-order bias "
-            "(set node2vec_p=node2vec_q=1.0)")
-    if sched_cfg.path == "tiled":
-        raise ValueError(
-            "per-lane batches support paths 'fullwalk'|'grouped'|'fused'; "
-            "the tiled Pallas kernel compiles a single bias per dispatch "
-            "(the fused kernel dispatches per-lane bias codes)")
+                        sched_cfg: SchedulerConfig, lanes: LaneParams,
+                        tables: Optional[AliasTables] = None,
+                        second_order: bool = False) -> None:
+    """Static (trace-time) validation of a per-lane batch (DESIGN.md §11).
+
+    Shape checks live here; everything capability-shaped delegates to
+    ``check_capabilities``.
+    """
+    check_capabilities(
+        scfg, sched_cfg.path,
+        LaneFeatures(table=tables is not None, second_order=second_order),
+        have_tables=tables is not None)
     if lanes.start_node.shape[0] != wcfg.num_walks:
         raise ValueError(
             f"lane arrays have {lanes.start_node.shape[0]} lanes but "
             f"wcfg.num_walks={wcfg.num_walks}")
+    if second_order and (lanes.n2v_p is None or lanes.n2v_q is None):
+        raise ValueError(
+            "second_order=True requires LaneParams.n2v_p/n2v_q arrays "
+            "(the coalescer packs them; see serve/coalescer.py)")
 
 
 # Generate ``wcfg.num_walks`` temporal walks of ≤ ``max_length`` hops.
+# ``tables`` (trailing, optional) threads the window's alias tables for
+# bias='table' configs.
 generate_walks = partial(
     jax.jit,
     static_argnames=("wcfg", "scfg", "sched_cfg", "collect_stats"),
@@ -744,28 +997,35 @@ def _generate_walk_lanes_impl(index: TemporalIndex, key: jax.Array,
                               lanes: LaneParams, wcfg: WalkConfig,
                               scfg: SamplerConfig,
                               sched_cfg: SchedulerConfig,
-                              buffers: Optional[WalkBuffers] = None
-                              ) -> WalkResult:
+                              buffers: Optional[WalkBuffers] = None,
+                              tables: Optional[AliasTables] = None,
+                              second_order: bool = False) -> WalkResult:
     return _generate_walks_impl(index, key, wcfg, scfg, sched_cfg,
-                                buffers=buffers, lanes=lanes)
+                                buffers=buffers, lanes=lanes,
+                                tables=tables, second_order=second_order)
 
 
 # Coalesced heterogeneous batch (DESIGN.md §11): one fixed-shape dispatch
-# serving many queries, with bias / max_length / RNG seed per lane. The
-# jit cache keys on (wcfg, scfg, sched_cfg) — the serving coalescer keeps
-# that set small by bucketing batch shapes.
+# serving many queries, with bias / max_length / RNG seed per lane (plus
+# alias tables and per-lane node2vec (p, q) when the batch needs them,
+# DESIGN.md §17). The jit cache keys on (wcfg, scfg, sched_cfg,
+# second_order) — the serving coalescer keeps that set small by bucketing
+# batch shapes.
 generate_walk_lanes = partial(
     jax.jit,
-    static_argnames=("wcfg", "scfg", "sched_cfg"),
+    static_argnames=("wcfg", "scfg", "sched_cfg", "second_order"),
 )(_generate_walk_lanes_impl)
 
 
 def _generate_walks_donated_impl(index: TemporalIndex, key: jax.Array,
                                  buffers: WalkBuffers, wcfg: WalkConfig,
                                  scfg: SamplerConfig,
-                                 sched_cfg: SchedulerConfig) -> WalkResult:
+                                 sched_cfg: SchedulerConfig,
+                                 tables: Optional[AliasTables] = None
+                                 ) -> WalkResult:
     return _generate_walks_impl(index, key, wcfg, scfg, sched_cfg,
-                                collect_stats=False, buffers=buffers)
+                                collect_stats=False, buffers=buffers,
+                                tables=tables)
 
 
 # Donating entry point for steady-state loops (DESIGN.md §10): pass the
@@ -775,5 +1035,5 @@ def _generate_walks_donated_impl(index: TemporalIndex, key: jax.Array,
 generate_walks_donated = partial(
     jax.jit,
     static_argnames=("wcfg", "scfg", "sched_cfg"),
-    donate_argnums=(2,),
+    donate_argnums=(2,),   # buffers only; tables trail after and are read-only
 )(_generate_walks_donated_impl)

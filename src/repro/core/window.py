@@ -47,11 +47,12 @@ start-edge draws while the dual indexes stay node-partitioned.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.alias import AliasTables, TableSpec, build_tables, update_tables
 from repro.core.edge_store import TS_PAD, EdgeBatch, EdgeStore
 from repro.core.temporal_index import TemporalIndex, build_index, build_index_donated
 
@@ -63,20 +64,27 @@ class WindowState(NamedTuple):
     ingested: jax.Array       # int64-ish running counters (int32 here)
     late_drops: jax.Array
     overflow_drops: jax.Array
+    # alias/radix bias tables (DESIGN.md §17), carried beside pexp/plin and
+    # maintained incrementally by ingest when a TableSpec is passed; None
+    # (an empty pytree subtree) when table bias is off.
+    tables: Optional[AliasTables] = None
 
 
 def init_window(edge_capacity: int, node_capacity: int, window: int,
-                bias_scale: float = 1.0) -> WindowState:
+                bias_scale: float = 1.0,
+                table: Optional[TableSpec] = None) -> WindowState:
     from repro.core.edge_store import empty_store
     store = empty_store(edge_capacity, node_capacity)
     index = build_index_donated(store, node_capacity, bias_scale)
+    tables = build_tables(index, table) if table is not None else None
     # distinct scalar buffers: donation (ingest donate_argnums) rejects a
     # state whose fields alias one another
     def z():
         return jnp.asarray(0, jnp.int32)
     return WindowState(index=index, t_now=z(),
                        window=jnp.asarray(window, jnp.int32),
-                       ingested=z(), late_drops=z(), overflow_drops=z())
+                       ingested=z(), late_drops=z(), overflow_drops=z(),
+                       tables=tables)
 
 
 # ---------------------------------------------------------------------------
@@ -143,7 +151,10 @@ def _prepare_runs(store: EdgeStore, t_prev, window, batch: EdgeBatch,
     sdst = jnp.where(live, store.dst[jnp.clip(idx, 0, E - 1)], 0)
     sts = jnp.where(live, store.ts[jnp.clip(idx, 0, E - 1)], TS_PAD)
 
-    return ((ssrc, sdst, sts, keep_n), (bsrc, bdst, bts, bn), t_now, late)
+    # evict_to rides along for the alias-table dirty rule: the sources of
+    # the evicted prefix store.src[:evict_to] lose edges this advance
+    return ((ssrc, sdst, sts, keep_n), (bsrc, bdst, bts, bn), t_now, late,
+            evict_to)
 
 
 def _clip_to_capacity(merged, keep_n, bn, E: int, node_capacity: int):
@@ -210,25 +221,76 @@ def _merge_runs(run_s, run_b):
     return msrc, mdst, mts
 
 
+def _dirty_nodes(state: WindowState, run_b, merged, keep_n, bn, evict_to,
+                 node_capacity: int) -> jax.Array:
+    """bool[N] mask of nodes whose neighborhood region changed this advance.
+
+    Exactly three ways a node's region content can change (the stable
+    merge + stable lexsort keep every untouched node's region sequence
+    identical, merely shifted): it gained a kept batch edge, it lost an
+    edge to prefix eviction, or it lost an edge to the overflow clip of
+    the merged run. The alias-table incremental update rebuilds precisely
+    these nodes; tests/test_alias.py property-checks the rule against
+    from-scratch rebuilds.
+    """
+    nc = node_capacity
+    E = state.index.store.capacity
+    dirty = jnp.zeros((nc,), bool)
+
+    bsrc = run_b[0]
+    B = bsrc.shape[0]
+    bkept = jnp.arange(B, dtype=jnp.int32) < bn
+    dirty = dirty.at[jnp.where(bkept, bsrc, nc)].set(True, mode="drop")
+
+    old_src = state.index.store.src
+    evicted = jnp.arange(E, dtype=jnp.int32) < evict_to
+    dirty = dirty.at[jnp.where(evicted, old_src, nc)].set(True, mode="drop")
+
+    msrc = merged[0]
+    EM = msrc.shape[0]
+    overflow = jnp.maximum(keep_n + bn - E, 0)
+    clipped = jnp.arange(EM, dtype=jnp.int32) < overflow
+    dirty = dirty.at[jnp.where(clipped, msrc, nc)].set(True, mode="drop")
+    return dirty
+
+
 def ingest_impl(state: WindowState, batch: EdgeBatch, node_capacity: int,
-                bias_scale: float = 1.0, watermark=None) -> WindowState:
+                bias_scale: float = 1.0, watermark=None,
+                table: Optional[TableSpec] = None) -> WindowState:
     """Merge-based window advance (unjitted body; see ``ingest``).
 
     ``watermark`` is the sharded-window eviction hook (see
     ``_prepare_runs``); single-device callers leave it ``None``.
+
+    ``table`` (static TableSpec) switches on alias-table maintenance:
+    only the dirty nodes (see ``_dirty_nodes``) are rebuilt against the
+    new index; clean nodes copy their old table content positionally.
+    The spec must be passed on *every* ingest of a table-carrying state —
+    omitting it drops the tables from the returned state.
     """
-    run_s, run_b, t_now, late = _prepare_runs(
+    run_s, run_b, t_now, late, evict_to = _prepare_runs(
         state.index.store, state.t_now, state.window, batch, node_capacity,
         watermark=watermark)
     merged = _merge_runs(run_s, run_b)
-    return _finalize(state, merged, run_s[3], run_b[3], t_now, late,
-                     batch.count, node_capacity, bias_scale)
+    new = _finalize(state, merged, run_s[3], run_b[3], t_now, late,
+                    batch.count, node_capacity, bias_scale)
+    if table is None:
+        return new
+    if state.tables is None:
+        tables = build_tables(new.index, table)
+    else:
+        dirty = _dirty_nodes(state, run_b, merged, run_s[3], run_b[3],
+                             evict_to, node_capacity)
+        tables = update_tables(new.index, table,
+                               old_starts=state.index.node_starts,
+                               old_tables=state.tables, dirty=dirty)
+    return new._replace(tables=tables)
 
 
 def _ingest_sort_impl(state: WindowState, batch: EdgeBatch, node_capacity: int,
                       bias_scale: float = 1.0) -> WindowState:
     """Seed reference path: concat + global stable argsort (O((m+b) log))."""
-    run_s, run_b, t_now, late = _prepare_runs(
+    run_s, run_b, t_now, late, _ = _prepare_runs(
         state.index.store, state.t_now, state.window, batch, node_capacity)
     ssrc, sdst, sts, keep_n = run_s
     bsrc, bdst, bts, bn = run_b
@@ -247,7 +309,8 @@ def _ingest_sort_impl(state: WindowState, batch: EdgeBatch, node_capacity: int,
 # XLA advances the window without reallocating the edge store + index arrays;
 # ``ingest_sort`` is the non-donating seed reference kept for equivalence
 # tests and old-vs-new benchmarking.
-ingest = partial(jax.jit, static_argnames=("node_capacity", "bias_scale"),
+ingest = partial(jax.jit,
+                 static_argnames=("node_capacity", "bias_scale", "table"),
                  donate_argnums=(0,))(ingest_impl)
 ingest_merge = ingest
 ingest_sort = partial(jax.jit,
@@ -259,8 +322,8 @@ ingest_sort = partial(jax.jit,
 # readable while walk queries run against it and the next window builds
 # concurrently, so the input cannot be donated. Same math as ``ingest``,
 # byte-identical output; costs one fresh store+index allocation per call.
-ingest_nodonate = partial(jax.jit,
-                          static_argnames=("node_capacity", "bias_scale"))(
+ingest_nodonate = partial(
+    jax.jit, static_argnames=("node_capacity", "bias_scale", "table"))(
     ingest_impl)
 
 
@@ -298,7 +361,7 @@ def advance_view_impl(view: TsView, batch: EdgeBatch, node_capacity: int,
                       watermark=None) -> TsView:
     """Advance a ts-view by one batch: the window pipeline minus the index
     build. Bit-identical store/t_now trajectory to ``ingest_impl``."""
-    run_s, run_b, t_now, _ = _prepare_runs(
+    run_s, run_b, t_now, _, _ = _prepare_runs(
         view.store, view.t_now, view.window, batch, node_capacity,
         watermark=watermark)
     merged = _merge_runs(run_s, run_b)

@@ -121,10 +121,12 @@ from repro.obs.probes import (
 from repro.obs.registry import MetricsRegistry, count_drop, get_registry
 from repro.core.walk_engine import (
     NODE_PAD,
+    LaneFeatures,
     LaneParams,
     WalkResult,
     _lane_keys,
     _lane_uniform,
+    check_capabilities,
 )
 from repro.core.window import TsView, WindowState, ingest_impl, init_window
 
@@ -173,10 +175,18 @@ def init_sharded_window(num_shards: int, edge_capacity_per_shard: int,
                         node_capacity: int, window: int,
                         bias_scale: float = 1.0,
                         mesh: Optional[Mesh] = None,
-                        axis_name: str = WINDOW_AXIS) -> ShardedWindowState:
-    """D empty per-shard windows; placed onto the mesh when given."""
+                        axis_name: str = WINDOW_AXIS,
+                        table=None) -> ShardedWindowState:
+    """D empty per-shard windows; placed onto the mesh when given.
+
+    ``table`` (a ``core.alias.TableSpec``) makes every per-shard window
+    carry alias tables over its *resident* regions, maintained
+    incrementally by ``ingest_sharded`` (pass the same spec there).
+    Sharded *sampling* under bias='table' stays refused — a migrating
+    walk's draw would need its owner's table — but the maintenance
+    itself shards cleanly because regions are node-local."""
     one = init_window(edge_capacity_per_shard, node_capacity, window,
-                      bias_scale)
+                      bias_scale, table=table)
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (num_shards,) + x.shape), one)
     state = ShardedWindowState(
@@ -195,7 +205,7 @@ def init_sharded_window(num_shards: int, edge_capacity_per_shard: int,
 def _shard_ingest(wstate: WindowState, bsrc, bdst, bts, bvalid, *, axis: str,
                   num_shards: int, placement: Placement,
                   exchange_capacity: int,
-                  node_capacity: int, bias_scale: float):
+                  node_capacity: int, bias_scale: float, table=None):
     """One shard's window advance for its slice of the incoming batch.
 
     batch slice → owner buckets → all_to_all → compact → local merge, with
@@ -222,9 +232,10 @@ def _shard_ingest(wstate: WindowState, bsrc, bdst, bts, bvalid, *, axis: str,
                             ts=r_ts[order], count=cnt)
 
     # (4) the single-device rank-based two-run merge, shard-locally,
-    # evicting against the agreed watermark
+    # evicting against the agreed watermark; with a TableSpec the merge
+    # also maintains this shard's alias tables over its resident regions
     new = ingest_impl(wstate, local_batch, node_capacity, bias_scale,
-                      watermark=watermark)
+                      watermark=watermark, table=table)
     return new, x_drop
 
 
@@ -473,8 +484,8 @@ def _shard_walk_lanes(idx, view: TsView, lanes: LaneParams, lane_keys,
 def _ingest_sharded_impl(state: ShardedWindowState, bsrc, bdst, bts, count, *,
                          mesh: Mesh, axis_name: str, node_capacity: int,
                          shard_cfg: ShardConfig, bias_scale: float = 1.0,
-                         placement: Optional[Placement] = None
-                         ) -> ShardedWindowState:
+                         placement: Optional[Placement] = None,
+                         table=None) -> ShardedWindowState:
     """Advance the sharded window by one batch (``bsrc/bdst/bts`` are
     [D, Bd], the batch axis pre-split per shard; ``count`` the global valid
     prefix length). The shard_map'd single-batch twin of the replay's
@@ -492,7 +503,7 @@ def _ingest_sharded_impl(state: ShardedWindowState, bsrc, bdst, bts, count, *,
             wstate, bsrc[0], bdst[0], bts[0], gpos < count, axis=axis_name,
             num_shards=D, placement=placement,
             exchange_capacity=shard_cfg.exchange_capacity,
-            node_capacity=node_capacity, bias_scale=bias_scale)
+            node_capacity=node_capacity, bias_scale=bias_scale, table=table)
         return ShardedWindowState(
             window=jax.tree.map(lambda a: a[None], new),
             exchange_drops=(state.exchange_drops[0] + x_drop)[None])
@@ -511,7 +522,7 @@ def _ingest_sharded_impl(state: ShardedWindowState, bsrc, bdst, bts, count, *,
 ingest_sharded = partial(
     jax.jit,
     static_argnames=("mesh", "axis_name", "node_capacity", "shard_cfg",
-                     "bias_scale", "placement"),
+                     "bias_scale", "placement", "table"),
     donate_argnums=(0,))(_ingest_sharded_impl)
 
 # Non-donating twin for the sharded serving snapshot double-buffer
@@ -522,7 +533,7 @@ ingest_sharded = partial(
 ingest_sharded_nodonate = partial(
     jax.jit,
     static_argnames=("mesh", "axis_name", "node_capacity", "shard_cfg",
-                     "bias_scale", "placement"))(_ingest_sharded_impl)
+                     "bias_scale", "placement", "table"))(_ingest_sharded_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -538,27 +549,24 @@ def _check_supported(wcfg: WalkConfig, scfg: SamplerConfig, *,
     ``lanes=True`` is the serving lane walker, where start placement is
     owner-computable per lane: explicit start nodes, or start edges
     resolved from the replicated ts-view (DESIGN.md §13).
+
+    The start-mode checks are sharding-specific and live here; every
+    sampler-capability refusal (mode, node2vec, bias='table') delegates
+    to the engine's single chokepoint, ``walk_engine.check_capabilities``
+    with ``sharded=True`` — one matrix, one set of messages.
     """
     if lanes:
         if wcfg.start_mode not in ("nodes", "edges"):
             raise ValueError(
                 "sharded lane serving supports start_mode 'nodes'|'edges' "
                 f"(got {wcfg.start_mode!r})")
-        if scfg.mode != "index":
-            raise ValueError(
-                "sharded lane serving requires SamplerConfig.mode='index' "
-                "(per-lane dispatch over the closed-form inverse CDFs; got "
-                f"mode={scfg.mode!r})")
     elif wcfg.start_mode != "all_nodes":
         raise ValueError(
             "sharded streaming walks require start_mode='all_nodes' (start "
             "placement must be owner-computable without global state; got "
             f"{wcfg.start_mode!r})")
-    if scfg.node2vec_p != 1.0 or scfg.node2vec_q != 1.0:
-        raise ValueError(
-            "sharded streaming walks do not support node2vec second-order "
-            "bias (the β probe needs the previous node's adjacency, which "
-            "lives on a different shard)")
+    check_capabilities(scfg, "grouped",
+                       LaneFeatures() if lanes else None, sharded=True)
 
 
 @partial(jax.jit,

@@ -141,6 +141,118 @@ def fused_step_ref(ns_ts, ns_dst, pexp, plin, a, b, time, code, u, tbase,
             jnp.where(has, ns_ts[k], 0))
 
 
+def alias_pick_ref(weights: jax.Array, a, c, b, u, *, radix: int,
+                   degree_cap: int):
+    """Brute-force oracle for ``core.alias.alias_pick`` (DESIGN.md §17).
+
+    ``weights`` float32[E]: raw per-position weights over the ns view
+    (what ``alias.region_weights`` produces). O(W·E) dense per lane:
+
+    * **tabled branch** (``c == a`` and ``0 < deg <= degree_cap``):
+      recompute the largest-remainder masses densely and inverse-CDF the
+      quantized uniform ``⌊u·deg·M⌋`` through the mass prefix. Same *law*
+      as the alias draw — under full enumeration of the ``deg·M``
+      quantized uniforms each outcome appears exactly ``mass_i`` times on
+      both sides — but not the same per-u mapping (the two-stack
+      construction permutes which uniform lands where), so tests compare
+      per-outcome counts, not per-u picks.
+    * **fallback branch**: per-u exact — a dense count below the target
+      over the same full-array weight prefix ``alias_pick`` binary-
+      searches, so every float compares identically.
+
+    Returns (k, tabled): the pick and which branch produced it.
+    """
+    E = weights.shape[0]
+    M = radix
+    pos = jnp.arange(E, dtype=jnp.int32)
+    ptab = jnp.concatenate([jnp.zeros((1,), jnp.float32),
+                            jnp.cumsum(weights)])
+    deg = b - a
+    n = b - c
+    tabled = (c == a) & (deg > 0) & (deg <= degree_cap)
+
+    # --- dense largest-remainder masses, one row per lane ---------------
+    in_reg = (pos[None, :] >= a[:, None]) & (pos[None, :] < b[:, None])
+    w = jnp.where(in_reg, jnp.maximum(weights[None, :], 0.0), 0.0)
+    total_w = jnp.sum(w, axis=1)
+    target = (deg * M).astype(jnp.int32)
+    targetf = target.astype(jnp.float32)
+    q = jnp.where((total_w > 0)[:, None],
+                  w * (targetf / jnp.maximum(total_w, 1e-30))[:, None], 0.0)
+    fl = jnp.minimum(jnp.floor(q).astype(jnp.int32), target[:, None])
+    frac = q - fl.astype(jnp.float32)
+    d = target - jnp.sum(fl, axis=1)
+    order_desc = jnp.argsort(jnp.where(in_reg & (frac > 0), -frac, 2.0),
+                             axis=1, stable=True)
+    rank_desc = jnp.argsort(order_desc, axis=1, stable=True).astype(
+        jnp.int32)
+    add = (rank_desc < d[:, None]) & (frac > 0)
+    order_asc = jnp.argsort(jnp.where(in_reg & (fl >= 1), frac, 2.0),
+                            axis=1, stable=True)
+    rank_asc = jnp.argsort(order_asc, axis=1, stable=True).astype(jnp.int32)
+    sub = (rank_asc < -d[:, None]) & (fl >= 1)
+    m = fl + add.astype(jnp.int32) - sub.astype(jnp.int32)
+    resid = target - jnp.sum(m, axis=1)
+    imax = jnp.argmax(jnp.where(in_reg, m, -1), axis=1)
+    m = m.at[jnp.arange(m.shape[0]), imax].add(resid)
+    uniform = jnp.where(in_reg, M, 0).astype(jnp.int32)
+    m = jnp.where((total_w > 0)[:, None], m, uniform)
+    m = jnp.where(in_reg, m, 0)
+
+    # inverse CDF over the quantized masses
+    kq = jnp.floor(u * targetf).astype(jnp.int32)
+    kq = jnp.clip(kq, 0, jnp.maximum(deg * M - 1, 0))
+    cum = jnp.cumsum(m, axis=1)
+    k_tab = a + jnp.sum(in_reg & (cum <= kq[:, None]), axis=1).astype(
+        jnp.int32)
+
+    # --- fallback: dense count over the shared float prefix -------------
+    total = ptab[b] - ptab[c]
+    tgt = ptab[c] + u * total
+    pes = ptab[1:E + 1]
+    in_sfx = (pos[None, :] >= c[:, None]) & (pos[None, :] < b[:, None])
+    k_w = c + jnp.sum(in_sfx & (pes[None, :] < tgt[:, None]),
+                      axis=1).astype(jnp.int32)
+    k_w = jnp.where(total > 0, k_w, c + index_uniform(u, n))
+
+    k = jnp.where(tabled, k_tab, k_w)
+    return jnp.clip(k, c, jnp.maximum(b - 1, c)), tabled
+
+
+def node2vec_step_ref(ns_src, ns_dst, valid, prev, ks, vs, p, q):
+    """Oracle for the engine's second-order rejection loop (paper §2.5).
+
+    ``ks`` int32[ROUNDS, W] are the per-round first-order proposals (the
+    differential tests produce them through an independent picker fed the
+    same uniform stream), ``vs`` float32[ROUNDS, W] the accept uniforms,
+    ``prev`` int32[W] the previous node (< 0 = no history), ``p``/``q``
+    float32[W] per-lane node2vec parameters. The adjacency probe is the
+    dense O(W·E) ``any(src == prev & dst == cand)`` over ``valid``
+    positions — independent of the engine's O(log E) ranged search.
+    Returns the accepted pick per lane (round-0 proposal when every
+    round rejects), matching the engine's scan bit-for-bit.
+    """
+    beta_max = jnp.maximum(jnp.maximum(1.0 / p, 1.0), 1.0 / q).astype(
+        jnp.float32)
+    rounds = ks.shape[0]
+    k_acc = ks[0]
+    accepted = jnp.zeros(prev.shape, bool)
+    for r in range(rounds):
+        cand = ns_dst[jnp.clip(ks[r], 0, ns_dst.shape[0] - 1)]
+        is_return = cand == prev
+        is_common = jnp.any(valid[None, :] & (ns_src[None, :] ==
+                                              prev[:, None])
+                            & (ns_dst[None, :] == cand[:, None]), axis=1)
+        beta = jnp.where(is_return, 1.0 / p,
+                         jnp.where(is_common, 1.0, 1.0 / q)).astype(
+            jnp.float32)
+        ok = (vs[r] * beta_max <= beta) | (prev < 0)
+        take = ok & ~accepted
+        k_acc = jnp.where(take, ks[r], k_acc)
+        accepted = accepted | ok
+    return k_acc
+
+
 def weight_prefix_ref(dt: jax.Array, valid: jax.Array,
                       scale: float = 1.0) -> jax.Array:
     """Oracle for kernels/weight_prefix.py: fused exp + masked cumsum.

@@ -77,6 +77,9 @@ def pack_queries(queries: Sequence[WalkQuery], num_lanes: int,
     rid = np.zeros(num_lanes, np.int32)
     wid = np.zeros(num_lanes, np.int32)
     active = np.zeros(num_lanes, bool)
+    # second-order lanes: (1, 1) = first-order draw, the padding default
+    n2v_p = np.ones(num_lanes, np.float32)
+    n2v_q = np.ones(num_lanes, np.float32)
 
     slices: List[LaneSlice] = []
     off = 0
@@ -91,6 +94,8 @@ def pack_queries(queries: Sequence[WalkQuery], num_lanes: int,
         rid[sl] = np.int32(q.seed)
         wid[sl] = np.arange(n, dtype=np.int32)
         active[sl] = True
+        n2v_p[sl] = np.float32(q.n2v_p)
+        n2v_q[sl] = np.float32(q.n2v_q)
         slices.append(LaneSlice(offset=off, count=n))
         off += n
 
@@ -102,6 +107,8 @@ def pack_queries(queries: Sequence[WalkQuery], num_lanes: int,
         rid=jnp.asarray(rid),
         wid=jnp.asarray(wid),
         active=jnp.asarray(active),
+        n2v_p=jnp.asarray(n2v_p),
+        n2v_q=jnp.asarray(n2v_q),
     ), slices
 
 

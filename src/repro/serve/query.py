@@ -35,19 +35,34 @@ class WalkQuery:
     """
 
     start_nodes: Tuple[int, ...] = ()
-    bias: str = "exponential"          # uniform | linear | exponential
+    bias: str = "exponential"          # uniform | linear | exponential | table
     max_length: int = 16               # per-walk hop budget (≤ edges emitted)
     seed: int = 0
     start_mode: str = "nodes"          # nodes | edges
     start_bias: str = "uniform"        # edges mode: bias over start edges
     num_walks: int = 0                 # edges mode: lane count
+    # second-order node2vec return/in-out parameters (1.0, 1.0 disables;
+    # any other pair turns on the rejection-sampled second-order draw for
+    # this query's lanes only — co-batched first-order queries are
+    # untouched, the solo/coalesced bit-identity holds either way)
+    n2v_p: float = 1.0
+    n2v_q: float = 1.0
 
     def __post_init__(self):
         if self.bias not in BIAS_CODES:
             raise ValueError(f"unknown bias {self.bias!r} "
                              f"(expected one of {sorted(BIAS_CODES)})")
-        if self.start_bias not in BIAS_CODES:
-            raise ValueError(f"unknown start_bias {self.start_bias!r}")
+        # "table" is a valid hop bias (the service checks it against the
+        # snapshot's tables at submit) but never a start bias: alias
+        # tables cover per-node neighborhood regions, not the global
+        # timestamp view that start-edge draws sample.
+        if self.start_bias == "table" or self.start_bias not in BIAS_CODES:
+            raise ValueError(f"unknown start_bias {self.start_bias!r} "
+                             "(expected 'uniform'|'linear'|'exponential')")
+        if not (self.n2v_p > 0.0 and self.n2v_q > 0.0):
+            raise ValueError(
+                f"node2vec parameters must be positive, got "
+                f"p={self.n2v_p}, q={self.n2v_q}")
         if self.start_mode not in START_MODES:
             raise ValueError(f"unknown start_mode {self.start_mode!r} "
                              f"(expected one of {START_MODES})")
@@ -72,6 +87,11 @@ class WalkQuery:
         """Walk lanes this query occupies in a coalesced batch."""
         return (len(self.start_nodes) if self.start_mode == "nodes"
                 else self.num_walks)
+
+    @property
+    def second_order(self) -> bool:
+        """True when this query's lanes draw under node2vec (p, q)."""
+        return self.n2v_p != 1.0 or self.n2v_q != 1.0
 
 
 @dataclass(frozen=True)

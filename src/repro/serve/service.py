@@ -39,8 +39,14 @@ import jax
 import numpy as np
 
 from repro.configs.base import EngineConfig, ServeConfig, WalkConfig
+from repro.core.alias import spec_from_sampler
 from repro.core.edge_store import make_batch
-from repro.core.walk_engine import LaneParams, generate_walk_lanes
+from repro.core.walk_engine import (
+    LaneFeatures,
+    LaneParams,
+    check_capabilities,
+    generate_walk_lanes,
+)
 from repro.core.window import WindowState, init_window
 from repro.serve.coalescer import (
     bucketize,
@@ -154,12 +160,6 @@ class WalkService:
                  mesh=None, num_shards: int = 0, placement=None,
                  registry: Optional[MetricsRegistry] = None,
                  probes: bool = True):
-        if cfg.sampler.mode != "index":
-            raise ValueError(
-                "serving requires SamplerConfig.mode='index' (per-lane "
-                "dispatch over the closed-form inverse CDFs)")
-        if cfg.sampler.node2vec_p != 1.0 or cfg.sampler.node2vec_q != 1.0:
-            raise ValueError("serving does not support node2vec bias")
         if list(serve_cfg.lane_buckets) != sorted(serve_cfg.lane_buckets) \
                 or list(serve_cfg.length_buckets) != sorted(
                     serve_cfg.length_buckets):
@@ -172,6 +172,20 @@ class WalkService:
         # passes through and serves heterogeneous batches in-kernel.
         self.sched_cfg = (dataclasses.replace(cfg.scheduler, path="grouped")
                          if cfg.scheduler.path == "tiled" else cfg.scheduler)
+        # bias='table' (or an explicit table_weight) opts the snapshot
+        # buffers into alias-table maintenance (core/alias.py, §17)
+        self._table = spec_from_sampler(cfg.sampler)
+        self._rebuilt_seen = 0
+        # every serving dispatch is a per-lane batch, so validate the
+        # config against lane capabilities up front — the single
+        # chokepoint (walk_engine.check_capabilities) refuses mode !=
+        # 'index', config-level node2vec, and sharded table bias here
+        # instead of mid-batch
+        check_capabilities(
+            cfg.sampler, self.sched_cfg.path, LaneFeatures(),
+            sharded=mesh is not None or (num_shards
+                                         or serve_cfg.num_shards) > 0,
+            have_tables=self._table is not None)
         # obs integration (DESIGN.md §16); ``probes=False`` pins the
         # sharded dispatch to the historical uninstrumented program
         self.registry = registry if registry is not None else get_registry()
@@ -197,8 +211,9 @@ class WalkService:
             self.snapshots = SnapshotManager(
                 state if state is not None else init_window(
                     cfg.window.edge_capacity, cfg.window.node_capacity,
-                    int(cfg.window.duration)),
-                cfg.window.node_capacity, registry=self.registry)
+                    int(cfg.window.duration), table=self._table),
+                cfg.window.node_capacity, registry=self.registry,
+                table=self._table)
         # NOT split per call: lane RNG identity lives in (seed, walk, step)
         # folds, and solo/coalesced bit-equality needs a stable base.
         self.base_key = jax.random.PRNGKey(cfg.seed)
@@ -236,6 +251,15 @@ class WalkService:
                                 help="published serving snapshot version")
         if self.sharded:
             self._refresh_exchange_drops()
+        elif self.snapshots.current.tables is not None:
+            # same counter the streaming engine publishes (§17): incremental
+            # maintenance work per advance, against a full-rebuild baseline
+            rebuilt = int(self.snapshots.current.tables.rebuilt)
+            self.registry.inc("alias_nodes_rebuilt_total",
+                              max(0, rebuilt - self._rebuilt_seen),
+                              help="alias-table node rebuilds performed by "
+                                   "incremental window maintenance")
+            self._rebuilt_seen = rebuilt
 
     def _refresh_exchange_drops(self) -> None:
         """Pull the sharded ingest's cumulative exchange-drop counter into
@@ -265,7 +289,19 @@ class WalkService:
         Drops (counted in ``stats``) happen when the fixed-capacity queue
         is full (backpressure) or the query exceeds the largest shape
         bucket. ``strict=True`` raises instead of dropping.
+
+        Table-bias and second-order (node2vec) queries are validated
+        against the service's capabilities here — always a raise, never a
+        drop: unlike backpressure these can never succeed on retry.
         """
+        if query.bias == "table" or query.second_order:
+            check_capabilities(
+                self.cfg.sampler, self.sched_cfg.path,
+                LaneFeatures(table=query.bias == "table",
+                             second_order=query.second_order),
+                sharded=self.sharded,
+                have_tables=(not self.sharded
+                             and self.snapshots.current.tables is not None))
         if self._oversize(query):
             if strict or not self.serve_cfg.drop_oversize:
                 raise ValueError(
@@ -322,12 +358,23 @@ class WalkService:
         self._pending = kept
         return head_key, taken, lanes
 
-    def _dispatch_lanes(self, params: LaneParams, wcfg: WalkConfig):
+    def _dispatch_lanes(self, params: LaneParams, wcfg: WalkConfig,
+                        use_tables: bool = False,
+                        second_order: bool = False):
         """Run one packed lane batch to completion; host (nodes, times,
         lengths). Single-device: ``generate_walk_lanes`` against the
         current snapshot. Sharded: ``serve_lanes_sharded`` against the
         (sharded window, ts-view) pair — psum-reassembled leaves are
-        replicated, so row 0 is the batch result (DESIGN.md §13)."""
+        replicated, so row 0 is the batch result (DESIGN.md §13).
+
+        ``use_tables`` / ``second_order`` flag whether any lane in the
+        batch carries a table bias code / a non-trivial (p, q) pair —
+        submit-time validation guarantees both are False on the sharded
+        path. Passing tables to a batch with no table lanes (or compiling
+        the second-order machinery for an all-first-order batch) would be
+        harmless for correctness — the overlay selects per lane — but
+        keeping the flags per batch pins the common case to the exact
+        historical program."""
         if self.sharded:
             from repro.distributed.streaming_shard import serve_lanes_sharded
             snap = self.snapshots
@@ -351,9 +398,11 @@ class WalkService:
                 self._refresh_exchange_drops()
             return (np.asarray(nodes)[0], np.asarray(times)[0],
                     np.asarray(lengths)[0])
-        res = generate_walk_lanes(self.snapshots.current.index,
-                                  self.base_key, params, wcfg,
-                                  self.cfg.sampler, self.sched_cfg)
+        snap = self.snapshots.current
+        res = generate_walk_lanes(snap.index, self.base_key, params, wcfg,
+                                  self.cfg.sampler, self.sched_cfg,
+                                  tables=snap.tables if use_tables else None,
+                                  second_order=second_order)
         jax.block_until_ready(res.nodes)
         return result_arrays(res)
 
@@ -372,7 +421,10 @@ class WalkService:
         version = self.snapshots.version
         t0 = time.perf_counter()
         with span("dispatch", reg):
-            nodes, times, lengths = self._dispatch_lanes(params, wcfg)
+            nodes, times, lengths = self._dispatch_lanes(
+                params, wcfg,
+                use_tables=any(q.bias == "table" for q in queries),
+                second_order=any(q.second_order for q in queries))
         elapsed = time.perf_counter() - t0
         self.stats.sample_s.append(elapsed)
         self.stats.busy_s += elapsed
@@ -438,4 +490,8 @@ class WalkService:
         wcfg = WalkConfig(num_walks=query.num_lanes,
                           max_length=query.max_length,
                           start_mode=query.start_mode)
-        return slice_result(*self._dispatch_lanes(params, wcfg), sl, query)
+        return slice_result(
+            *self._dispatch_lanes(params, wcfg,
+                                  use_tables=query.bias == "table",
+                                  second_order=query.second_order),
+            sl, query)

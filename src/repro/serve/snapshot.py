@@ -51,12 +51,23 @@ from repro.obs.registry import MetricsRegistry, get_registry
 
 
 class SnapshotManager:
-    """Double-buffered ``WindowState`` for the serving layer."""
+    """Double-buffered ``WindowState`` for the serving layer.
+
+    ``table`` (a ``core.alias.TableSpec``) opts the buffer into alias-
+    table maintenance: every ``begin_ingest`` rebuilds only the nodes
+    whose neighborhood region changed (DESIGN.md §17), so the published
+    snapshot always carries tables consistent with its window and
+    table-bias lane batches can draw O(1) against ``current.tables``.
+    The spec must be fixed for the life of the manager — incremental
+    maintenance is only valid against tables built under the same spec.
+    """
 
     def __init__(self, state: WindowState, node_capacity: int,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 table=None):
         self.current = state
         self.node_capacity = node_capacity
+        self.table = table
         self.registry = registry if registry is not None else get_registry()
         self.version = 0          # bumped at every publish
         self._next: Optional[WindowState] = None
@@ -70,7 +81,8 @@ class SnapshotManager:
         if self._next is not None:
             raise RuntimeError("an ingest is already in flight; publish() "
                                "or discard() it first")
-        self._next = ingest_nodonate(self.current, batch, self.node_capacity)
+        self._next = ingest_nodonate(self.current, batch, self.node_capacity,
+                                     table=self.table)
 
     def publish(self) -> WindowState:
         """Wait for the in-flight ingest and swap it in as ``current``."""

@@ -1,0 +1,340 @@
+"""Alias/radix bias factorization: exact laws, oracle equivalence,
+incremental maintenance (DESIGN.md §17).
+
+Three layers of evidence, strongest first:
+
+* **exact enumeration** — for every neighborhood size 1..8 and random
+  weights, enumerating *all* ``deg·M`` quantized uniforms must hit each
+  outcome exactly ``mass_i`` times, and the masses must be the
+  largest-remainder apportionment of the weights. No tolerance anywhere:
+  a quantized uniform sits at least half a quantile from every bucket
+  boundary, while the float path error is orders of magnitude smaller.
+* **oracle equivalence** — ``alias_pick`` against the dense O(W·E)
+  ``kernels.ref.alias_pick_ref``: law-identical per-outcome counts on the
+  tabled branch, per-u identical picks on the exact-fallback branch.
+* **incremental == scratch** — property-tested over streamed ingest
+  batches with eviction churn: the incrementally maintained tables are
+  leaf-identical to a from-scratch build after every advance.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core.alias import (
+    AliasTables,
+    TableSpec,
+    WEIGHT_FNS,
+    alias_pick,
+    build_tables,
+    quantize_row,
+    region_weights,
+    row_masses,
+    spec_from_sampler,
+    vose_row,
+    weight_exponential,
+    weight_linear,
+    weight_uniform,
+)
+from repro.core.edge_store import make_batch
+from repro.core.walk_engine import generate_walks
+from repro.core.window import ingest_nodonate, init_window
+from repro.kernels.ref import alias_pick_ref
+from tests.test_samplers import chi2_crit
+
+M = 64           # small radix: full enumeration stays cheap
+R_CAP = 8
+
+
+def _lr_masses(w, deg, radix):
+    """Independent numpy largest-remainder apportionment (float64)."""
+    w = np.maximum(np.asarray(w[:deg], np.float64), 0.0)
+    target = deg * radix
+    if deg == 0:
+        return np.zeros(0, np.int64)
+    if w.sum() <= 0:
+        return np.full(deg, radix, np.int64)
+    q = w / w.sum() * target
+    fl = np.floor(q).astype(np.int64)
+    d = target - fl.sum()
+    order = np.lexsort((np.arange(deg), -(q - fl)))  # desc frac, index ties
+    m = fl.copy()
+    for i in order[:d]:
+        m[i] += 1
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Row level: quantization + Vose construction, exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("deg", list(range(1, R_CAP + 1)))
+def test_row_exact_enumeration(deg):
+    """All deg·M quantized uniforms hit outcome i exactly mass_i times,
+    and the masses are the largest-remainder apportionment."""
+    rng = np.random.default_rng(deg)
+    w = np.zeros(R_CAP, np.float32)
+    w[:deg] = rng.uniform(0.1, 10.0, deg).astype(np.float32)
+    if deg >= 3:
+        w[1] = 0.0          # a zero-weight entry must be unreachable
+
+    masses = np.asarray(quantize_row(jnp.asarray(w), jnp.asarray(deg), M))
+    assert masses[:deg].sum() == deg * M
+    assert (masses[deg:] == 0).all()
+    if deg >= 3:
+        assert masses[1] == 0
+    # float32 row agrees with the float64 reference apportionment
+    np.testing.assert_array_equal(masses[:deg], _lr_masses(w, deg, M))
+
+    thresh, partner = vose_row(jnp.asarray(masses), jnp.asarray(deg), M)
+    th, pa = np.asarray(thresh), np.asarray(partner)
+    assert ((pa[:deg] >= 0) & (pa[:deg] < deg)).all()
+    assert ((th[:deg] >= 0) & (th[:deg] <= M)).all()
+    # mass-recovery identity
+    np.testing.assert_array_equal(
+        np.asarray(row_masses(thresh, partner, jnp.asarray(deg), M))[:deg],
+        masses[:deg])
+
+    # full enumeration through the draw rule itself
+    kq = np.arange(deg * M)
+    j = kq // M
+    r = kq - j * M
+    outcome = np.where(r < th[j], j, pa[j])
+    counts = np.bincount(outcome, minlength=deg)[:deg]
+    np.testing.assert_array_equal(counts, masses[:deg])
+
+
+def test_row_degenerates():
+    # single neighbor: every uniform lands on it
+    m1 = np.asarray(quantize_row(jnp.asarray([3.0, 0, 0, 0], jnp.float32),
+                                 jnp.asarray(1), M))
+    np.testing.assert_array_equal(m1, [M, 0, 0, 0])
+    th, pa = map(np.asarray, vose_row(jnp.asarray(m1), jnp.asarray(1), M))
+    assert th[0] == M and pa[0] == 0
+    # all-zero weights: uniform fallback masses
+    mz = np.asarray(quantize_row(jnp.zeros(4, jnp.float32),
+                                 jnp.asarray(3), M))
+    np.testing.assert_array_equal(mz, [M, M, M, 0])
+    # empty region: all-zero masses, sentinel thresholds
+    m0 = np.asarray(quantize_row(jnp.ones(4, jnp.float32), jnp.asarray(0), M))
+    np.testing.assert_array_equal(m0, 0)
+    th0, _ = map(np.asarray, vose_row(jnp.asarray(m0), jnp.asarray(0), M))
+    assert (th0 == -1).all()
+
+
+def test_table_spec_validation():
+    with pytest.raises(ValueError, match="power of two"):
+        TableSpec(radix=48)
+    with pytest.raises(ValueError, match="degree_cap"):
+        TableSpec(degree_cap=0)
+    with pytest.raises(ValueError, match="2\\^23"):
+        TableSpec(radix=4096, degree_cap=1 << 13)
+    spec = spec_from_sampler(SamplerConfig(mode="index", bias="table",
+                                           table_weight="linear"))
+    assert spec is not None and spec.weight is weight_linear
+    assert spec_from_sampler(SamplerConfig(mode="index")) is None
+
+
+# ---------------------------------------------------------------------------
+# Window level: alias_pick law + oracle equivalence
+# ---------------------------------------------------------------------------
+
+
+def _window_with(src, dst, ts, spec, ec=256, nc=32):
+    state = init_window(ec, nc, 10**6, table=spec)
+    return ingest_nodonate(state, make_batch(src, dst, ts, capacity=ec), nc,
+                           table=spec)
+
+
+def _pick_weight(ts, tbase, tref):
+    return (ts % 7 + 1).astype(jnp.float32)
+
+
+def test_window_alias_law_exact_and_oracle_match():
+    """Draws over a real window: enumeration of every quantized uniform is
+    law-exact vs normalized weights, and matches alias_pick_ref's law."""
+    spec = TableSpec(weight=_pick_weight, radix=M, degree_cap=R_CAP)
+    # node 3 with 5 edges, consecutive timestamps
+    src = [3] * 5 + [7] * 2
+    dst = [4, 5, 6, 7, 8, 1, 2]
+    ts = [10, 11, 12, 13, 14, 10, 11]
+    state = _window_with(src, dst, ts, spec)
+    idx, tables = state.index, state.tables
+    a0 = int(idx.node_starts[3])
+    deg = int(idx.node_starts[4]) - a0
+    assert deg == 5
+
+    n_u = deg * M
+    u = (np.arange(n_u) + 0.5) / n_u
+    W = n_u
+    a = jnp.full((W,), a0, jnp.int32)
+    b = jnp.full((W,), a0 + deg, jnp.int32)
+    k = np.asarray(alias_pick(tables, a, a, b, jnp.asarray(u, jnp.float32),
+                              radix=M, degree_cap=R_CAP))
+    counts = np.bincount(k - a0, minlength=deg)[:deg]
+
+    w = np.asarray(region_weights(idx, spec))[a0:a0 + deg]
+    np.testing.assert_array_equal(counts, _lr_masses(w, deg, M))
+
+    # oracle: same per-outcome law on the tabled branch
+    weights = region_weights(idx, spec)
+    k_ref, tabled = alias_pick_ref(weights, a, a, b,
+                                   jnp.asarray(u, jnp.float32),
+                                   radix=M, degree_cap=R_CAP)
+    assert bool(jnp.all(tabled))
+    ref_counts = np.bincount(np.asarray(k_ref) - a0, minlength=deg)[:deg]
+    np.testing.assert_array_equal(counts, ref_counts)
+
+
+def test_fallback_matches_oracle_per_u():
+    """Suffix draws (c > a) use the exact float fallback: per-u identical
+    to the dense oracle, not just law-identical."""
+    spec = TableSpec(weight=_pick_weight, radix=M, degree_cap=R_CAP)
+    src = [3] * 6
+    dst = [4, 5, 6, 7, 8, 9]
+    ts = [10, 11, 12, 13, 14, 15]
+    state = _window_with(src, dst, ts, spec)
+    idx, tables = state.index, state.tables
+    a0 = int(idx.node_starts[3])
+
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.uniform(0, 1, 512), jnp.float32)
+    W = u.shape[0]
+    a = jnp.full((W,), a0, jnp.int32)
+    c = jnp.full((W,), a0 + 2, jnp.int32)   # temporal cutoff dropped 2
+    b = jnp.full((W,), a0 + 6, jnp.int32)
+    k = alias_pick(tables, a, c, b, u, radix=M, degree_cap=R_CAP)
+    weights = region_weights(idx, spec)
+    k_ref, tabled = alias_pick_ref(weights, a, c, b, u,
+                                   radix=M, degree_cap=R_CAP)
+    assert not bool(jnp.any(tabled))
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(k_ref))
+
+    # oversize region (> degree_cap) must also take the exact fallback
+    k2, tab2 = alias_pick_ref(weights, a, a, b, u, radix=M, degree_cap=3)
+    k3 = alias_pick(tables, a, a, b, u, radix=M, degree_cap=3)
+    assert not bool(jnp.any(tab2))
+    np.testing.assert_array_equal(np.asarray(k3), np.asarray(k2))
+
+
+@pytest.mark.statistical
+@pytest.mark.parametrize("bias", ["uniform", "linear", "exponential"])
+def test_closed_form_reproduction(bias):
+    """Table-bias with the three closed-form weight functions reproduces
+    the corresponding sampler laws (chi-square, tests/test_samplers gate).
+
+    Consecutive integer timestamps make weight_linear == the position
+    weights (i+1) and weight_exponential ∝ e^i, i.e. exactly the laws of
+    ``index_linear`` / ``index_exponential``.
+    """
+    deg = 6
+    spec = TableSpec(weight=WEIGHT_FNS[bias], radix=4096, degree_cap=64)
+    src = [2] * deg
+    dst = list(range(3, 3 + deg))
+    ts = list(range(100, 100 + deg))
+    state = _window_with(src, dst, ts, spec)
+    idx, tables = state.index, state.tables
+    a0 = int(idx.node_starts[2])
+
+    n = 60_000
+    u = jax.random.uniform(jax.random.PRNGKey(9), (n,))
+    a = jnp.full((n,), a0, jnp.int32)
+    b = jnp.full((n,), a0 + deg, jnp.int32)
+    k = np.asarray(alias_pick(tables, a, a, b, u, radix=4096, degree_cap=64))
+    counts = np.bincount(k - a0, minlength=deg)[:deg]
+
+    i = np.arange(deg, dtype=np.float64)
+    law = {"uniform": np.full(deg, 1.0 / deg),
+           "linear": (i + 1) / (i + 1).sum(),
+           "exponential": np.exp(i - deg) / np.exp(i - deg).sum()}[bias]
+    exp_counts = law * n
+    mask = exp_counts > 5
+    chi2 = np.sum((counts[mask] - exp_counts[mask]) ** 2 / exp_counts[mask])
+    assert chi2 < chi2_crit(max(int(mask.sum()) - 1, 1)), chi2
+
+
+# ---------------------------------------------------------------------------
+# Incremental maintenance == from-scratch build
+# ---------------------------------------------------------------------------
+
+
+def _assert_tables_equal(inc: AliasTables, scr: AliasTables):
+    np.testing.assert_array_equal(np.asarray(inc.thresh),
+                                  np.asarray(scr.thresh))
+    np.testing.assert_array_equal(np.asarray(inc.partner),
+                                  np.asarray(scr.partner))
+    np.testing.assert_array_equal(np.asarray(inc.ptab), np.asarray(scr.ptab))
+
+
+def _stream_check(seed, n_batches, batch_n, ec, nc, duration, spec):
+    state = init_window(ec, nc, duration, table=spec)
+    rng = np.random.default_rng(seed)
+    t = 0
+    for _ in range(n_batches):
+        n = int(rng.integers(1, batch_n + 1))
+        src = rng.integers(0, nc, n).astype(np.int32)
+        dst = rng.integers(0, nc, n).astype(np.int32)
+        ts = np.sort(rng.integers(t, t + duration // 2, n)).astype(np.int32)
+        t += int(rng.integers(1, duration // 2))
+        state = ingest_nodonate(state, make_batch(src, dst, ts, capacity=ec),
+                                nc, table=spec)
+        _assert_tables_equal(state.tables, build_tables(state.index, spec))
+    assert int(state.tables.rebuilt) > 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_incremental_equals_scratch_stream(seed):
+    """Leaf-identical tables after every advance of a random edge stream
+    (eviction + overflow churn included: tight capacities, small window)."""
+    spec = TableSpec(weight=_pick_weight, radix=M, degree_cap=R_CAP,
+                     chunk=16)
+    _stream_check(seed, n_batches=6, batch_n=48, ec=128, nc=24,
+                  duration=300, spec=spec)
+
+
+@pytest.mark.slow
+def test_incremental_equals_scratch_soak():
+    """Capacity-scale soak: sustained eviction churn over a long stream."""
+    spec = TableSpec(weight=weight_exponential, radix=256, degree_cap=32)
+    _stream_check(7, n_batches=25, batch_n=700, ec=2048, nc=128,
+                  duration=2000, spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: bias='table' through generate_walks
+# ---------------------------------------------------------------------------
+
+
+def test_engine_table_bias_runs_and_matches_law():
+    """bias='table' with weight_uniform draws every neighbor; the walks
+    are valid and visit all of a hub's neighbors."""
+    spec_cfg = SamplerConfig(mode="index", bias="table",
+                             table_weight="uniform", table_radix=M,
+                             table_degree_cap=R_CAP)
+    spec = spec_from_sampler(spec_cfg)
+    deg = 4
+    src = [0] * deg + [1, 2, 3, 4]
+    dst = [1, 2, 3, 4] + [0, 0, 0, 0]
+    ts = [10, 10, 10, 10, 11, 11, 11, 11]
+    state = _window_with(src, dst, ts, spec, ec=64, nc=8)
+    wcfg = WalkConfig(num_walks=256, max_length=4, start_mode="all_nodes")
+    for path in ("fullwalk", "grouped"):
+        res = generate_walks(state.index, jax.random.PRNGKey(0), wcfg,
+                             spec_cfg, SchedulerConfig(path=path),
+                             tables=state.tables)
+        nodes = np.asarray(res.nodes)
+        lens = np.asarray(res.lengths)
+        # every walk that starts on a node with edges makes progress
+        # (start node of walk w is w % nc; nodes 5..7 are isolated)
+        started = np.arange(len(lens)) % 8 < 5
+        assert (lens[started] >= 2).all()
+        # walks starting at the hub reach all four neighbors
+        first_hops = nodes[nodes[:, 0] == 0, 1]
+        assert set(first_hops.tolist()) >= {1, 2, 3, 4}

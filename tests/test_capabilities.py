@@ -1,0 +1,103 @@
+"""The capability matrix: every (path, bias, lane-features, sharded,
+tables) combination either runs or refuses through the single chokepoint
+``walk_engine.check_capabilities`` (DESIGN.md §17).
+
+This used to be four scattered refusal sites (the engine's fused/node2vec
+inline checks, the serving constructor, the sharded walker); they now all
+delegate here, so this sweep is the one place the support matrix is
+pinned. An independent predicate (``_expect_supported``) re-derives what
+*should* run; the test asserts behavior matches for the full product
+space, and that every refusal carries the uniform message prefix.
+"""
+import dataclasses
+import itertools
+
+import pytest
+
+from repro.configs.base import SamplerConfig
+from repro.core.walk_engine import LaneFeatures, check_capabilities
+
+PATHS = ("fullwalk", "grouped", "tiled", "fused")
+BIASES = ("uniform", "linear", "exponential", "table")
+_CAP_PREFIX = "unsupported sampler capability: "
+
+
+def _expect_supported(scfg, path, lanes, sharded, have_tables):
+    """Independent statement of the support matrix."""
+    n2v_cfg = scfg.node2vec_p != 1.0 or scfg.node2vec_q != 1.0
+    if scfg.bias == "table":
+        if scfg.mode != "index" or sharded or not have_tables:
+            return False
+        if path in ("tiled", "fused"):
+            return False
+    if n2v_cfg:
+        if sharded or lanes is not None or path in ("tiled", "fused"):
+            return False
+    if lanes is not None:
+        if scfg.mode != "index" or path == "tiled":
+            return False
+        if lanes.table and (sharded or not have_tables or path == "fused"):
+            return False
+        if lanes.second_order and (sharded or path == "fused"):
+            return False
+    return True
+
+
+def _sweep():
+    lane_opts = (None, LaneFeatures(), LaneFeatures(table=True),
+                 LaneFeatures(second_order=True),
+                 LaneFeatures(table=True, second_order=True))
+    for mode in ("index", "weight"):
+        for bias, path, lanes, sharded, have_tables in itertools.product(
+                BIASES, PATHS, lane_opts, (False, True), (False, True)):
+            for n2v in (1.0, 2.0):
+                yield (SamplerConfig(mode=mode, bias=bias, node2vec_p=n2v),
+                       path, lanes, sharded, have_tables)
+
+
+def test_capability_matrix_exhaustive():
+    checked = 0
+    for scfg, path, lanes, sharded, have_tables in _sweep():
+        expect = _expect_supported(scfg, path, lanes, sharded, have_tables)
+        try:
+            check_capabilities(scfg, path, lanes, sharded=sharded,
+                               have_tables=have_tables)
+            ran = True
+            msg = None
+        except ValueError as e:
+            ran = False
+            msg = str(e)
+        combo = (scfg.mode, scfg.bias, scfg.node2vec_p, path, lanes,
+                 sharded, have_tables)
+        assert ran == expect, (combo, msg)
+        if not ran:
+            assert msg.startswith(_CAP_PREFIX), combo
+        checked += 1
+    # the product space really was swept
+    assert checked == 2 * 4 * 4 * 5 * 2 * 2 * 2
+
+
+def test_unknown_bias_refused():
+    with pytest.raises(ValueError, match="unknown bias"):
+        check_capabilities(SamplerConfig(mode="index", bias="nope"),
+                           "grouped")
+    with pytest.raises(ValueError, match="start-edge bias"):
+        check_capabilities(
+            SamplerConfig(mode="index", start_bias="table"), "grouped")
+
+
+def test_pinned_messages():
+    """Substrings downstream callers and older tests grep for."""
+    with pytest.raises(ValueError, match="fused"):
+        check_capabilities(SamplerConfig(mode="index", node2vec_p=2.0),
+                           "fused")
+    with pytest.raises(ValueError, match="node2vec"):
+        check_capabilities(SamplerConfig(mode="index", node2vec_p=2.0),
+                           "grouped", sharded=True)
+    with pytest.raises(ValueError, match="index"):
+        check_capabilities(SamplerConfig(mode="weight"), "grouped",
+                           LaneFeatures())
+    with pytest.raises(ValueError, match="table"):
+        check_capabilities(
+            SamplerConfig(mode="index", bias="table"), "grouped",
+            have_tables=False)

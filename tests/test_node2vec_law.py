@@ -1,0 +1,196 @@
+"""Second-order (node2vec) sampling law + oracle differentials (paper §2.5).
+
+The engine implements temporal node2vec as N2V_ROUNDS rounds of rejection
+over the first-order proposal stream, falling back to the round-0 proposal
+when every round rejects. That procedure has a *closed-form* law: with
+first-order proposal probabilities π_w, acceptance β_w/β_max and
+A = Σ_w π_w·β_w/β_max,
+
+    P(w) = α_w·Σ_{r=0}^{R-1}(1-A)^r + π_w·(1-β_w/β_max)·(1-A)^{R-1}
+
+where α_w = π_w·β_w/β_max. The first term is "accepted in some round", the
+second is "all R rounds rejected and the round-0 proposal was w" (round 0's
+rejection is correlated with the fallback, hence the exponent R-1).
+
+Evidence layers:
+
+* **exact law** — a small graph whose hop-2 neighborhood has one return,
+  one common and one far candidate; sampled frequencies on both the
+  fullwalk and grouped paths must match the closed form (chi-square gate
+  from tests/test_samplers), and the two paths must agree bit-for-bit.
+* **oracle differential** — the per-lane rejection scan
+  (``walk_engine._lane_second_order``) against the dense O(W·E)
+  ``kernels.ref.node2vec_step_ref``, fed the same uniform streams through
+  an independent numpy proposal picker: bitwise-equal accepted picks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SamplerConfig, SchedulerConfig, WalkConfig
+from repro.core.edge_store import make_batch
+from repro.core.samplers import BIAS_UNIFORM, node2vec_max_beta
+from repro.core.temporal_index import node_range, temporal_cutoff
+from repro.core.walk_engine import N2V_ROUNDS, _lane_second_order, generate_walks
+from repro.core.window import ingest_nodonate, init_window
+from repro.kernels.ref import node2vec_step_ref
+from tests.test_samplers import chi2_crit
+
+
+def _window(src, dst, ts, ec=128, nc=16):
+    state = init_window(ec, nc, 10**6)
+    return ingest_nodonate(state, make_batch(src, dst, ts, capacity=ec), nc)
+
+
+def _rejection_law(pi, beta, p, q):
+    """Closed-form law of the R-round rejection sampler (module docstring)."""
+    beta_max = node2vec_max_beta(p, q)
+    alpha = pi * beta / beta_max
+    A = alpha.sum()
+    r = 1.0 - A
+    return alpha * (1.0 - r**N2V_ROUNDS) / A + pi * (1.0 - beta / beta_max) \
+        * r ** (N2V_ROUNDS - 1)
+
+
+@pytest.mark.statistical
+def test_second_order_law_exact():
+    """Hop-2 frequencies from a controlled graph match the closed-form
+    rejection law on both walk paths, and the paths agree bitwise.
+
+    Node 1's hop-2 neighborhood (prev = 0) has exactly one candidate per
+    β class: node 0 (return, β = 1/p), node 2 (adjacent to prev via the
+    0→2 edge, β = 1), node 3 (far, β = 1/q).
+    """
+    src = [0, 0, 1, 1, 1]
+    dst = [1, 2, 0, 2, 3]
+    ts = [10, 5, 11, 12, 13]
+    state = _window(src, dst, ts, ec=64, nc=4)
+
+    p, q = 0.5, 2.0
+    scfg = SamplerConfig(mode="index", bias="uniform",
+                         node2vec_p=p, node2vec_q=q)
+    wcfg = WalkConfig(num_walks=32_768, max_length=3, start_mode="all_nodes")
+
+    per_path = {}
+    for path in ("fullwalk", "grouped"):
+        res = generate_walks(state.index, jax.random.PRNGKey(11), wcfg,
+                             scfg, SchedulerConfig(path=path))
+        per_path[path] = (np.asarray(res.nodes), np.asarray(res.lengths))
+    # layout invariance holds for the second-order path too
+    np.testing.assert_array_equal(per_path["fullwalk"][0],
+                                  per_path["grouped"][0])
+    np.testing.assert_array_equal(per_path["fullwalk"][1],
+                                  per_path["grouped"][1])
+
+    nodes, lens = per_path["fullwalk"]
+    cond = (nodes[:, 0] == 0) & (lens >= 3) & (nodes[:, 1] == 1)
+    hops = nodes[cond, 2]
+    n_cond = int(cond.sum())
+    assert n_cond > 2000
+    # only the three temporal candidates of node 1 after ts 10 can appear
+    assert set(np.unique(hops).tolist()) <= {0, 2, 3}
+
+    cands = np.array([0, 2, 3])
+    beta = np.array([1.0 / p, 1.0, 1.0 / q])
+    law = _rejection_law(np.full(3, 1.0 / 3.0), beta, p, q)
+    np.testing.assert_allclose(law.sum(), 1.0, atol=1e-12)
+
+    counts = np.array([(hops == w).sum() for w in cands], np.float64)
+    exp_counts = law * n_cond
+    assert (exp_counts > 5).all()
+    chi2 = np.sum((counts - exp_counts) ** 2 / exp_counts)
+    assert chi2 < chi2_crit(len(cands) - 1), (chi2, counts, exp_counts)
+
+
+@pytest.mark.statistical
+def test_second_order_law_no_history_is_first_order():
+    """Hops with no previous node accept unconditionally (round 0), so the
+    first hop follows the plain first-order law even under (p, q) != 1."""
+    deg = 4
+    src = [0] * deg
+    dst = [1, 2, 3, 4]
+    ts = [10, 11, 12, 13]
+    state = _window(src, dst, ts, ec=64, nc=8)
+    scfg = SamplerConfig(mode="index", bias="uniform",
+                         node2vec_p=0.25, node2vec_q=4.0)
+    wcfg = WalkConfig(num_walks=65_536, max_length=2, start_mode="all_nodes")
+    res = generate_walks(state.index, jax.random.PRNGKey(12), wcfg, scfg,
+                         SchedulerConfig(path="fullwalk"))
+    nodes = np.asarray(res.nodes)
+    hops = nodes[nodes[:, 0] == 0, 1]
+    counts = np.array([(hops == w).sum() for w in (1, 2, 3, 4)], np.float64)
+    exp_counts = np.full(deg, len(hops) / deg)
+    chi2 = np.sum((counts - exp_counts) ** 2 / exp_counts)
+    assert chi2 < chi2_crit(deg - 1), (chi2, counts)
+
+
+# ---------------------------------------------------------------------------
+# Per-u differential: engine rejection scan vs kernels.ref oracle
+# ---------------------------------------------------------------------------
+
+
+def _np_index_uniform(u, n):
+    """Bitwise replica of samplers.index_uniform in numpy float32."""
+    i = np.floor(u.astype(np.float32) * n.astype(np.float32)).astype(np.int32)
+    return np.clip(i, 0, np.maximum(n - 1, 0))
+
+
+def test_lane_second_order_matches_oracle_per_u():
+    """The per-lane rejection scan is bitwise-equal to the dense oracle
+    when both consume the same proposal/accept uniform streams, across
+    mixed (p, q) lanes, no-history lanes, and empty neighborhoods; lanes
+    with p == q == 1 pass the plain first-order pick through untouched."""
+    nc, ec, W = 16, 128, 256
+    rng = np.random.default_rng(42)
+    n_e = 100
+    src = rng.integers(0, nc, n_e).astype(np.int32)
+    dst = rng.integers(0, nc, n_e).astype(np.int32)
+    ts = np.sort(rng.integers(0, 1000, n_e)).astype(np.int32)
+    state = _window(src.tolist(), dst.tolist(), ts.tolist(), ec=ec, nc=nc)
+    index = state.index
+
+    cur = jnp.asarray(rng.integers(0, nc, W), jnp.int32)
+    cur_t = jnp.asarray(rng.integers(0, 1000, W), jnp.int32)
+    a, b = node_range(index, cur)
+    c = temporal_cutoff(index, a, b, cur_t)
+
+    prev = rng.integers(0, nc, W).astype(np.int32)
+    prev[rng.uniform(size=W) < 0.3] = -1        # no-history lanes
+    pq_menu = np.array([[1.0, 1.0], [0.5, 2.0], [4.0, 0.25], [1.0, 3.0]],
+                       np.float32)
+    pq = pq_menu[rng.integers(0, len(pq_menu), W)]
+    p, q = jnp.asarray(pq[:, 0]), jnp.asarray(pq[:, 1])
+
+    us2 = jnp.asarray(rng.uniform(size=(N2V_ROUNDS, 2, W)), jnp.float32)
+    u_plain = jnp.asarray(rng.uniform(size=W), jnp.float32)
+
+    lane_bias = jnp.zeros((W,), jnp.int32) + BIAS_UNIFORM
+    scfg = SamplerConfig(mode="index", bias="uniform")
+    n = np.asarray(b - c)
+    k_plain = jnp.asarray(np.asarray(c) +
+                          _np_index_uniform(np.asarray(u_plain), n))
+    k_eng = np.asarray(_lane_second_order(
+        index, scfg, None, lane_bias, a, c, b, jnp.asarray(prev), k_plain,
+        (p, q, us2)))
+
+    # independent numpy proposal picker over the same uniform stream
+    ks = np.stack([np.asarray(c) +
+                   _np_index_uniform(np.asarray(us2[r, 0]), n)
+                   for r in range(N2V_ROUNDS)])
+    vs = np.asarray(us2[:, 1])
+    valid = jnp.arange(ec, dtype=jnp.int32) < index.num_edges
+    k_ref = np.asarray(node2vec_step_ref(
+        index.ns_src, index.ns_dst, valid, jnp.asarray(prev),
+        jnp.asarray(ks), jnp.asarray(vs), p, q))
+
+    is_n2v = (pq[:, 0] != 1.0) | (pq[:, 1] != 1.0)
+    assert is_n2v.any() and (~is_n2v).any()
+    np.testing.assert_array_equal(k_eng[is_n2v], k_ref[is_n2v])
+    # plain lanes keep the first-order pick bit-for-bit
+    np.testing.assert_array_equal(k_eng[~is_n2v], np.asarray(k_plain)[~is_n2v])
+
+    # no-history n2v lanes accept round 0 unconditionally
+    nohist = is_n2v & (prev < 0)
+    assert nohist.any()
+    np.testing.assert_array_equal(k_eng[nohist], ks[0][nohist])

@@ -414,3 +414,83 @@ def test_query_validation():
         WalkQuery(start_nodes=(1 << 31,))
     assert WalkQuery(start_nodes=(1, 2)).num_lanes == 2
     assert WalkQuery(start_mode="edges", num_walks=5).num_lanes == 5
+
+
+# ---------------------------------------------------------------------------
+# Alias-table and second-order (node2vec) query lanes (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+
+def _loaded_table_service():
+    """Service whose window carries alias tables (table_weight set) but
+    whose config bias stays a closed form — queries opt into the table."""
+    if "tsvc" not in _SERVICE_CACHE:
+        g, _ = _loaded_service()
+        cfg = dataclasses.replace(
+            _engine_cfg(),
+            sampler=SamplerConfig(mode="index", table_weight="exponential"))
+        tsvc = WalkService(cfg, _serve_cfg())
+        for bs, bd, bt in chronological_batches(g, 3):
+            tsvc.ingest(bs, bd, bt)
+        _SERVICE_CACHE["tsvc"] = tsvc
+    return _SERVICE_CACHE["svc"][0], _SERVICE_CACHE["tsvc"]
+
+
+def test_table_and_node2vec_mixed_equivalence():
+    """Acceptance: coalesced lanes with table-bias and node2vec codes are
+    bit-identical to solo runs, mixed with plain closed-form queries."""
+    _, tsvc = _loaded_table_service()
+    queries = [
+        WalkQuery(start_nodes=(2, 31, 63), bias="table", max_length=5,
+                  seed=301),
+        WalkQuery(start_nodes=(4, 40), bias="uniform", n2v_p=0.5,
+                  n2v_q=2.0, max_length=6, seed=302),
+        WalkQuery(start_nodes=(5, 50, 77), bias="table", n2v_p=2.0,
+                  n2v_q=0.25, max_length=4, seed=303),
+        WalkQuery(num_walks=3, start_mode="edges", bias="table",
+                  start_bias="linear", max_length=5, seed=304),
+        WalkQuery(start_nodes=(8, 16), bias="linear", max_length=7,
+                  seed=305),
+    ]
+    _assert_solo_equals_coalesced(tsvc, queries)
+
+
+def test_plain_queries_unaffected_by_tables():
+    """Queries not coded table/second-order are bit-identical between a
+    table-carrying service and a plain one over the same stream."""
+    _, svc = _loaded_service()
+    _, tsvc = _loaded_table_service()
+    for q in (WalkQuery(start_nodes=(3, 33, 93), bias="exponential",
+                        max_length=6, seed=400),
+              WalkQuery(num_walks=4, start_mode="edges", bias="uniform",
+                        start_bias="exponential", max_length=5, seed=401)):
+        n0, t0, l0 = svc.run_query_solo(q)
+        n1, t1, l1 = tsvc.run_query_solo(q)
+        assert np.array_equal(n0, n1) and np.array_equal(t0, t1)
+        assert np.array_equal(l0, l1)
+
+
+def test_submit_refuses_table_queries_without_tables():
+    """A service whose window has no alias tables refuses table-coded
+    queries at submit time through the capability chokepoint."""
+    _, svc = _loaded_service()
+    with pytest.raises(ValueError, match="table"):
+        svc.submit(WalkQuery(start_nodes=(1,), bias="table", max_length=4),
+                   strict=True)
+    # second-order queries need no tables; grouped serving accepts them
+    t = svc.submit(WalkQuery(start_nodes=(1,), n2v_p=2.0, max_length=4),
+                   strict=True)
+    while svc.pending_count:
+        svc.step()
+    assert svc.poll(t) is not None
+
+
+def test_second_order_query_validation():
+    with pytest.raises(ValueError, match="positive"):
+        WalkQuery(start_nodes=(1,), n2v_p=0.0)
+    with pytest.raises(ValueError, match="positive"):
+        WalkQuery(start_nodes=(1,), n2v_q=-1.0)
+    with pytest.raises(ValueError, match="start_bias"):
+        WalkQuery(start_nodes=(1,), start_bias="table")
+    assert WalkQuery(start_nodes=(1,)).second_order is False
+    assert WalkQuery(start_nodes=(1,), n2v_q=2.0).second_order is True
