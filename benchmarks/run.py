@@ -51,12 +51,13 @@ SUITES = [
      "walks/s across all five walk paths (fullwalk / grouped-lexsort / "
      "grouped-bucket / tiled / fused) + fused per-tier launch counts; "
      "--emit-json writes BENCH_fused.json"),
-    ("serving_load", "serving_load", "— (§11, §13)",
-     "open-loop Poisson serving: mixed-bias queries through the "
-     "coalescer; p50/p99 latency + walks/s vs offered load; plus the "
-     "sharded-service drain-throughput sweep vs shard count "
-     "(--shards; needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
-     "for multi-shard rows on CPU)"),
+    ("serving_load", "serving_load", "— (§11, §13, §18)",
+     "serving SLO harness: open-loop Poisson load curves (p50/p99 + "
+     "goodput under deadlines) blocking vs overlapped async runtime, "
+     "closed-loop drain throughput, and the sharded-service sweep vs "
+     "shard count (--shards; needs "
+     "XLA_FLAGS=--xla_force_host_platform_device_count=8 for multi-shard "
+     "rows on CPU); --emit-json writes BENCH_serving.json"),
 ]
 
 

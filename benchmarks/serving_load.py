@@ -1,26 +1,36 @@
-"""Serving-load benchmark: open-loop Poisson arrivals, mixed-bias traffic.
+"""Serving SLO harness: open- and closed-loop load curves, blocking vs
+overlapped runtime, goodput under deadlines (DESIGN.md §11/§18).
 
-No direct paper counterpart — this measures the serving subsystem
-(DESIGN.md §11) the ROADMAP's "heavy traffic" north star needs: many
-tenants submitting small heterogeneous ``WalkQuery``s, coalesced into
-fixed-shape batches.
+No direct paper counterpart — this measures the serving subsystem the
+ROADMAP's "heavy traffic" north star needs: many tenants submitting
+small heterogeneous ``WalkQuery``s, coalesced into fixed-shape batches.
 
-**Open-loop** means arrivals follow a Poisson process at the offered rate
-regardless of completions (a closed loop would throttle arrivals to the
-service's pace and hide queueing delay — the coordinated-omission trap).
-Per offered load this reports p50/p99 submit→complete latency, walks/s,
-drop counts (backpressure + oversize), and lane occupancy (coalescing
-efficiency: live lanes over dispatched lanes).
+Three sweeps, all emitted as CSV rows and (with ``--emit-json``) folded
+into a schema-validated ``BENCH_serving.json``:
 
-A second sweep (``run_sharded`` / ``--shards``) drives the same mixed
-workload through the node-partitioned service (DESIGN.md §13) at every
-shard count the host exposes — drain throughput, latency, and overflow
-drops per shard count. On a CPU-only host, fake devices first:
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+* **Open-loop** load curve — arrivals follow a Poisson process at the
+  offered rate regardless of completions (a closed loop would throttle
+  arrivals to the service's pace and hide queueing delay — the
+  coordinated-omission trap). Every query carries a ``deadline_s``; the
+  curve reports p50/p99 submit→complete latency AND **goodput** (queries
+  completed within deadline, per second) per offered load, for both
+  runtimes: the historical blocking baseline (``step()``,
+  ``max_inflight=1``, synchronous ingest) and the overlapped async
+  runtime (``tick()``/``pump()``, in-flight ring, continuous-batching
+  linger, ingest building while walk batches dispatch). Mid-run window
+  advances are part of the load: both modes ingest the same edge batches
+  at the same offered times.
+* **Closed-loop** drain — submit everything, then drain: pure service
+  throughput without queueing, blocking vs overlapped.
+* **Sharded** drain (``run_sharded`` / ``--shards``) — the same mixed
+  workload through the node-partitioned service (DESIGN.md §13) at every
+  shard count the host exposes. On a CPU-only host, fake devices first:
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
 CPU wall-clock caveats of DESIGN.md §9 apply; the relative shape —
-latency flat until the knee, then queueing blow-up and backpressure
-drops — is the claim, not the absolute numbers.
+latency flat until the knee, then queueing blow-up, deadline evictions,
+and the overlapped runtime sustaining goodput past the blocking knee —
+is the claim, not the absolute numbers.
 """
 from __future__ import annotations
 
@@ -28,7 +38,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks import common
+from benchmarks.common import emit, write_json
 from repro.configs.base import (
     EngineConfig,
     SamplerConfig,
@@ -43,7 +54,8 @@ from repro.serve import ServeStats, WalkQuery, WalkService
 BIASES = ("uniform", "linear", "exponential")
 
 
-def _mixed_workload(rng: np.random.Generator, n: int, nc: int):
+def _mixed_workload(rng: np.random.Generator, n: int, nc: int,
+                    deadline_s=None):
     """Heterogeneous tenants: all three biases, both start modes, varied
     fan-out and length — nothing here shares a compile-time config."""
     out = []
@@ -56,29 +68,129 @@ def _mixed_workload(rng: np.random.Generator, n: int, nc: int):
             out.append(WalkQuery(num_walks=lanes, start_mode="edges",
                                  bias=bias,
                                  start_bias=BIASES[int(rng.integers(3))],
-                                 max_length=max_length, seed=seed))
+                                 max_length=max_length, seed=seed,
+                                 deadline_s=deadline_s))
         else:
             starts = tuple(int(s) for s in rng.integers(0, nc, lanes))
             out.append(WalkQuery(start_nodes=starts, bias=bias,
-                                 max_length=max_length, seed=seed))
+                                 max_length=max_length, seed=seed,
+                                 deadline_s=deadline_s))
     return out
 
 
-def _drive_open_loop(svc: WalkService, queries, arrivals_s):
-    """Submit each query at its Poisson arrival time; serve in between."""
+def _drive_open_loop(svc: WalkService, queries, arrivals_s, overlapped,
+                     ingests=(), publish_lag=3):
+    """Submit each query at its Poisson arrival time; serve in between.
+
+    ``overlapped=False`` is the blocking baseline: ``step()`` per batch,
+    window advances synchronously (begin + publish back-to-back).
+    ``overlapped=True`` drives the async runtime: ``tick()`` keeps the
+    in-flight ring full while an ingest builds in the back buffer, and
+    ``publish()`` lands ``publish_lag`` loop turns later — walk batches
+    launched in between overlap with the device-side ingest.
+
+    ``ingests`` is a list of ``(offered_time_s, (src, dst, ts))`` window
+    advances; both modes get the same schedule. Returns (wall_s,
+    tickets).
+    """
     n = len(queries)
-    i = 0
+    tickets = []
+    i = j = 0
+    publish_in = None              # loop turns until the pending publish
     t0 = time.perf_counter()
-    while i < n or svc.pending_count:
+    while i < n or svc.pending_count or svc.inflight_count:
         now = time.perf_counter() - t0
         while i < n and arrivals_s[i] <= now:
-            svc.submit(queries[i])
+            tickets.append(svc.submit(queries[i]))
             i += 1
-        if svc.pending_count:
+        if (j < len(ingests) and ingests[j][0] <= now
+                and not svc.snapshots.ingest_in_flight):
+            svc.begin_ingest(*ingests[j][1])
+            j += 1
+            if overlapped:
+                publish_in = publish_lag
+            else:
+                svc.publish()
+        if overlapped:
+            before = svc.inflight_count
+            harvested = svc.tick()
+            if publish_in is not None:
+                publish_in -= 1
+                if publish_in <= 0:
+                    svc.publish()
+                    publish_in = None
+            if not harvested and svc.inflight_count == before:
+                # nothing moved: yield the core instead of hot-spinning
+                # tick() — on a CPU host the XLA compute threads need it
+                time.sleep(2e-4)
+        elif svc.pending_count:
             svc.step()
-        elif i < n:
+        if not svc.pending_count and not svc.inflight_count and i < n:
             time.sleep(min(max(arrivals_s[i] - now, 0.0), 5e-4))
-    return time.perf_counter() - t0
+    if svc.snapshots.ingest_in_flight:
+        svc.publish()
+    svc.pump(block=True)
+    return time.perf_counter() - t0, tickets
+
+
+def _goodput(svc, queries, tickets, wall_s):
+    """Fraction-of-deadline accounting: completed-in-time per second."""
+    good = 0
+    for t, q in zip(tickets, queries):
+        if t is None:
+            continue
+        r = svc.poll(t)
+        if r is None:                  # evicted past deadline: not good
+            continue
+        if q.deadline_s is None or r.latency_s <= q.deadline_s:
+            good += 1
+    return good / wall_s if wall_s > 0 else 0.0
+
+
+def _base_cfg(num_nodes):
+    return EngineConfig(
+        window=WindowConfig(duration=6000, edge_capacity=1 << 16,
+                            node_capacity=num_nodes),
+        sampler=SamplerConfig(mode="index"),
+        scheduler=SchedulerConfig(path="grouped"))
+
+
+def _serve_cfg(overlapped, queue_capacity=64):
+    # the overlapped runtime: 4-deep in-flight ring + a short linger so
+    # late same-group arrivals ride partially-filled batches; the blocking
+    # baseline is the exact historical configuration
+    if overlapped:
+        return ServeConfig(queue_capacity=queue_capacity,
+                           lane_buckets=(64, 256, 1024),
+                           length_buckets=(4, 8, 16),
+                           max_inflight=4, linger_s=0.002)
+    return ServeConfig(queue_capacity=queue_capacity,
+                       lane_buckets=(64, 256, 1024),
+                       length_buckets=(4, 8, 16), max_inflight=1)
+
+
+def _fresh_service(cfg, serve_cfg, base_batches, batch_capacity):
+    svc = WalkService(cfg, serve_cfg, batch_capacity=batch_capacity)
+    for bs, bd, bt in base_batches:
+        svc.ingest(bs, bd, bt)
+    return svc
+
+
+def _warm_buckets(svc, serve_cfg, rng, num_nodes):
+    """Compile the FULL bucket grid (lane bucket × length bucket × start
+    mode) once, so measured loads see steady-state dispatch. The jit
+    cache is process-global: later services with the same shapes reuse
+    these programs."""
+    for lanes in serve_cfg.lane_buckets:
+        for length in serve_cfg.length_buckets:
+            starts = tuple(int(s) for s in rng.integers(0, num_nodes, lanes))
+            svc.submit(WalkQuery(start_nodes=starts, max_length=length,
+                                 seed=1))
+            svc.step()
+            svc.submit(WalkQuery(num_walks=lanes, start_mode="edges",
+                                 max_length=length, seed=2))
+            svc.step()
+    svc.drain()
 
 
 def run_sharded(shard_counts=None, n_queries=120, num_nodes=1024,
@@ -93,6 +205,8 @@ def run_sharded(shard_counts=None, n_queries=120, num_nodes=1024,
     import jax
     devs = len(jax.devices())
     counts = shard_counts or [d for d in (1, 2, 4, 8) if d <= devs]
+    if common.SMALL:
+        n_queries, num_edges = 40, 20_000
     g = powerlaw_temporal_graph(num_nodes, num_edges, seed=seed)
     cfg = EngineConfig(
         window=WindowConfig(duration=6000, edge_capacity=1 << 16,
@@ -111,6 +225,7 @@ def run_sharded(shard_counts=None, n_queries=120, num_nodes=1024,
     rng = np.random.default_rng(seed)
     queries = _mixed_workload(rng, n_queries, num_nodes)
 
+    rows = []
     for D in counts:
         svc = WalkService(cfg, serve_cfg, batch_capacity=num_edges // 4 + 64,
                           num_shards=D)
@@ -131,66 +246,124 @@ def run_sharded(shard_counts=None, n_queries=120, num_nodes=1024,
              f"walks_per_s={s.walks / wall:.0f};served={s.completed};"
              f"batches={s.batches};occupancy={s.lane_occupancy:.2f};"
              f"shard_walk_drops={s.shard_walk_drops};wall_s={wall:.2f}")
+        rows.append({"shards": D, "walks_per_s": s.walks / wall,
+                     "served": s.completed, "batches": s.batches,
+                     "shard_walk_drops": s.shard_walk_drops,
+                     "wall_s": wall})
+    return rows
 
 
-def run(offered_loads_qps=(100, 400, 1600), n_queries=150,
-        num_nodes=1024, num_edges=60_000, seed=17):
+def run(offered_loads_qps=(100, 800, 6400), n_queries=150,
+        num_nodes=1024, num_edges=60_000, seed=17, deadline_s=0.25):
+    if common.SMALL:
+        offered_loads_qps, n_queries, num_edges = (100, 4000), 80, 30_000
     g = powerlaw_temporal_graph(num_nodes, num_edges, seed=seed)
-    cfg = EngineConfig(
-        window=WindowConfig(duration=6000, edge_capacity=1 << 16,
-                            node_capacity=num_nodes),
-        sampler=SamplerConfig(mode="index"),
-        scheduler=SchedulerConfig(path="grouped"))
-    serve_cfg = ServeConfig(queue_capacity=64,
-                            lane_buckets=(64, 256, 1024),
-                            length_buckets=(4, 8, 16))
-    svc = WalkService(cfg, serve_cfg,
-                      batch_capacity=num_edges // 4 + 64)
-    for bs, bd, bt in chronological_batches(g, 4):
-        svc.ingest(bs, bd, bt)
+    cfg = _base_cfg(num_nodes)
+    batch_capacity = num_edges // 8 + 64
+    batches = list(chronological_batches(g, 8))
+    base, live = batches[:4], batches[4:]
 
     rng = np.random.default_rng(seed)
-    # warm the jit cache across the FULL bucket grid (lane bucket × length
-    # bucket × start mode), one batch per shape, so the measured loads see
-    # steady-state dispatch, not compilation
-    for lanes in serve_cfg.lane_buckets:
-        for length in serve_cfg.length_buckets:
-            starts = tuple(int(s) for s in rng.integers(0, num_nodes, lanes))
-            svc.submit(WalkQuery(start_nodes=starts, max_length=length,
-                                 seed=1))
-            svc.step()
-            svc.submit(WalkQuery(num_walks=lanes, start_mode="edges",
-                                 max_length=length, seed=2))
-            svc.step()
-    svc.drain()
+    _warm_buckets(_fresh_service(cfg, _serve_cfg(False), base,
+                                 batch_capacity),
+                  _serve_cfg(False), rng, num_nodes)
 
+    open_rows = []
     for qps in offered_loads_qps:
-        svc.stats = ServeStats()      # fresh counters per offered load
-        queries = _mixed_workload(rng, n_queries, num_nodes)
+        queries = _mixed_workload(rng, n_queries, num_nodes,
+                                  deadline_s=deadline_s)
         arrivals = np.cumsum(rng.exponential(1.0 / qps, n_queries))
-        wall = _drive_open_loop(svc, queries, arrivals)
-        svc.drain()
-        s = svc.stats
-        emit(f"serving/load_{qps}qps",
-             1e6 * (np.mean(s.latencies_s) if s.latencies_s else float("nan")),
-             f"p50_ms={s.p50_ms:.2f};p99_ms={s.p99_ms:.2f};"
-             f"walks_per_s={s.walks_per_s:.0f};steps_per_s={s.steps_per_s:.0f};"
-             f"served={s.completed};dropped={s.dropped};"
-             f"batches={s.batches};occupancy={s.lane_occupancy:.2f};"
-             f"wall_s={wall:.2f}")
+        # live window advances at fixed offered times, same for both modes
+        span = float(arrivals[-1])
+        ingests = [(span * (k + 1) / (len(live) + 1), b)
+                   for k, b in enumerate(live)]
+        for overlapped in (False, True):
+            svc = _fresh_service(cfg, _serve_cfg(overlapped), base,
+                                 batch_capacity)
+            wall, tickets = _drive_open_loop(svc, queries, arrivals,
+                                             overlapped, ingests)
+            s = svc.stats
+            goodput = _goodput(svc, queries, tickets, wall)
+            mode = "overlapped" if overlapped else "blocking"
+            emit(f"serving/load_{qps}qps/{mode}",
+                 1e6 * (np.mean(s.latencies_s) if len(s.latencies_s)
+                        else float("nan")),
+                 f"p50_ms={s.p50_ms:.2f};p99_ms={s.p99_ms:.2f};"
+                 f"goodput_qps={goodput:.0f};served={s.completed};"
+                 f"dropped_deadline={s.dropped_deadline};"
+                 f"dropped_backpressure={s.dropped_backpressure};"
+                 f"batches={s.batches};occupancy={s.lane_occupancy:.2f};"
+                 f"wall_s={wall:.2f}")
+            open_rows.append({
+                "offered_qps": qps, "mode": mode, "wall_s": wall,
+                "p50_ms": float(s.p50_ms), "p99_ms": float(s.p99_ms),
+                "goodput_qps": goodput, "served": s.completed,
+                "dropped_deadline": s.dropped_deadline,
+                "dropped_backpressure": s.dropped_backpressure,
+                "batches": s.batches,
+                "occupancy": float(s.lane_occupancy)})
 
-    run_sharded()
+    closed_rows = []
+    queries = _mixed_workload(rng, n_queries, num_nodes)
+    for overlapped in (False, True):
+        svc = _fresh_service(cfg, _serve_cfg(overlapped,
+                                             queue_capacity=n_queries + 8),
+                             base, batch_capacity)
+        for q in queries:
+            svc.submit(q, strict=True)
+        t0 = time.perf_counter()
+        svc.drain()
+        wall = time.perf_counter() - t0
+        s = svc.stats
+        mode = "overlapped" if overlapped else "blocking"
+        emit(f"serving/closed_loop/{mode}", 1e6 * wall / max(s.batches, 1),
+             f"walks_per_s={s.walks / wall:.0f};served={s.completed};"
+             f"batches={s.batches};wall_s={wall:.2f}")
+        closed_rows.append({"mode": mode, "walks_per_s": s.walks / wall,
+                            "served": s.completed, "batches": s.batches,
+                            "wall_s": wall})
+
+    sharded_rows = run_sharded()
+
+    # the acceptance comparison: at the heaviest offered load, overlapped
+    # ingest+dispatch vs the blocking baseline, goodput under deadlines
+    top = max(offered_loads_qps)
+    by_mode = {r["mode"]: r for r in open_rows if r["offered_qps"] == top}
+    blocking_g = by_mode["blocking"]["goodput_qps"]
+    overlapped_g = by_mode["overlapped"]["goodput_qps"]
+    write_json("serving", {
+        "deadline_s": deadline_s,
+        "offered_loads_qps": list(offered_loads_qps),
+        "n_queries_per_load": n_queries,
+        "open_loop": open_rows,
+        "closed_loop": closed_rows,
+        "sharded": sharded_rows,
+        "overlap_vs_blocking": {
+            "offered_qps": top,
+            "blocking_goodput_qps": blocking_g,
+            "overlapped_goodput_qps": overlapped_g,
+            "goodput_gain": (overlapped_g / blocking_g
+                             if blocking_g > 0 else float("inf")),
+        },
+    })
 
 
 if __name__ == "__main__":
     import sys
-    if "--shards" in sys.argv[1:]:
+    argv = sys.argv[1:]
+    if "--small" in argv:
+        common.SMALL = True
+    if "--emit-json" in argv:
+        common.EMIT_JSON = True
+        common.begin_suite("serving_load")
+    if "--shards" in argv:
         # e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         #        python -m benchmarks.serving_load --shards [1,2,8]
-        i = sys.argv.index("--shards")
-        arg = sys.argv[i + 1] if len(sys.argv) > i + 1 else ""
+        i = argv.index("--shards")
+        arg = argv[i + 1] if len(argv) > i + 1 else ""
         counts = ([int(x) for x in arg.strip("[]").split(",") if x]
                   if arg and not arg.startswith("-") else None)
         run_sharded(shard_counts=counts)
     else:
         run()
+    common.end_suite()

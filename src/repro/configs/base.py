@@ -109,13 +109,28 @@ class ServeConfig:
     (DESIGN.md §13): 0 serves the single replicated window; N > 0 shards
     the window over the first N devices (lane batches migrate between
     owners per hop; per-shard capacities come from ``ShardConfig``).
+
+    The async continuous-batching runtime (DESIGN.md §18) adds three
+    knobs. ``max_inflight`` bounds the ring of dispatched-but-unharvested
+    batch futures: 1 degenerates to the synchronous blocking loop, larger
+    values let walk batches overlap on JAX async dispatch (and with
+    ``begin_ingest``). ``linger_s`` is the continuous-batching seal
+    deadline: a partially-filled lane bucket stays open to late-arriving
+    same-group queries until the head query has waited that long (0 seals
+    at the instant a batch forms — the historical behavior). ``admission``
+    picks the head-of-line order: ``"fifo"`` (strict arrival order) or
+    ``"edf"`` (earliest ``WalkQuery.deadline_s`` first; deadline-free
+    queries sort last, FIFO among themselves).
     """
 
     queue_capacity: int = 1024        # pending-query slots; beyond -> dropped
     lane_buckets: Tuple[int, ...] = (64, 256, 1024, 4096)
     length_buckets: Tuple[int, ...] = (4, 8, 16, 32, 80)
-    drop_oversize: bool = True        # drop queries exceeding the largest buckets
+    drop_oversize: bool = True        # False: oversize submits raise (typed)
     num_shards: int = 0               # 0 = single replicated window
+    max_inflight: int = 4             # in-flight dispatch ring depth (>= 1)
+    linger_s: float = 0.0             # continuous-batching seal deadline
+    admission: str = "fifo"           # fifo | edf (DESIGN.md §18)
 
 
 @dataclass(frozen=True)

@@ -344,6 +344,7 @@ def new_registry() -> MetricsRegistry:
 DROP_KINDS = (
     "queue_backpressure",    # serve: submit queue at capacity
     "oversize",              # serve: query exceeds largest shape bucket
+    "deadline_expired",      # serve: queued query evicted past its deadline
     "exchange_clip",         # sharded ingest: all_to_all bucket overflow
     "walk_slot_overflow",    # sharded walks/lanes: slot or bucket overflow
     "reshard_clip",          # live reshard: per-shard capacity clip
@@ -369,6 +370,7 @@ class DropCounters:
 
     queue_backpressure: int = 0
     oversize: int = 0
+    deadline_expired: int = 0
     exchange_clip: int = 0
     walk_slot_overflow: int = 0
     reshard_clip: int = 0

@@ -10,23 +10,38 @@ coalescing over the streaming engine.
 * ``ShardedSnapshotManager`` — the same protocol over a node-partitioned
   window + replicated ts-view (sharded serving, DESIGN.md §13).
 * ``WalkService`` — the service loop: fixed-capacity queue with
-  backpressure + drop accounting, FIFO coalescing, p50/p99 latency and
-  walks/s stats; single-device by default, node-partitioned with
-  ``num_shards``/``mesh`` (or ``ServeConfig.num_shards``).
+  backpressure + drop accounting, FIFO/EDF coalescing, p50/p99 latency
+  and walks/s stats; single-device by default, node-partitioned with
+  ``num_shards``/``mesh`` (or ``ServeConfig.num_shards``). The async
+  continuous-batching runtime (DESIGN.md §18) overlaps dispatch with
+  ingest: ``tick``/``pump`` drive a bounded in-flight ring, ``step`` is
+  the synchronous baseline.
 """
 from repro.serve.coalescer import (
     LaneSlice,
     bucketize,
+    group_key,
     lane_owners,
     pack_queries,
     slice_result,
 )
 from repro.serve.query import QueryResult, WalkQuery
-from repro.serve.service import QueueFull, ServeStats, WalkService
-from repro.serve.snapshot import ShardedSnapshotManager, SnapshotManager
+from repro.serve.service import (
+    OversizeQuery,
+    QueueFull,
+    ServeStats,
+    WalkService,
+)
+from repro.serve.snapshot import (
+    PinnedShardedSnapshot,
+    PinnedSnapshot,
+    ShardedSnapshotManager,
+    SnapshotManager,
+)
 
 __all__ = [
-    "LaneSlice", "bucketize", "lane_owners", "pack_queries", "slice_result",
-    "QueryResult", "WalkQuery", "QueueFull", "ServeStats", "WalkService",
+    "LaneSlice", "bucketize", "group_key", "lane_owners", "pack_queries",
+    "slice_result", "QueryResult", "WalkQuery", "OversizeQuery", "QueueFull",
+    "ServeStats", "WalkService", "PinnedSnapshot", "PinnedShardedSnapshot",
     "SnapshotManager", "ShardedSnapshotManager",
 ]

@@ -48,6 +48,18 @@ def bucketize(n: int, buckets: Sequence[int]) -> Optional[int]:
     return None
 
 
+def group_key(query: WalkQuery, length_buckets: Sequence[int]):
+    """Coalescing group of a query: ``(start_mode, length bucket)``.
+
+    Two queries may share a batch iff their group keys match — the start
+    mode fixes the compiled program's shape family and the length bucket
+    fixes its column count. This is THE compatibility rule; the service's
+    batch formation, the linger/seal decision, and the fairness property
+    in tests/test_serve.py all consult it through this one helper.
+    """
+    return (query.start_mode, bucketize(query.max_length, length_buckets))
+
+
 @dataclass(frozen=True)
 class LaneSlice:
     """Where one query's lanes live inside a coalesced batch."""

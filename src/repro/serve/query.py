@@ -11,7 +11,7 @@ whether it ran solo or packed with arbitrary other traffic.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -47,6 +47,14 @@ class WalkQuery:
     # untouched, the solo/coalesced bit-identity holds either way)
     n2v_p: float = 1.0
     n2v_q: float = 1.0
+    # SLO deadline (DESIGN.md §18), in seconds from submit; None = none.
+    # A query still *queued* past its deadline is evicted (counted as a
+    # ``deadline_expired`` drop) instead of wasting a dispatch on an
+    # answer nobody will read. Once sealed into a batch it always
+    # completes — eviction is an admission decision, not a cancellation.
+    # Under ``ServeConfig.admission="edf"`` the deadline also orders the
+    # queue (earliest first).
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         if self.bias not in BIAS_CODES:
@@ -66,6 +74,10 @@ class WalkQuery:
         if self.start_mode not in START_MODES:
             raise ValueError(f"unknown start_mode {self.start_mode!r} "
                              f"(expected one of {START_MODES})")
+        if self.deadline_s is not None and not self.deadline_s > 0.0:
+            raise ValueError(
+                f"deadline_s must be positive (got {self.deadline_s}); "
+                "omit it (None) for no deadline")
         if self.max_length < 1:
             raise ValueError("max_length must be >= 1")
         # the lane arrays are int32: reject values that cannot round-trip

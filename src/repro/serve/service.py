@@ -7,12 +7,27 @@ coalesces compatible queries into one fixed-shape ``generate_walk_lanes``
 dispatch per ``step()``, slices each tenant's rows back out, and tracks
 p50/p99 submit→complete latency plus walks/s throughput.
 
-Coalescing policy: strict FIFO head-of-line — ``step()`` takes the oldest
-pending query, then greedily folds in every other pending query with the
-same (start mode, length bucket) group key, in arrival order, until the
-largest lane bucket is full. Older traffic is never overtaken by more
-than one batch formation, and a lone query still rides a right-sized
-(small) bucket instead of the mega-batch shape.
+Coalescing policy: head-of-line grouping — the head query (oldest under
+FIFO admission, earliest-deadline under EDF) fixes the group key, then
+same-group queries fold in along the admission order until the first one
+that does not fit the lane budget seals the scan (the *prefix rule*).
+Because the scan never skips a non-fitting query to admit a younger one,
+**no query is ever overtaken by a younger same-group query** — the
+fairness property tests/test_serve.py pins with hypothesis. A lone query
+still rides a right-sized (small) bucket instead of the mega-batch shape.
+
+**Async continuous-batching runtime** (DESIGN.md §18): dispatches no
+longer block. A sealed batch launches on JAX async dispatch and joins a
+bounded ring of in-flight futures, each pinned to the snapshot version it
+launched against; ``pump()`` harvests completions (oldest first) at the
+caller's pace, and ``tick()`` is the one-call event loop (evict expired →
+harvest ready → seal + launch while the ring has room). A
+partially-filled batch *lingers* up to ``ServeConfig.linger_s`` so
+late-arriving same-group queries are admitted into it before it seals —
+safe because the coalescer only decides *where* a lane sits, never *what*
+it computes. ``step()`` keeps the historical synchronous semantics
+(force-seal one batch, block until every in-flight batch is harvested),
+which is also the bit-identity baseline the async path is tested against.
 
 Determinism: results are bit-identical to running each query solo
 (``run_query_solo``) because lane RNG folds by (query seed, walk id,
@@ -30,10 +45,11 @@ with the *same* bit-identity guarantee against single-device solo runs.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -50,6 +66,7 @@ from repro.core.walk_engine import (
 from repro.core.window import WindowState, init_window
 from repro.serve.coalescer import (
     bucketize,
+    group_key,
     pack_queries,
     result_arrays,
     slice_result,
@@ -71,6 +88,45 @@ class QueueFull(RuntimeError):
     """Raised by ``submit(..., strict=True)`` when the queue is at capacity."""
 
 
+class OversizeQuery(ValueError):
+    """Raised by ``submit`` for a query exceeding the largest shape bucket
+    when the service is configured (or asked) not to drop it silently —
+    ``strict=True``, or ``ServeConfig.drop_oversize=False``. Unlike
+    ``QueueFull`` this can never succeed on retry: the query needs a
+    bigger bucket, not a quieter moment."""
+
+
+@dataclass(frozen=True)
+class _Pending:
+    """One queued query: ticket, arrival clock, absolute deadline."""
+
+    ticket: int
+    arrival: float                   # time.perf_counter() at submit
+    query: WalkQuery
+    deadline: Optional[float] = None  # absolute perf_counter time, or None
+
+
+@dataclass
+class _InFlight:
+    """One dispatched-but-unharvested batch in the async ring.
+
+    ``raw`` holds the un-materialized device outputs (a ``WalkResult`` on
+    the single-device path, the ``serve_lanes_sharded`` output tuple on
+    the sharded path) — touching them would force a host sync, so only
+    ``pump`` does. ``version`` is the snapshot version the batch was
+    pinned to at launch; results report it even when ``publish()`` ran
+    while the batch was in flight."""
+
+    raw: object
+    probe: object                    # one device array to poll readiness on
+    taken: List[_Pending]
+    slices: List[object]
+    lane_bucket: int
+    lanes: int
+    version: int
+    t0: float                        # launch clock
+
+
 # percentile window: counters are lifetime totals, but the latency/batch
 # samples backing p50/p99 are a bounded ring-buffer reservoir (the obs
 # histogram backing store, obs/registry.py) so a long-running service
@@ -86,12 +142,22 @@ class ServeStats:
     completed: int = 0
     dropped_backpressure: int = 0   # queue at capacity
     dropped_oversize: int = 0       # exceeds the largest shape bucket
+    #   (counts silent drops AND the typed refusals drop_oversize=False
+    #   raises on non-strict submits — both are shed work; strict raises
+    #   are the caller's own error handling and are not counted)
+    dropped_deadline: int = 0       # queued past deadline_s -> evicted
     batches: int = 0                # coalesced dispatches
     lanes_dispatched: int = 0       # incl. bucket padding
     lanes_live: int = 0             # real query lanes
     walks: int = 0                  # walks returned to callers
     hops: int = 0                   # edges traversed in returned walks
-    busy_s: float = 0.0             # total wall time inside dispatches
+    solo_queries: int = 0           # run_query_solo dispatches (accounted
+    #   into walks/hops/busy_s like served traffic, so mixed solo+served
+    #   workloads report true throughput)
+    busy_s: float = 0.0             # total launch->harvest wall time; with
+    #   overlapped dispatch (max_inflight > 1) in-flight intervals overlap
+    #   so busy_s can exceed wall time and walks_per_s under-reports the
+    #   overlapped rate — wall-clock goodput lives in the SLO harness
     shard_walk_drops: int = 0       # sharded serving: capacity-overflow lanes
     exchange_drops: int = 0         # sharded serving: ingest-exchange drops
     # ^ cumulative over the service lifetime; BOTH refresh per dispatch
@@ -112,7 +178,8 @@ class ServeStats:
 
     @property
     def dropped(self) -> int:
-        return self.dropped_backpressure + self.dropped_oversize
+        return (self.dropped_backpressure + self.dropped_oversize
+                + self.dropped_deadline)
 
     def latency_percentile(self, q: float) -> float:
         """q-th percentile of submit→complete latency over the bounded
@@ -164,6 +231,15 @@ class WalkService:
                 or list(serve_cfg.length_buckets) != sorted(
                     serve_cfg.length_buckets):
             raise ValueError("ServeConfig buckets must be sorted ascending")
+        if serve_cfg.max_inflight < 1:
+            raise ValueError("ServeConfig.max_inflight must be >= 1 "
+                             f"(got {serve_cfg.max_inflight})")
+        if serve_cfg.linger_s < 0:
+            raise ValueError("ServeConfig.linger_s must be >= 0 "
+                             f"(got {serve_cfg.linger_s})")
+        if serve_cfg.admission not in ("fifo", "edf"):
+            raise ValueError("ServeConfig.admission must be 'fifo'|'edf' "
+                             f"(got {serve_cfg.admission!r})")
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         # the tiled kernel compiles one bias per dispatch; serve on the
@@ -224,9 +300,13 @@ class WalkService:
         self._last_shard_claims: Optional[np.ndarray] = None
         self.placement = (self.snapshots.placement if self.sharded
                           else None)
-        self._pending: Deque[Tuple[int, float, WalkQuery]] = deque()
+        self._pending: Deque[_Pending] = deque()
+        self._inflight: Deque[_InFlight] = deque()
         self._results: Dict[int, QueryResult] = {}
         self._next_ticket = 0
+        # when a drain() is active, tickets harvested during it land here
+        # so the drain returns exactly the results it produced
+        self._harvest_log: Optional[List[int]] = None
 
     # ------------------------------------------------------------------
     # Ingest side (snapshot double-buffer)
@@ -286,9 +366,24 @@ class WalkService:
     def submit(self, query: WalkQuery, strict: bool = False) -> Optional[int]:
         """Enqueue a query; returns its ticket, or None when dropped.
 
-        Drops (counted in ``stats``) happen when the fixed-capacity queue
-        is full (backpressure) or the query exceeds the largest shape
-        bucket. ``strict=True`` raises instead of dropping.
+        Oversize contract (all four ``strict`` × ``drop_oversize`` cells,
+        tested in tests/test_serve.py):
+
+        * ``strict=False, drop_oversize=True`` — silent drop: returns
+          None, counted (``stats.dropped_oversize`` + the ``oversize``
+          drop kind).
+        * ``strict=False, drop_oversize=False`` — typed refusal: raises
+          ``OversizeQuery``; still counted as shed work, because the
+          service refused traffic mid-stream.
+        * ``strict=True`` (either ``drop_oversize``) — raises
+          ``OversizeQuery``, NOT counted: like a strict ``QueueFull``,
+          the raise is the caller's own error handling, not a drop.
+
+        Backpressure (queue at capacity) drops with ``strict=False`` and
+        raises ``QueueFull`` with ``strict=True``. Queued queries whose
+        ``deadline_s`` has expired are evicted first (counted as
+        ``deadline_expired``), so a full queue of dead queries never
+        causes spurious backpressure.
 
         Table-bias and second-order (node2vec) queries are validated
         against the service's capabilities here — always a raise, never a
@@ -302,15 +397,21 @@ class WalkService:
                 sharded=self.sharded,
                 have_tables=(not self.sharded
                              and self.snapshots.current.tables is not None))
+        now = time.perf_counter()
+        self._evict_expired(now)
         if self._oversize(query):
-            if strict or not self.serve_cfg.drop_oversize:
-                raise ValueError(
-                    f"query needs {query.num_lanes} lanes × "
-                    f"{query.max_length} hops; largest bucket is "
-                    f"{self.serve_cfg.lane_buckets[-1]} × "
-                    f"{self.serve_cfg.length_buckets[-1]}")
+            msg = (f"query needs {query.num_lanes} lanes × "
+                   f"{query.max_length} hops; largest bucket is "
+                   f"{self.serve_cfg.lane_buckets[-1]} × "
+                   f"{self.serve_cfg.length_buckets[-1]}")
+            if strict:
+                raise OversizeQuery(msg)
             self.stats.dropped_oversize += 1
             count_drop(self.registry, "oversize")
+            if not self.serve_cfg.drop_oversize:
+                raise OversizeQuery(
+                    msg + " (drop_oversize=False: refusing instead of "
+                          "silently dropping)")
             return None
         if len(self._pending) >= self.serve_cfg.queue_capacity:
             if strict:
@@ -322,13 +423,37 @@ class WalkService:
             return None
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._pending.append((ticket, time.perf_counter(), query))
+        deadline = (now + query.deadline_s
+                    if query.deadline_s is not None else None)
+        self._pending.append(_Pending(ticket, now, query, deadline))
         self.stats.submitted += 1
         self.registry.inc("serve_submitted_total", 1,
                           help="queries accepted into the serving queue")
         self.registry.set_gauge("serve_queue_depth", len(self._pending),
                                 help="queries pending in the serving queue")
         return ticket
+
+    def _evict_expired(self, now: float) -> int:
+        """Evict queued queries past their deadline (DESIGN.md §18).
+
+        Only *queued* queries are evicted — once sealed into a batch a
+        query always completes (eviction is an admission decision, not a
+        cancellation of in-flight device work)."""
+        if not any(e.deadline is not None for e in self._pending):
+            return 0
+        kept: Deque[_Pending] = deque()
+        evicted = 0
+        for e in self._pending:
+            if e.deadline is not None and now > e.deadline:
+                evicted += 1
+            else:
+                kept.append(e)
+        if evicted:
+            self._pending = kept
+            self.stats.dropped_deadline += evicted
+            count_drop(self.registry, "deadline_expired", evicted)
+            self.registry.set_gauge("serve_queue_depth", len(self._pending))
+        return evicted
 
     def poll(self, ticket: int) -> Optional[QueryResult]:
         """Fetch (and forget) a completed query's result."""
@@ -339,33 +464,73 @@ class WalkService:
         return len(self._pending)
 
     def _group_key(self, query: WalkQuery):
-        return (query.start_mode,
-                bucketize(query.max_length, self.serve_cfg.length_buckets))
+        return group_key(query, self.serve_cfg.length_buckets)
+
+    def _admission_order(self) -> List[_Pending]:
+        """Queue view in head-of-line order: arrival order under FIFO,
+        (deadline, ticket) under EDF — deadline-free queries sort last and
+        keep FIFO order among themselves."""
+        if self.serve_cfg.admission == "fifo":
+            return list(self._pending)
+        return sorted(self._pending,
+                      key=lambda e: (e.deadline if e.deadline is not None
+                                     else math.inf, e.ticket))
+
+    def _scan_group(self, order: Sequence[_Pending]):
+        """The head query fixes the group key; same-group queries fold in
+        along the admission order until the first one that does not fit
+        the lane budget seals the scan (the prefix rule). Never skipping a
+        non-fitting query to admit a later one is what makes the fairness
+        claim true: a query can never be overtaken by a younger same-group
+        query (property-tested in tests/test_serve.py)."""
+        head_key = self._group_key(order[0].query)
+        budget = self.serve_cfg.lane_buckets[-1]
+        take: List[_Pending] = []
+        lanes, sealed = 0, False
+        for e in order:
+            if self._group_key(e.query) != head_key:
+                continue
+            if lanes + e.query.num_lanes > budget:
+                sealed = True
+                break
+            take.append(e)
+            lanes += e.query.num_lanes
+        return head_key, take, lanes, sealed
+
+    def _form_batch(self, now: float, force: bool):
+        """Seal one batch if the linger rule allows; returns ``(group
+        key, taken, lanes)`` (and removes the taken queries from the
+        queue) or None when the head batch should keep lingering.
+
+        Seal rule (DESIGN.md §18): dispatch when the batch cannot grow —
+        the scan hit a non-fitting same-group query or filled the lane
+        budget exactly — or when the head query has lingered
+        ``linger_s`` (0 = seal immediately), or when forced
+        (``step``/``drain``)."""
+        if not self._pending:
+            return None
+        order = self._admission_order()
+        head_key, take, lanes, sealed = self._scan_group(order)
+        budget = self.serve_cfg.lane_buckets[-1]
+        if not (force or sealed or lanes >= budget
+                or now - take[0].arrival >= self.serve_cfg.linger_s):
+            return None
+        taken_tickets = {e.ticket for e in take}
+        self._pending = deque(e for e in self._pending
+                              if e.ticket not in taken_tickets)
+        return head_key, take, lanes
 
     def _take_batch(self):
-        """FIFO head-of-line group: the oldest query fixes the group key;
-        fold in same-group queries (arrival order) up to the lane budget."""
-        head_key = self._group_key(self._pending[0][2])
-        budget = self.serve_cfg.lane_buckets[-1]
-        taken, kept, lanes = [], deque(), 0
-        for item in self._pending:
-            q = item[2]
-            if self._group_key(q) == head_key and lanes + q.num_lanes <= budget:
-                taken.append(item)
-                lanes += q.num_lanes
-            else:
-                kept.append(item)
-        self._pending = kept
-        return head_key, taken, lanes
+        """Force-seal one batch now (the synchronous entry point)."""
+        head_key, take, lanes = self._form_batch(time.perf_counter(),
+                                                 force=True)
+        return head_key, take, lanes
 
-    def _dispatch_lanes(self, params: LaneParams, wcfg: WalkConfig,
-                        use_tables: bool = False,
-                        second_order: bool = False):
-        """Run one packed lane batch to completion; host (nodes, times,
-        lengths). Single-device: ``generate_walk_lanes`` against the
-        current snapshot. Sharded: ``serve_lanes_sharded`` against the
-        (sharded window, ts-view) pair — psum-reassembled leaves are
-        replicated, so row 0 is the batch result (DESIGN.md §13).
+    def _launch_lanes(self, params: LaneParams, wcfg: WalkConfig, pin,
+                      use_tables: bool = False, second_order: bool = False):
+        """Enqueue one packed lane batch on the device WITHOUT waiting;
+        returns the raw device outputs (a ``WalkResult`` single-device, the
+        ``serve_lanes_sharded`` tuple sharded) against the pinned snapshot.
 
         ``use_tables`` / ``second_order`` flag whether any lane in the
         batch carries a table bias code / a non-trivial (p, q) pair —
@@ -378,57 +543,87 @@ class WalkService:
         if self.sharded:
             from repro.distributed.streaming_shard import serve_lanes_sharded
             snap = self.snapshots
-            outs = serve_lanes_sharded(
-                snap.state, snap.view, self.base_key, params,
+            return serve_lanes_sharded(
+                pin.state, pin.view, self.base_key, params,
                 mesh=snap.mesh, axis_name=snap.axis_name,
                 node_capacity=self.cfg.window.node_capacity, wcfg=wcfg,
                 scfg=self.cfg.sampler, shard_cfg=self.cfg.shard,
                 placement=snap.placement, with_probes=self.probes)
+        snap = pin.state
+        return generate_walk_lanes(snap.index, self.base_key, params, wcfg,
+                                   self.cfg.sampler, self.sched_cfg,
+                                   tables=snap.tables if use_tables else None,
+                                   second_order=second_order)
+
+    def _materialize(self, raw):
+        """Block on one launched batch and bring it to host: (nodes,
+        times, lengths) arrays, plus the sharded drop/claim/probe
+        bookkeeping at this (the batch's only) host sync point.
+        Sharded psum-reassembled leaves are replicated, so row 0 is the
+        batch result (DESIGN.md §13)."""
+        if self.sharded:
             if self.probes:
-                nodes, times, lengths, drops, claims, sp = outs
+                nodes, times, lengths, drops, claims, sp = raw
             else:
-                nodes, times, lengths, drops, claims = outs
+                nodes, times, lengths, drops, claims = raw
             jax.block_until_ready(lengths)
             self.stats.shard_walk_drops += int(np.asarray(drops).sum())
             self._last_shard_claims = np.asarray(claims)
             if self.probes:
-                # flushed at the dispatch's existing sync; the exchange
-                # refresh keeps both sharded drop counters per-dispatch
+                # flushed at the batch's existing sync; the exchange
+                # refresh keeps both sharded drop counters per-harvest
                 flush_serve_probes(self.registry, np.asarray(sp))
                 self._refresh_exchange_drops()
+            # device-side per-shard claim counters (serve_lanes_sharded):
+            # unlike the old host-side owner fold this covers edges-mode
+            # batches too, whose owners are data-dependent
+            for d, n in enumerate(self._last_shard_claims):
+                if n:
+                    self.stats.lanes_by_shard[int(d)] = \
+                        self.stats.lanes_by_shard.get(int(d), 0) + int(n)
             return (np.asarray(nodes)[0], np.asarray(times)[0],
                     np.asarray(lengths)[0])
-        snap = self.snapshots.current
-        res = generate_walk_lanes(snap.index, self.base_key, params, wcfg,
-                                  self.cfg.sampler, self.sched_cfg,
-                                  tables=snap.tables if use_tables else None,
-                                  second_order=second_order)
-        jax.block_until_ready(res.nodes)
-        return result_arrays(res)
+        jax.block_until_ready(raw.nodes)
+        return result_arrays(raw)
 
-    def step(self) -> int:
-        """Serve one coalesced batch; returns the number of queries served."""
-        if not self._pending:
-            return 0
+    def _dispatch_lanes(self, params: LaneParams, wcfg: WalkConfig,
+                        use_tables: bool = False,
+                        second_order: bool = False):
+        """Blocking convenience (the reference/solo path): launch one lane
+        batch against the current snapshot and wait for it."""
+        raw = self._launch_lanes(params, wcfg, self.snapshots.acquire(),
+                                 use_tables=use_tables,
+                                 second_order=second_order)
+        return self._materialize(raw)
+
+    # ------------------------------------------------------------------
+    # Async runtime: launch ring + pump loop (DESIGN.md §18)
+    # ------------------------------------------------------------------
+
+    def _launch(self, batch) -> int:
+        """Pack a sealed batch and enqueue it on the device; the batch
+        joins the in-flight ring pinned to the current snapshot version.
+        Returns the number of queries admitted into it."""
         reg = self.registry
+        (start_mode, len_bucket), taken, lanes = batch
         with span("coalesce", reg):
-            (start_mode, len_bucket), taken, lanes = self._take_batch()
             lane_bucket = bucketize(lanes, self.serve_cfg.lane_buckets)
-            queries = [q for _, _, q in taken]
+            queries = [e.query for e in taken]
             params, slices = pack_queries(queries, lane_bucket, len_bucket)
         wcfg = WalkConfig(num_walks=lane_bucket, max_length=len_bucket,
                           start_mode=start_mode)
-        version = self.snapshots.version
+        pin = self.snapshots.acquire()
         t0 = time.perf_counter()
         with span("dispatch", reg):
-            nodes, times, lengths = self._dispatch_lanes(
-                params, wcfg,
+            raw = self._launch_lanes(
+                params, wcfg, pin,
                 use_tables=any(q.bias == "table" for q in queries),
                 second_order=any(q.second_order for q in queries))
-        elapsed = time.perf_counter() - t0
-        self.stats.sample_s.append(elapsed)
-        self.stats.busy_s += elapsed
-        done_t = time.perf_counter()
+        probe = raw[2] if self.sharded else raw.lengths
+        self._inflight.append(_InFlight(
+            raw=raw, probe=probe, taken=list(taken), slices=list(slices),
+            lane_bucket=lane_bucket, lanes=lanes, version=pin.version,
+            t0=t0))
         self.stats.batches += 1
         self.stats.lanes_dispatched += lane_bucket
         self.stats.lanes_live += lanes
@@ -437,42 +632,139 @@ class WalkService:
         reg.inc("walks_dispatched_total", lane_bucket,
                 labels={"path": "serve"},
                 help="walk slots dispatched, by sampling path")
-        reg.observe("serve_batch_seconds", elapsed,
-                    help="wall time per coalesced dispatch")
         reg.set_gauge("serve_lane_occupancy", self.stats.lane_occupancy,
                       help="live fraction of dispatched lanes")
-        if self.sharded and self._last_shard_claims is not None:
-            # device-side per-shard claim counters (serve_lanes_sharded):
-            # unlike the old host-side owner fold this covers edges-mode
-            # batches too, whose owners are data-dependent
-            for d, n in enumerate(self._last_shard_claims):
-                if n:
-                    self.stats.lanes_by_shard[int(d)] = \
-                        self.stats.lanes_by_shard.get(int(d), 0) + int(n)
-        with span("result_slice", reg):
-            for (ticket, arrival, q), sl in zip(taken, slices):
-                qn, qt, ql = slice_result(nodes, times, lengths, sl, q)
-                self._results[ticket] = QueryResult(
-                    ticket=ticket, query=q, nodes=qn, times=qt, lengths=ql,
-                    latency_s=done_t - arrival, snapshot_version=version)
-                self.stats.completed += 1
-                self.stats.walks += q.num_lanes
-                self.stats.hops += int(np.sum(np.clip(ql - 1, 0, None)))
-                self.stats.latencies_s.append(done_t - arrival)
-                reg.observe("serve_latency_seconds", done_t - arrival,
-                            help="submit -> complete latency per query")
-        reg.inc("serve_completed_total", len(taken),
-                help="queries completed")
         reg.set_gauge("serve_queue_depth", len(self._pending))
+        reg.set_gauge("serve_inflight_depth", len(self._inflight),
+                      help="dispatched batches not yet harvested")
         return len(taken)
 
+    @staticmethod
+    def _batch_ready(fl: _InFlight) -> bool:
+        """Non-blocking readiness probe on one in-flight batch. Older
+        runtimes without ``jax.Array.is_ready`` degrade to "always ready"
+        — harvest then blocks, which is correct, just overlap-free."""
+        is_ready = getattr(fl.probe, "is_ready", None)
+        return True if is_ready is None else bool(is_ready())
+
+    def _harvest(self, fl: _InFlight) -> int:
+        """Materialize one in-flight batch and deliver its results."""
+        reg = self.registry
+        nodes, times, lengths = self._materialize(fl.raw)
+        done_t = time.perf_counter()
+        elapsed = done_t - fl.t0
+        self.stats.sample_s.append(elapsed)
+        self.stats.busy_s += elapsed
+        reg.observe("serve_batch_seconds", elapsed,
+                    help="launch -> harvest wall time per coalesced batch")
+        with span("result_slice", reg):
+            for e, sl in zip(fl.taken, fl.slices):
+                qn, qt, ql = slice_result(nodes, times, lengths, sl, e.query)
+                self._results[e.ticket] = QueryResult(
+                    ticket=e.ticket, query=e.query, nodes=qn, times=qt,
+                    lengths=ql, latency_s=done_t - e.arrival,
+                    snapshot_version=fl.version)
+                if self._harvest_log is not None:
+                    self._harvest_log.append(e.ticket)
+                self.stats.completed += 1
+                self.stats.walks += e.query.num_lanes
+                self.stats.hops += int(np.sum(np.clip(ql - 1, 0, None)))
+                self.stats.latencies_s.append(done_t - e.arrival)
+                reg.observe("serve_latency_seconds", done_t - e.arrival,
+                            help="submit -> complete latency per query")
+        reg.inc("serve_completed_total", len(fl.taken),
+                help="queries completed")
+        reg.set_gauge("serve_inflight_depth", len(self._inflight))
+        return len(fl.taken)
+
+    @property
+    def inflight_count(self) -> int:
+        return len(self._inflight)
+
+    def pump(self, block: bool = False) -> int:
+        """Harvest completed in-flight batches, oldest first; returns the
+        number of queries completed. ``block=False`` stops at the first
+        batch whose device work is still running; ``block=True`` waits for
+        the whole ring (the sync point ``step``/``drain`` use)."""
+        done = 0
+        while self._inflight:
+            if not block and not self._batch_ready(self._inflight[0]):
+                break
+            done += self._harvest(self._inflight.popleft())
+        return done
+
+    def tick(self, now: Optional[float] = None) -> int:
+        """One turn of the async event loop: evict expired queries,
+        harvest every ready batch, then seal + launch batches while the
+        in-flight ring has room and the linger rule allows. Never blocks.
+        Returns the number of queries completed this tick.
+
+        The open-loop caller pattern (benchmarks/serving_load.py)::
+
+            while traffic or svc.pending_count or svc.inflight_count:
+                svc.submit(...)     # as arrivals come in
+                svc.tick()
+            svc.pump(block=True)    # final sync
+        """
+        if now is None:
+            now = time.perf_counter()
+        self._evict_expired(now)
+        done = self.pump(block=False)
+        while (self._pending
+               and len(self._inflight) < self.serve_cfg.max_inflight):
+            batch = self._form_batch(now, force=False)
+            if batch is None:
+                break                      # head batch keeps lingering
+            self._launch(batch)
+        return done
+
+    def step(self) -> int:
+        """Serve one coalesced batch synchronously; returns the number of
+        queries in it. Force-seals (ignores the linger deadline), then
+        blocks until every in-flight batch — including any launched by
+        earlier ``tick`` calls — is harvested. With ``max_inflight=1``
+        and no ``tick``/``pump`` use this is exactly the historical
+        blocking FIFO loop, which is the bit-identity baseline the async
+        path is regression-tested against."""
+        self._evict_expired(time.perf_counter())
+        if not self._pending:
+            self.pump(block=True)
+            return 0
+        if len(self._inflight) >= self.serve_cfg.max_inflight:
+            self.pump(block=True)
+        n = self._launch(self._take_batch())
+        self.pump(block=True)
+        return n
+
     def drain(self) -> List[QueryResult]:
-        """Serve until the queue is empty; return all completed results."""
-        while self._pending:
-            self.step()
-        out = list(self._results.values())
-        self._results.clear()
-        return out
+        """Serve until the queue and the in-flight ring are empty; return
+        the results of exactly the queries completed during THIS drain.
+
+        Results completed by earlier ``step``/``tick`` calls stay in the
+        poll buffer — their tickets remain ``poll``-able after the drain
+        (the poll-after-drain contract, regression-tested in
+        tests/test_serve.py). The returned results are popped: their
+        tickets are delivered, not double-pollable."""
+        log: List[int] = []
+        outer = self._harvest_log
+        self._harvest_log = log
+        try:
+            while self._pending or self._inflight:
+                self._evict_expired(time.perf_counter())
+                if (self._pending
+                        and len(self._inflight)
+                        < self.serve_cfg.max_inflight):
+                    batch = self._form_batch(time.perf_counter(),
+                                             force=True)
+                    if batch is not None:
+                        self._launch(batch)
+                        continue
+                self.pump(block=True)
+        finally:
+            self._harvest_log = outer
+        if outer is not None:
+            outer.extend(log)
+        return [self._results.pop(t) for t in log if t in self._results]
 
     # ------------------------------------------------------------------
     # Reference path
@@ -484,14 +776,32 @@ class WalkService:
         this bit-identical to the same query served coalesced — the
         equivalence the tests pin down (and, for a sharded service, also
         bit-identical to the single-device service's solo run).
+
+        Solo runs ARE accounted: ``stats.solo_queries`` plus the shared
+        walks / hops / busy_s totals and the ``path="solo"`` dispatch
+        counter, so a mixed solo+served workload reports true throughput
+        instead of silently attributing solo device time to nothing.
+        They do not touch the queue/latency accounting (nothing was
+        queued) or ``completed`` (no ticket is issued).
         """
         params, (sl,) = pack_queries([query], query.num_lanes,
                                      query.max_length)
         wcfg = WalkConfig(num_walks=query.num_lanes,
                           max_length=query.max_length,
                           start_mode=query.start_mode)
-        return slice_result(
+        t0 = time.perf_counter()
+        out = slice_result(
             *self._dispatch_lanes(params, wcfg,
                                   use_tables=query.bias == "table",
                                   second_order=query.second_order),
             sl, query)
+        elapsed = time.perf_counter() - t0
+        self.stats.solo_queries += 1
+        self.stats.walks += query.num_lanes
+        self.stats.hops += int(np.sum(np.clip(out[2] - 1, 0, None)))
+        self.stats.busy_s += elapsed
+        self.stats.sample_s.append(elapsed)
+        self.registry.inc("walks_dispatched_total", query.num_lanes,
+                          labels={"path": "solo"},
+                          help="walk slots dispatched, by sampling path")
+        return out

@@ -34,7 +34,7 @@ watermark protocol guarantees within one version. Two sharded windows
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 
@@ -48,6 +48,32 @@ from repro.core.window import (
     init_view,
 )
 from repro.obs.registry import MetricsRegistry, get_registry
+
+
+class PinnedSnapshot(NamedTuple):
+    """A ``(window state, version)`` pair captured at dispatch time.
+
+    The async runtime (DESIGN.md §18) keeps batches in flight across
+    ``publish()`` calls: each in-flight batch holds one of these, so the
+    device computation it enqueued keeps the exact buffers it launched
+    against alive (functional JAX arrays — the swap can't mutate them)
+    and its results report the version they were computed at, never the
+    version current at harvest time.
+    """
+
+    state: WindowState
+    version: int
+
+
+class PinnedShardedSnapshot(NamedTuple):
+    """Sharded twin of ``PinnedSnapshot``: the (sharded window, replicated
+    ts-view) pair always belongs to ONE published version — pinning them
+    together is what keeps an in-flight sharded batch from seeing the
+    per-shard windows and the start directory at different versions."""
+
+    state: object
+    view: TsView
+    version: int
 
 
 class SnapshotManager:
@@ -98,6 +124,10 @@ class SnapshotManager:
     def discard(self) -> None:
         """Drop an in-flight ingest without publishing it."""
         self._next = None
+
+    def acquire(self) -> PinnedSnapshot:
+        """Pin the current (state, version) pair for an async dispatch."""
+        return PinnedSnapshot(self.current, self.version)
 
     def ingest(self, batch: EdgeBatch) -> WindowState:
         """Synchronous convenience: begin + publish in one call."""
@@ -190,6 +220,11 @@ class ShardedSnapshotManager:
     def discard(self) -> None:
         """Drop an in-flight ingest without publishing it."""
         self._next = None
+
+    def acquire(self) -> PinnedShardedSnapshot:
+        """Pin the current (state, view, version) triple for an async
+        dispatch — both halves from the same published version."""
+        return PinnedShardedSnapshot(self.state, self.view, self.version)
 
     def ingest(self, batch: EdgeBatch):
         """Synchronous convenience: begin + publish in one call."""

@@ -223,6 +223,129 @@ def test_oversize_query_dropped_or_rejected():
         svc.submit(big, strict=True)
 
 
+def test_oversize_contract_matrix():
+    """All four strict × drop_oversize cells of the submit contract:
+    silent drop / typed refusal / strict raise — and exactly the first
+    two count as shed work (stats + the canonical drop taxonomy)."""
+    from repro.obs.registry import DropCounters, MetricsRegistry
+    from repro.serve import OversizeQuery
+    big = WalkQuery(start_nodes=tuple(range(65)), max_length=4)
+    assert issubclass(OversizeQuery, ValueError)   # older callers' catches
+
+    # drop_oversize=True: non-strict drops silently (counted) ...
+    reg = MetricsRegistry()
+    svc = WalkService(_engine_cfg(), _serve_cfg(drop_oversize=True),
+                      registry=reg)
+    assert svc.submit(big) is None
+    assert svc.stats.dropped_oversize == 1
+    assert DropCounters.from_registry(reg).oversize == 1
+    # ... strict raises, NOT counted (the raise is the caller's handling)
+    with pytest.raises(OversizeQuery, match="largest bucket"):
+        svc.submit(big, strict=True)
+    assert svc.stats.dropped_oversize == 1
+    assert DropCounters.from_registry(reg).oversize == 1
+
+    # drop_oversize=False: non-strict raises the typed refusal (counted —
+    # the service shed traffic mid-stream) ...
+    reg2 = MetricsRegistry()
+    svc2 = WalkService(_engine_cfg(), _serve_cfg(drop_oversize=False),
+                       registry=reg2)
+    with pytest.raises(OversizeQuery, match="refusing"):
+        svc2.submit(big)
+    assert svc2.stats.dropped_oversize == 1
+    assert DropCounters.from_registry(reg2).oversize == 1
+    # ... strict raises identically but stays uncounted
+    with pytest.raises(OversizeQuery):
+        svc2.submit(big, strict=True)
+    assert svc2.stats.dropped_oversize == 1
+    assert DropCounters.from_registry(reg2).oversize == 1
+    # rightsized traffic is unaffected in both configs
+    assert svc2.submit(WalkQuery(start_nodes=(1,), max_length=4)) is not None
+
+
+def test_drain_scoped_poll_after_drain(loaded_service):
+    """drain() returns exactly the queries it completed; results from
+    earlier step()/tick() calls stay poll-able afterwards (the regression:
+    drain used to destroy them), and drained tickets are delivered —
+    popped, not double-pollable."""
+    _, svc = loaded_service
+    ta = svc.submit(WalkQuery(start_nodes=(1, 2), max_length=4, seed=77),
+                    strict=True)
+    svc.step()                     # completes ta into the poll buffer
+    tb = svc.submit(WalkQuery(start_nodes=(3,), max_length=4, seed=78),
+                    strict=True)
+    tc = svc.submit(WalkQuery(num_walks=2, start_mode="edges", max_length=4,
+                              seed=79), strict=True)
+    drained = svc.drain()
+    assert {r.ticket for r in drained} == {tb, tc}
+    ra = svc.poll(ta)
+    assert ra is not None and ra.ticket == ta
+    assert svc.poll(tb) is None and svc.poll(tc) is None
+    assert svc.drain() == []       # empty drain is a no-op
+
+
+def test_solo_runs_are_accounted():
+    """run_query_solo participates in throughput accounting: walks, hops,
+    device busy time, and the path="solo" dispatch counter — without
+    touching the queue/latency stats (nothing was queued)."""
+    from repro.obs.registry import MetricsRegistry
+    g = powerlaw_temporal_graph(100, 500, seed=3)
+    reg = MetricsRegistry()
+    svc = WalkService(_engine_cfg(), _serve_cfg(), registry=reg)
+    svc.ingest(g.src, g.dst, g.ts)
+    q = WalkQuery(start_nodes=(1, 2, 3), max_length=4, seed=5)
+    _, _, lengths = svc.run_query_solo(q)
+    assert svc.stats.solo_queries == 1
+    assert svc.stats.walks == 3
+    assert svc.stats.hops == int(np.sum(np.clip(lengths - 1, 0, None)))
+    assert svc.stats.busy_s > 0.0
+    assert len(svc.stats.sample_s) == 1
+    assert reg.value("walks_dispatched_total", labels={"path": "solo"}) == 3
+    # not "served" traffic: no ticket, no completion, no latency sample
+    assert svc.stats.completed == 0 and svc.stats.submitted == 0
+    assert len(svc.stats.latencies_s) == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 24),
+                          st.integers(1, 8), st.integers(0, 999)),
+                min_size=1, max_size=10))
+def test_take_batch_fairness_property(descs):
+    """Property (the docstring's no-overtaking claim): every sealed batch
+    is single-group, fits the lane budget, starts at the oldest pending
+    query, and takes exactly a PREFIX of its group in admission order —
+    so no query is ever overtaken by a younger same-group query."""
+    from repro.serve import group_key
+    _, svc = _loaded_service()
+    assert svc.pending_count == 0 and svc.inflight_count == 0
+    for edges_mode, lanes, length, seed in descs:
+        if edges_mode:
+            q = WalkQuery(num_walks=lanes, start_mode="edges",
+                          max_length=length, seed=seed)
+        else:
+            q = WalkQuery(start_nodes=tuple(range(lanes)),
+                          max_length=length, seed=seed)
+        assert svc.submit(q, strict=True) is not None
+    budget = svc.serve_cfg.lane_buckets[-1]
+    lb = svc.serve_cfg.length_buckets
+    while svc.pending_count:
+        before = list(svc._pending)
+        key, take, lanes = svc._take_batch()
+        assert take and lanes == sum(e.query.num_lanes for e in take)
+        assert lanes <= budget
+        assert all(group_key(e.query, lb) == key for e in take)
+        # head-of-line: the batch's group is the oldest query's group,
+        # and that query leads the batch
+        assert take[0].ticket == before[0].ticket
+        assert group_key(before[0].query, lb) == key
+        # prefix rule == zero same-group overtaking: the taken tickets
+        # are exactly the first len(take) same-group tickets
+        same = [e.ticket for e in before if group_key(e.query, lb) == key]
+        assert [e.ticket for e in take] == same[:len(take)]
+        # progress: taken queries actually left the queue
+        assert len(svc._pending) == len(before) - len(take)
+
+
 PACK_BUCKETS = (8, 16, 64)
 
 

@@ -1,0 +1,304 @@
+"""Async continuous-batching serving runtime (DESIGN.md §18): overlapped
+dispatch bit-identity, snapshot version pinning across publish, linger
+late-admission, deadline eviction, EDF admission, in-flight ring bounds."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    EngineConfig,
+    SamplerConfig,
+    SchedulerConfig,
+    ServeConfig,
+    WindowConfig,
+)
+from repro.data.synthetic import chronological_batches, powerlaw_temporal_graph
+from repro.obs.registry import DropCounters, MetricsRegistry
+from repro.serve import WalkQuery, WalkService
+
+NC = 128
+BIASES = ("uniform", "linear", "exponential")
+
+
+def _engine_cfg():
+    return EngineConfig(
+        window=WindowConfig(duration=4000, edge_capacity=4096,
+                            node_capacity=NC),
+        sampler=SamplerConfig(mode="index"),
+        scheduler=SchedulerConfig(path="grouped"))
+
+
+def _serve_cfg(**kw):
+    kw.setdefault("lane_buckets", (8, 16, 64))
+    kw.setdefault("length_buckets", (4, 8))
+    return ServeConfig(**kw)
+
+
+def _stream():
+    g = powerlaw_temporal_graph(100, 3000, seed=11)
+    return list(chronological_batches(g, 3))
+
+
+def _service(batches=None, **serve_kw):
+    svc = WalkService(_engine_cfg(), _serve_cfg(**serve_kw))
+    for bs, bd, bt in (batches if batches is not None else _stream()):
+        svc.ingest(bs, bd, bt)
+    return svc
+
+
+def _queries(n=9, seed0=500):
+    qs = []
+    for i in range(n):
+        if i % 3 == 2:
+            qs.append(WalkQuery(num_walks=2 + i % 3, start_mode="edges",
+                                bias=BIASES[i % 3],
+                                start_bias=BIASES[(i + 1) % 3],
+                                max_length=3 + i % 5, seed=seed0 + i))
+        else:
+            qs.append(WalkQuery(start_nodes=tuple((5 * i + j) % NC
+                                                  for j in range(1 + i % 4)),
+                                bias=BIASES[i % 3], max_length=3 + i % 5,
+                                seed=seed0 + i))
+    return qs
+
+
+def _run_async(svc, queries):
+    """Drive the tick/pump event loop to completion; returns tickets."""
+    tickets = [svc.submit(q, strict=True) for q in queries]
+    spins = 0
+    while svc.pending_count or svc.inflight_count:
+        svc.tick()
+        spins += 1
+        if spins > 10_000:            # tick never blocks; bound the spin
+            svc.pump(block=True)
+    return tickets
+
+
+def test_async_bit_identical_to_synchronous_baseline():
+    """Acceptance: the overlapped tick/pump path returns results
+    bit-identical to the historical blocking step() loop (max_inflight=1,
+    FIFO) over the same window and queries."""
+    batches = _stream()
+    svc_sync = _service(batches, max_inflight=1)
+    svc_async = _service(batches, max_inflight=4)
+    queries = _queries(12)
+
+    t_sync = [svc_sync.submit(q, strict=True) for q in queries]
+    while svc_sync.pending_count:
+        svc_sync.step()
+    t_async = _run_async(svc_async, queries)
+
+    assert svc_async.stats.completed == len(queries)
+    for ts_, ta, q in zip(t_sync, t_async, queries):
+        rs, ra = svc_sync.poll(ts_), svc_async.poll(ta)
+        assert rs is not None and ra is not None
+        assert np.array_equal(rs.nodes, ra.nodes), q
+        assert np.array_equal(rs.times, ra.times), q
+        assert np.array_equal(rs.lengths, ra.lengths), q
+        assert rs.snapshot_version == ra.snapshot_version
+
+
+def test_overlapped_ingest_pins_snapshot_version():
+    """Batches launched before publish() compute against the pinned old
+    window even when the swap lands while they are in flight — results
+    report the pinned version and are bit-identical to a reference
+    service that never saw the new batch."""
+    batches = _stream()
+    svc = _service(batches[:-1], max_inflight=4)
+    ref = _service(batches[:-1])
+    queries = _queries(6, seed0=900)
+
+    svc.begin_ingest(*batches[-1])        # back buffer building
+    v0 = svc.snapshots.version
+    tickets = [svc.submit(q, strict=True) for q in queries]
+    svc.tick()                            # launch against the pinned v0
+    assert svc.inflight_count >= 1
+    svc.publish()                         # swap while batches in flight
+    assert svc.snapshots.version == v0 + 1
+    while svc.pending_count or svc.inflight_count:
+        svc.tick()
+        svc.pump(block=True)
+
+    for t, q in zip(tickets, queries):
+        r = svc.poll(t)
+        assert r is not None
+        assert r.snapshot_version == v0
+        sn, st_, sl = ref.run_query_solo(q)
+        assert np.array_equal(r.nodes, sn), q
+        assert np.array_equal(r.times, st_), q
+        assert np.array_equal(r.lengths, sl), q
+
+
+@pytest.mark.parametrize("edges_mode", [False, True])
+def test_linger_admits_late_queries_bit_identically(edges_mode):
+    """Continuous batching: a partially-filled batch lingers up to
+    linger_s, late same-group arrivals join it, and every admitted query
+    — across all three biases — stays bit-identical to its solo run."""
+    svc = _service(max_inflight=4, linger_s=30.0)
+    if edges_mode:
+        mk = lambda i: WalkQuery(num_walks=2, start_mode="edges",
+                                 bias=BIASES[i], max_length=4, seed=700 + i)
+    else:
+        mk = lambda i: WalkQuery(start_nodes=(10 * i + 1, 10 * i + 2),
+                                 bias=BIASES[i], max_length=4, seed=700 + i)
+    b0 = svc.stats.batches
+
+    tickets = [svc.submit(mk(0), strict=True)]
+    t_head = svc._pending[0].arrival
+    svc.tick(now=t_head + 0.001)          # under the linger deadline
+    assert svc.inflight_count == 0        # batch can grow: keeps lingering
+    tickets.append(svc.submit(mk(1), strict=True))
+    svc.tick(now=t_head + 0.002)
+    assert svc.inflight_count == 0
+    tickets.append(svc.submit(mk(2), strict=True))
+    svc.tick(now=t_head + 31.0)           # linger expired: seal + launch
+    assert svc.inflight_count == 1 and svc.pending_count == 0
+    svc.pump(block=True)
+
+    assert svc.stats.batches == b0 + 1    # ONE coalesced dispatch
+    for t, i in zip(tickets, range(3)):
+        r = svc.poll(t)
+        assert r is not None
+        sn, st_, sl = svc.run_query_solo(mk(i))
+        assert np.array_equal(r.nodes, sn)
+        assert np.array_equal(r.times, st_)
+        assert np.array_equal(r.lengths, sl)
+
+
+def test_linger_seals_when_batch_cannot_grow():
+    """A batch that exactly fills the lane budget (or hits a non-fitting
+    same-group query) seals immediately — lingering longer could not
+    admit anything else."""
+    svc = _service(lane_buckets=(4,), linger_s=30.0)
+    t_ = svc.submit(WalkQuery(start_nodes=(1, 2, 3, 4), max_length=4,
+                              seed=1), strict=True)
+    svc.tick(now=svc._pending[0].arrival + 0.001)
+    assert svc.inflight_count == 1        # full batch: no linger
+    svc.pump(block=True)
+    assert svc.poll(t_) is not None
+
+
+def test_deadline_eviction_accounting():
+    """Queued queries past deadline_s are evicted — counted in stats AND
+    the canonical drop taxonomy — and never complete; deadline-free
+    traffic in the same queue is untouched."""
+    reg = MetricsRegistry()
+    svc = WalkService(_engine_cfg(), _serve_cfg(), registry=reg)
+    g = powerlaw_temporal_graph(100, 500, seed=2)
+    svc.ingest(g.src, g.dst, g.ts)
+    t_dead = svc.submit(WalkQuery(start_nodes=(1,), max_length=4, seed=1,
+                                  deadline_s=1e-4), strict=True)
+    t_live = svc.submit(WalkQuery(start_nodes=(2,), max_length=4, seed=2),
+                        strict=True)
+    time.sleep(0.01)
+    drained = svc.drain()
+    assert svc.stats.dropped_deadline == 1
+    assert DropCounters.from_registry(reg).deadline_expired == 1
+    assert {r.ticket for r in drained} == {t_live}   # the dead one never ran
+    assert svc.poll(t_dead) is None
+    assert svc.stats.completed == 1
+    # a batch already sealed+launched always completes: deadlines gate
+    # admission, not in-flight device work
+    t3 = svc.submit(WalkQuery(start_nodes=(3,), max_length=4, seed=3,
+                              deadline_s=1e-4), strict=True)
+    svc.tick(now=svc._pending[0].arrival)   # launch before expiry
+    time.sleep(0.01)
+    svc.pump(block=True)
+    assert svc.poll(t3) is not None
+    assert svc.stats.dropped_deadline == 1
+
+
+def test_deadline_validation():
+    with pytest.raises(ValueError, match="deadline_s"):
+        WalkQuery(start_nodes=(1,), deadline_s=0.0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        WalkQuery(start_nodes=(1,), deadline_s=-1.0)
+    assert WalkQuery(start_nodes=(1,), deadline_s=0.5).deadline_s == 0.5
+
+
+def test_edf_admission_orders_by_deadline():
+    """admission="edf": the queue is served earliest-deadline-first;
+    deadline-free queries sort last and keep FIFO order among
+    themselves."""
+    svc = _service(admission="edf", lane_buckets=(2,))
+    qs = [WalkQuery(start_nodes=(1, 2), max_length=4, seed=1,
+                    deadline_s=60.0),
+          WalkQuery(start_nodes=(3, 4), max_length=4, seed=2,
+                    deadline_s=5.0),
+          WalkQuery(start_nodes=(5, 6), max_length=4, seed=3),
+          WalkQuery(start_nodes=(7, 8), max_length=4, seed=4)]
+    tickets = [svc.submit(q, strict=True) for q in qs]
+    order = []
+    while svc.pending_count:
+        _, take, _ = svc._take_batch()
+        order.extend(e.ticket for e in take)
+    # earliest deadline first; the two deadline-free stay FIFO at the back
+    assert order == [tickets[1], tickets[0], tickets[2], tickets[3]]
+
+
+def test_inflight_ring_bounded_by_max_inflight():
+    """tick() never launches past the configured ring depth; pump drains
+    it and the remaining queue launches on later ticks."""
+    svc = _service(max_inflight=2, lane_buckets=(2,))
+    qs = [WalkQuery(start_nodes=(2 * i, 2 * i + 1), max_length=4, seed=i)
+          for i in range(6)]
+    tickets = [svc.submit(q, strict=True) for q in qs]
+    svc.tick()
+    assert svc.inflight_count <= 2
+    assert svc.pending_count >= len(qs) - 2
+    while svc.pending_count or svc.inflight_count:
+        assert svc.inflight_count <= 2
+        svc.tick()
+    svc.pump(block=True)
+    assert all(svc.poll(t) is not None for t in tickets)
+
+
+def test_step_harvests_prior_async_launches():
+    """step() is a full sync point: batches launched by earlier tick()
+    calls are harvested before it returns, so mixing the async and
+    synchronous entry points never strands results."""
+    svc = _service(max_inflight=4, lane_buckets=(2,))
+    t1 = svc.submit(WalkQuery(start_nodes=(1, 2), max_length=4, seed=1),
+                    strict=True)
+    svc.tick()
+    assert svc.inflight_count == 1
+    t2 = svc.submit(WalkQuery(start_nodes=(3, 4), max_length=4, seed=2),
+                    strict=True)
+    served = svc.step()
+    assert served == 1
+    assert svc.inflight_count == 0
+    assert svc.poll(t1) is not None and svc.poll(t2) is not None
+    # step() with an empty queue still drains stragglers
+    t3 = svc.submit(WalkQuery(start_nodes=(5, 6), max_length=4, seed=3),
+                    strict=True)
+    svc.tick()
+    assert svc.step() == 0
+    assert svc.poll(t3) is not None
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="max_inflight"):
+        WalkService(_engine_cfg(), _serve_cfg(max_inflight=0))
+    with pytest.raises(ValueError, match="linger_s"):
+        WalkService(_engine_cfg(), _serve_cfg(linger_s=-0.5))
+    with pytest.raises(ValueError, match="admission"):
+        WalkService(_engine_cfg(), _serve_cfg(admission="lifo"))
+
+
+def test_async_drain_scoped_with_inflight():
+    """drain() under the async runtime: it harvests in-flight batches
+    launched before the drain, yet still returns only what IT completed
+    and leaves earlier poll-buffer results alone."""
+    svc = _service(max_inflight=4, lane_buckets=(2,))
+    ta = svc.submit(WalkQuery(start_nodes=(1, 2), max_length=4, seed=1),
+                    strict=True)
+    svc.step()                              # ta already in the poll buffer
+    tb = svc.submit(WalkQuery(start_nodes=(3, 4), max_length=4, seed=2),
+                    strict=True)
+    svc.tick()                              # tb in flight
+    tc = svc.submit(WalkQuery(start_nodes=(5, 6), max_length=4, seed=3),
+                    strict=True)            # tc still queued
+    drained = svc.drain()
+    assert {r.ticket for r in drained} == {tb, tc}
+    assert svc.poll(ta) is not None

@@ -359,7 +359,7 @@ def test_snapshot_consistency_soak():
                 t_now)
 
     version_bounds = {}
-    results = []
+    tickets = []
     pending_ingest = False
     bi = 0
     svc.ingest(*batches[bi]); bi += 1
@@ -386,10 +386,22 @@ def test_snapshot_consistency_soak():
                               bias=BIASES[int(rng.integers(3))],
                               max_length=int(rng.integers(2, 9)),
                               seed=int(rng.integers(1 << 16)))
-            svc.submit(q)
+            t = svc.submit(q)
+            if t is not None:
+                tickets.append(t)
         elif svc.pending_count:
             svc.step()
+    # drain is scoped to the queries it completes; earlier step()
+    # completions stay poll-able (the poll-after-drain contract, here
+    # exercised on the sharded path)
     results = svc.drain()
+    drained = {r.ticket for r in results}
+    for t in tickets:
+        if t not in drained:
+            r = svc.poll(t)
+            assert r is not None, f"ticket {t} lost across drain()"
+            results.append(r)
+    assert len(results) == len(tickets)
 
     assert results
     checked_hops = 0
